@@ -1,0 +1,102 @@
+"""GEMM shapes (im2col) for the paper's three CNNs at 224x224 input.
+
+Each layer is (name, M, K, N): sparse weights A (M=C_out, K=C_in*kh*kw)
+times dense im2col'd features B (K, N=H_out*W_out) — the mapping the paper
+uses (§IV: "convolutions of each layer ... mapped to sparse-dense matrix
+multiplications A x B").
+
+ResNet50 / DenseNet121 dims are generated from the exact published block
+structure; InceptionV3 uses the torchvision module table (representative
+branch convs per module).
+"""
+from __future__ import annotations
+
+
+def resnet50_gemms() -> list[tuple[str, int, int, int]]:
+    layers = [("conv1", 64, 3 * 49, 112 * 112)]
+    stages = [  # (mid, out, blocks, hw)
+        (64, 256, 3, 56), (128, 512, 4, 28), (256, 1024, 6, 14),
+        (512, 2048, 3, 7)]
+    in_ch = 64
+    for si, (mid, out, blocks, hw) in enumerate(stages):
+        n = hw * hw
+        for b in range(blocks):
+            tag = f"s{si+2}b{b+1}"
+            layers.append((f"{tag}_1x1a", mid, in_ch, n))
+            layers.append((f"{tag}_3x3", mid, mid * 9, n))
+            layers.append((f"{tag}_1x1b", out, mid, n))
+            if b == 0:
+                layers.append((f"{tag}_proj", out, in_ch, n))
+            in_ch = out
+    return layers
+
+
+def densenet121_gemms() -> list[tuple[str, int, int, int]]:
+    growth = 32
+    layers = [("conv1", 64, 3 * 49, 112 * 112)]
+    ch = 64
+    hw = 56
+    for bi, nlayers in enumerate([6, 12, 24, 16]):
+        n = hw * hw
+        for li in range(nlayers):
+            tag = f"d{bi+1}l{li+1}"
+            layers.append((f"{tag}_1x1", 4 * growth, ch, n))
+            layers.append((f"{tag}_3x3", growth, 4 * growth * 9, n))
+            ch += growth
+        if bi < 3:  # transition: 1x1 halving channels, then 2x2 pool
+            layers.append((f"t{bi+1}_1x1", ch // 2, ch, n))
+            ch //= 2
+            hw //= 2
+    return layers
+
+
+# torchvision InceptionV3 branch convs: (name, C_out, C_in*kh*kw, H*W)
+def inceptionv3_gemms() -> list[tuple[str, int, int, int]]:
+    L: list[tuple[str, int, int, int]] = []
+
+    def add(name, cout, cin, k, hw):
+        L.append((name, cout, cin * k, hw * hw))
+
+    add("stem1", 32, 3, 9, 149); add("stem2", 32, 32, 9, 147)
+    add("stem3", 64, 32, 9, 147); add("stem4", 80, 64, 1, 73)
+    add("stem5", 192, 80, 9, 71)
+    # 3x InceptionA @35, ch_in 192/256/288
+    for i, cin in enumerate((192, 256, 288)):
+        t = f"A{i+1}"
+        add(t + "_1x1", 64, cin, 1, 35); add(t + "_5x5r", 48, cin, 1, 35)
+        add(t + "_5x5", 64, 48, 25, 35); add(t + "_3x3r", 64, cin, 1, 35)
+        add(t + "_3x3a", 96, 64, 9, 35); add(t + "_3x3b", 96, 96, 9, 35)
+        add(t + "_pool", [32, 64, 64][i], cin, 1, 35)
+    add("B_3x3", 384, 288, 9, 17)  # reduction A
+    add("B_r1", 64, 288, 1, 35); add("B_r2", 96, 64, 9, 35)
+    add("B_r3", 96, 96, 9, 17)
+    # 4x InceptionC @17 (7x1/1x7 factorized), c7 = 128/160/160/192
+    for i, c7 in enumerate((128, 160, 160, 192)):
+        t = f"C{i+1}"
+        add(t + "_1x1", 192, 768, 1, 17)
+        add(t + "_7a", c7, 768, 1, 17); add(t + "_7b", c7, c7, 7, 17)
+        add(t + "_7c", 192, c7, 7, 17)
+        add(t + "_db1", c7, 768, 1, 17); add(t + "_db2", c7, c7, 7, 17)
+        add(t + "_db3", c7, c7, 7, 17); add(t + "_db4", c7, c7, 7, 17)
+        add(t + "_db5", 192, c7, 7, 17)
+        add(t + "_pool", 192, 768, 1, 17)
+    add("D_r1", 192, 768, 1, 17); add("D_3x3", 320, 192, 9, 8)
+    add("D_7a", 192, 768, 1, 17); add("D_7b", 192, 192, 7, 17)
+    add("D_7c", 192, 192, 7, 17); add("D_33", 192, 192, 9, 8)
+    # 2x InceptionE @8
+    for i, cin in enumerate((1280, 2048)):
+        t = f"E{i+1}"
+        add(t + "_1x1", 320, cin, 1, 8)
+        add(t + "_3x3r", 384, cin, 1, 8); add(t + "_3x3a", 384, 384, 3, 8)
+        add(t + "_3x3b", 384, 384, 3, 8)
+        add(t + "_dbr", 448, cin, 1, 8); add(t + "_db1", 384, 448, 9, 8)
+        add(t + "_db2", 384, 384, 3, 8); add(t + "_db3", 384, 384, 3, 8)
+        add(t + "_pool", 192, cin, 1, 8)
+    return L
+
+
+CNNS = {
+    "resnet50": resnet50_gemms,
+    "densenet121": densenet121_gemms,
+    "inceptionv3": inceptionv3_gemms,
+}

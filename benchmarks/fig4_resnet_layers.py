@@ -1,0 +1,60 @@
+"""Paper Fig. 4: per-layer speedup of 'Proposed' (vindexmac, Alg. 3) over
+'Row-Wise-SpMM' (Alg. 2) on ResNet50 layers, 1:4 and 2:4 sparsity.
+
+Paper bands: 1.60-2.15x (1:4), 1.63-1.99x (2:4); speedup decreases toward
+late layers; 2:4 slightly below 1:4.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.cnn_specs import resnet50_gemms
+from repro.core.cost_model import VectorCoreModel
+from repro.core.sparse_matmul import indexmac_spmm, rowwise_spmm
+from repro.core.sparsity import NMConfig, compress_nm, random_nm_matrix
+
+
+def run(verbose: bool = True):
+    model = VectorCoreModel()
+    layers = resnet50_gemms()
+    rows = []
+    for cfg in (NMConfig(1, 4), NMConfig(2, 4)):
+        sp = [model.speedup(m, k, n, cfg) for _, m, k, n in layers]
+        rows.append((cfg.tag, min(sp), sum(sp) / len(sp), max(sp)))
+        if verbose:
+            for (name, m, k, n), s in list(zip(layers, sp))[::6]:
+                print(f"  fig4 {cfg.tag} {name:12s} M{m:4d} K{k:5d} N{n:6d}"
+                      f"  speedup {s:.2f}x")
+    # numeric check: Alg.3 == Alg.2 on a real layer (semantic equivalence)
+    name, m, k, n = layers[8]
+    cfg = NMConfig(2, 4)
+    a = random_nm_matrix(jax.random.PRNGKey(0), (32, k - k % 16), cfg, axis=1)
+    vals, idx = compress_nm(a, cfg, axis=1)
+    b = jax.random.normal(jax.random.PRNGKey(1), (a.shape[1], 64))
+    t0 = time.perf_counter()
+    c2 = rowwise_spmm(vals, idx, b, cfg).block_until_ready()
+    t_alg2 = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    c3 = indexmac_spmm(vals, idx, b, cfg).block_until_ready()
+    t_alg3 = time.perf_counter() - t0
+    err = float(jnp.abs(c2 - c3).max())
+    assert err < 1e-3, err
+    return rows, (t_alg2 * 1e6, t_alg3 * 1e6)
+
+
+def main():
+    rows, (us2, us3) = run()
+    out = []
+    for tag, lo, avg, hi in rows:
+        print(f"fig4 resnet50 {tag}: speedup {lo:.2f}-{hi:.2f}x "
+              f"(avg {avg:.2f}x)")
+        out.append((f"fig4_resnet50_{tag}", us3, f"speedup_avg={avg:.3f};"
+                    f"range={lo:.2f}-{hi:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Fig. 5: total-execution speedup per CNN.
+
+Paper: avg 1.95x @1:4 and 1.88x @2:4 across ResNet50 / DenseNet121 /
+InceptionV3 (each normalized to Row-Wise-SpMM of the same sparsity).
+"""
+from __future__ import annotations
+
+from benchmarks.cnn_specs import CNNS
+from repro.core.cost_model import VectorCoreModel
+from repro.core.sparsity import NMConfig
+
+
+def run():
+    model = VectorCoreModel()
+    results = {}
+    for cnn, fn in CNNS.items():
+        layers = fn()
+        for cfg in (NMConfig(1, 4), NMConfig(2, 4)):
+            base = sum(model.cycles_rowwise(m, k, n, cfg)
+                       for _, m, k, n in layers)
+            prop = sum(model.cycles_indexmac(m, k, n, cfg)
+                       for _, m, k, n in layers)
+            results[(cnn, cfg.tag)] = base / prop
+    return results
+
+
+def main():
+    res = run()
+    out = []
+    for tag in ("1:4", "2:4"):
+        sps = [res[(c, tag)] for c in CNNS]
+        avg = sum(sps) / len(sps)
+        for c in CNNS:
+            print(f"fig5 {c:12s} {tag}: {res[(c, tag)]:.2f}x")
+        print(f"fig5 average {tag}: {avg:.2f}x "
+              f"(paper: {'1.95' if tag == '1:4' else '1.88'}x)")
+        out.append((f"fig5_avg_{tag}", 0.0, f"speedup={avg:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Benchmark harness: one entry per paper table/figure + beyond-paper TPU
+kernel roofline. Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (  # noqa: PLC0415
+        fig4_resnet_layers,
+        fig5_cnn_totals,
+        fig6_memory_traffic,
+        tpu_kernel_roofline,
+    )
+
+    rows = []
+    for mod in (fig4_resnet_layers, fig5_cnn_totals, fig6_memory_traffic,
+                tpu_kernel_roofline):
+        t0 = time.perf_counter()
+        out = mod.main()
+        dt = (time.perf_counter() - t0) * 1e6
+        for name, us, derived in out:
+            rows.append((name, us if us else dt, derived))
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

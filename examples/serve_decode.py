@@ -1,0 +1,36 @@
+"""Serve a small sparse model with batched requests through the
+continuous-batching engine (prefill + per-slot decode).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models.transformer import LM
+from repro.serving.engine import Request, ServeEngine
+
+cfg = get_reduced("deepseek-v2-lite-16b")  # MLA + MoE, 2:4-compressed
+lm = LM(cfg)
+params = lm.init(jax.random.PRNGKey(0))
+
+eng = ServeEngine(lm, params, slots=4, max_seq=96, prefill_len=16,
+                  temperature=0.0)
+rng = np.random.default_rng(0)
+t0 = time.time()
+for i in range(10):
+    eng.submit(Request(
+        rid=i,
+        prompt=rng.integers(0, cfg.vocab_size, size=16).astype(np.int32),
+        max_new=8 + (i % 4)))
+done = eng.run()
+dt = time.time() - t0
+tokens = sum(len(r.out) for r in done)
+assert len(done) == 10 and all(len(r.out) == r.max_new for r in done)
+print(f"served {len(done)} requests / {tokens} tokens in {dt:.1f}s "
+      f"({tokens/dt:.1f} tok/s on CPU, 4 slots, MLA cache + MoE experts)")
+for r in done[:3]:
+    print(f"  rid={r.rid}: {r.out}")
+print("serve_decode OK")

@@ -1,0 +1,80 @@
+"""End-to-end driver: train a ~100M-param 2:4-sparse LM for a few hundred
+steps on the synthetic pipeline, with checkpointing and fault-tolerant
+resume, and verify the loss drops.
+
+Run:  PYTHONPATH=src python examples/train_sparse_lm.py [--steps 300]
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (
+    AttnConfig, Block, FFNConfig, ModelConfig, SparsityConfig,
+)
+from repro.core.sparsity import NMConfig
+from repro.data.pipeline import DataPipeline, PipelineConfig
+from repro.models.transformer import LM
+from repro.optim.optimizer import AdamWConfig, adamw_init
+from repro.training.checkpoint import Checkpointer
+from repro.training.fault_tolerance import run_resilient
+from repro.training.train_loop import TrainConfig, make_train_step
+
+
+def model_100m(sparse=True) -> ModelConfig:
+    """~100M params (dense-equivalent): 10L, d=768, untied 32k vocab."""
+    attn = AttnConfig(q_heads=12, kv_heads=4, head_dim=64)
+    return ModelConfig(
+        name="sparse-lm-100m", vocab_size=32_768, d_model=768,
+        plan=((Block(attn, FFNConfig(d_ff=3072)), 10),), max_seq=512,
+        sparsity=SparsityConfig(nm=NMConfig(2, 4), mode="compressed")
+        if sparse else None)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    lm = LM(cfg)
+    from repro.models.transformer import count_params
+    print(f"model: {count_params(cfg)/1e6:.1f}M float params "
+          f"({cfg.sparsity.tag})")
+
+    tcfg = TrainConfig(opt=AdamWConfig(lr=1e-3, warmup_steps=30,
+                                       total_steps=args.steps),
+                       microbatches=2, remat="none")
+    raw_step = jax.jit(make_train_step(lm, tcfg))
+
+    def init_state():
+        params = lm.init(jax.random.PRNGKey(0))
+        return {"params": params, "opt": adamw_init(params)}
+
+    losses = []
+
+    def train_step(state, batch):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        p, o, m = raw_step(state["params"], state["opt"], b)
+        losses.append(float(m["loss"]))
+        return {"params": p, "opt": o}, m
+
+    pipe = DataPipeline(PipelineConfig(vocab_size=cfg.vocab_size,
+                                       seq_len=args.seq,
+                                       global_batch=args.batch))
+    with tempfile.TemporaryDirectory() as d:
+        res = run_resilient(train_step=train_step, init_state=init_state,
+                            pipeline=pipe, ckpt=Checkpointer(d),
+                            total_steps=args.steps, ckpt_every=100)
+    first, last = np.mean(losses[:20]), np.mean(losses[-20:])
+    print(f"steps={res['steps_run']} loss {first:.3f} -> {last:.3f}")
+    assert last < first - 0.5, "training did not converge"
+    print("train_sparse_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Config dataclasses for models, sparsity and shapes.
+
+Everything is a frozen dataclass built from tuples so configs are hashable
+and usable as static jit arguments. A model is described by a *plan*: an
+ordered tuple of (Block, repeat) groups; groups with repeat > 1 are
+executed with lax.scan over stacked parameters (bounded compile time at
+depth — essential for the 512-device dry-run and for 1000+ node scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+from repro.core.sparsity import NMConfig
+
+# ---------------------------------------------------------------------------
+# sparsity integration (the paper's technique as a framework feature)
+# ---------------------------------------------------------------------------
+
+SparseMode = Literal["masked", "compressed"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Apply N:M structured sparsity to weight GEMMs.
+
+    mode:
+      masked      — dense storage; N:M mask applied in the forward pass
+                    (the paper's prune->fine-tune training flow, STE grads)
+      compressed  — (values, int8 idx) storage; forward dispatches to the
+                    indexmac kernel / its XLA reference (serving + dry-run)
+    targets: which projection families are sparsified.
+    use_kernel: dispatch to the Pallas kernel when shapes allow.
+    """
+
+    nm: NMConfig = NMConfig(2, 4)
+    mode: SparseMode = "compressed"
+    targets: tuple[str, ...] = ("ffn", "attn_proj", "expert")
+    use_kernel: bool = False  # pure-XLA path by default (dry-run friendly)
+
+    @property
+    def tag(self) -> str:
+        return f"{self.nm.tag}-{self.mode}"
+
+
+# ---------------------------------------------------------------------------
+# mixer configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    kind: Literal["gqa", "mla"] = "gqa"
+    q_heads: int = 8
+    kv_heads: int = 8
+    head_dim: int = 128
+    rope: bool = True
+    window: Optional[int] = None  # sliding-window size (local attention)
+    causal: bool = True
+    # MLA (DeepSeek-V2) fields
+    kv_lora_rank: int = 512
+    q_lora_rank: Optional[int] = None
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+    logit_softcap: Optional[float] = None
+    qk_norm: bool = False
+    rope_theta: Optional[float] = None  # overrides ModelConfig.rope_theta
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64
+    mix_lora: int = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class FFNConfig:
+    d_ff: int = 4096
+    act: Literal["swiglu", "gelu", "relu_sq"] = "swiglu"
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 64
+    top_k: int = 6
+    d_expert: int = 1408  # per-expert FFN hidden
+    n_shared: int = 2  # always-on shared experts (DeepSeek-V2)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+    act: Literal["swiglu", "gelu"] = "swiglu"
+
+
+Mixer = AttnConfig | MambaConfig | RWKVConfig
+MLP = FFNConfig | MoEConfig | None
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    mixer: Mixer
+    mlp: MLP
+    cross_attn: bool = False  # enc-dec decoder blocks (whisper)
+
+
+# ---------------------------------------------------------------------------
+# model config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    d_model: int
+    plan: tuple[tuple[Block, int], ...]  # decoder / backbone
+    max_seq: int = 8192
+    rope_theta: float = 10_000.0
+    pos_embed: Literal["rope", "learned", "none"] = "rope"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    logit_softcap: Optional[float] = None
+    sparsity: Optional[SparsityConfig] = None
+    # enc-dec (whisper): encoder stack + cross-attention in decoder blocks
+    encoder_plan: Optional[tuple[tuple[Block, int], ...]] = None
+    encoder_inputs: Literal["tokens", "embeddings"] = "tokens"
+    encoder_seq: int = 1500
+    # attention chunking for memory-bounded prefill (flash-style scan)
+    attn_chunk: int = 512
+    # metadata
+    family: str = "dense"  # dense|moe|ssm|hybrid|vlm|audio
+
+    @property
+    def n_layers(self) -> int:
+        return sum((len(e) if isinstance(e, tuple) else 1) * r
+                   for e, r in self.plan)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init; used for MODEL_FLOPS)."""
+        from repro.models.transformer import count_params  # lazy, no cycle
+
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.transformer import count_params
+
+        return count_params(self, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# input shapes (assigned shape set)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

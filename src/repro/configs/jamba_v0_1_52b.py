@@ -1,0 +1,59 @@
+"""jamba-v0.1-52b [hybrid] — Mamba+attention 1:7, MoE [arXiv:2403.19887].
+
+32L d_model=4096, attn at layer i%8==4 (32H GQA kv=8), mamba elsewhere
+(d_state=16, conv=4, expand=2, dt_rank=256); MoE (16 experts top-2,
+d_expert=14336, no shared) on odd layers, dense FFN (14336) on even.
+Plan: one 8-layer period scanned 4x. No positional embedding (hybrid
+recurrence carries position). vocab=65536. Hybrid -> long_500k runner.
+"""
+from repro.configs.base import (
+    AttnConfig,
+    Block,
+    FFNConfig,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+)
+
+
+def _period(q, kv, hd, ff, n_exp, top_k, d_expert, d_state, dt_rank):
+    attn = AttnConfig(q_heads=q, kv_heads=kv, head_dim=hd, rope=False)
+    mam = MambaConfig(d_state=d_state, d_conv=4, expand=2, dt_rank=dt_rank)
+    ffn = FFNConfig(d_ff=ff, act="swiglu")
+    moe = MoEConfig(n_experts=n_exp, top_k=top_k, d_expert=d_expert,
+                    n_shared=0)
+    # layer i in period: attn iff i == 4; moe iff i odd
+    return tuple(
+        Block(attn if i == 4 else mam, moe if i % 2 == 1 else ffn)
+        for i in range(8)
+    )
+
+
+def config(sparse: bool = True) -> ModelConfig:
+    from repro.configs import sparsity_or_none
+
+    return ModelConfig(
+        name="jamba-v0.1-52b",
+        vocab_size=65_536,
+        d_model=4_096,
+        plan=((_period(32, 8, 128, 14_336, 16, 2, 14_336, 16, 256), 4),),
+        max_seq=1_048_576,
+        pos_embed="none",
+        sparsity=sparsity_or_none(sparse),
+        family="hybrid",
+    )
+
+
+def reduced(sparse: bool = True) -> ModelConfig:
+    from repro.configs import sparsity_or_none
+
+    return ModelConfig(
+        name="jamba-v0.1-52b-reduced",
+        vocab_size=512,
+        d_model=128,
+        plan=((_period(4, 2, 16, 256, 4, 2, 256, 8, 16), 1),),
+        max_seq=128,
+        pos_embed="none",
+        sparsity=sparsity_or_none(sparse),
+        family="hybrid",
+    )

@@ -1,0 +1,57 @@
+"""whisper-medium [audio] — enc-dec [arXiv:2212.04356].
+
+24L enc + 24L dec, d_model=1024 16H (kv=16) d_ff=4096 vocab=51865.
+The conv frontend is a STUB per task spec: input_specs provides
+precomputed frame embeddings (B, 1500, 1024). Deviations noted:
+LayerNorm -> RMSNorm (framework-uniform), sinusoidal enc pos -> learned.
+"""
+from repro.configs.base import AttnConfig, Block, FFNConfig, ModelConfig
+
+
+def _plans(layers, q, kv, hd, ff):
+    dec_attn = AttnConfig(q_heads=q, kv_heads=kv, head_dim=hd, rope=False,
+                          causal=True)
+    enc_attn = AttnConfig(q_heads=q, kv_heads=kv, head_dim=hd, rope=False,
+                          causal=False)
+    ffn = FFNConfig(d_ff=ff, act="gelu")
+    dec = ((Block(dec_attn, ffn, cross_attn=True), layers),)
+    enc = ((Block(enc_attn, ffn), layers),)
+    return dec, enc
+
+
+def config(sparse: bool = True) -> ModelConfig:
+    from repro.configs import sparsity_or_none
+
+    dec, enc = _plans(24, 16, 16, 64, 4_096)
+    return ModelConfig(
+        name="whisper-medium",
+        vocab_size=51_865,
+        d_model=1_024,
+        plan=dec,
+        encoder_plan=enc,
+        encoder_inputs="embeddings",
+        encoder_seq=1_500,
+        pos_embed="learned",
+        max_seq=32_768,  # decoder positions extended for the assigned shapes
+        sparsity=sparsity_or_none(sparse),
+        family="audio",
+    )
+
+
+def reduced(sparse: bool = True) -> ModelConfig:
+    from repro.configs import sparsity_or_none
+
+    dec, enc = _plans(2, 4, 4, 16, 256)
+    return ModelConfig(
+        name="whisper-medium-reduced",
+        vocab_size=512,
+        d_model=64,
+        plan=dec,
+        encoder_plan=enc,
+        encoder_inputs="embeddings",
+        encoder_seq=24,
+        pos_embed="learned",
+        max_seq=128,
+        sparsity=sparsity_or_none(sparse),
+        family="audio",
+    )

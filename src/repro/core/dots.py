@@ -1,0 +1,37 @@
+"""Mixed-precision dot policy shared by models and kernels.
+
+TPU-native form: low-precision operands with f32 accumulation
+(preferred_element_type) — the MXU accumulates in f32 natively and no
+f32 operand copies are materialized. The CPU *runtime* rejects mixed dots
+at dispatch, so CPU execution falls back to f32 operand casts.
+
+REPRO_MIXED_PRECISION_DOTS=1 forces the TPU form — set by the dry-run,
+which lowers on the CPU backend but never executes.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def mixed_dots() -> bool:
+    env = os.environ.get("REPRO_MIXED_PRECISION_DOTS")
+    if env is not None:
+        return env == "1"
+    return jax.default_backend() != "cpu"
+
+
+def acc_einsum(subs: str, a: jax.Array, b: jax.Array) -> jax.Array:
+    """einsum with f32 accumulation; operand dtype per mixed_dots()."""
+    if mixed_dots():
+        return jnp.einsum(subs, a, b, preferred_element_type=jnp.float32)
+    return jnp.einsum(subs, a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def acc_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    if mixed_dots():
+        return jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)

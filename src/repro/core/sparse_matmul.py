@@ -1,0 +1,165 @@
+"""Algorithm-level references for the paper's three matmul formulations.
+
+These are *semantic* models (pure jnp, vectorized) of the paper's
+Algorithms 1-3. They are the ground truth for the Pallas kernels and the
+operand-traffic accounting used by the benchmarks. All three compute the
+same C = A @ B; they differ in which operand representation they touch and
+how often, which is exactly what the paper's evaluation measures.
+
+Orientation follows the paper: A is the (structured-sparse) left operand,
+compressed along its rows (the contraction dim); B is dense.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import NMConfig, compress_nm, decompress_nm
+
+__all__ = [
+    "rowwise_dense_matmul",
+    "rowwise_spmm",
+    "indexmac_spmm",
+    "TrafficReport",
+    "rowwise_spmm_traffic",
+    "indexmac_traffic",
+]
+
+
+def rowwise_dense_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Algorithm 1 (dense row-wise): C[i,:] = sum_k A[i,k] * B[k,:]."""
+    return jnp.einsum("ik,kn->in", a, b)
+
+
+def rowwise_spmm(
+    values: jax.Array, col_idx: jax.Array, b: jax.Array, cfg: NMConfig
+) -> jax.Array:
+    """Algorithm 2: row-wise sparse-dense matmul from the compressed form.
+
+    values/col_idx: (rows, K*n/m) as produced by compress_nm(axis=1).
+    The *global* row of B addressed by nonzero j of block bl is
+    bl*m + col_idx — the paper materializes this by adding B's base address
+    (its line 5); here we materialize the global index and gather rows of B
+    (the per-nonzero "vload B[row,:]" of line 8).
+    """
+    rows, knm = values.shape
+    nblocks = knm // cfg.n
+    block_base = (
+        jnp.repeat(jnp.arange(nblocks, dtype=jnp.int32), cfg.n) * cfg.m
+    )  # (knm,)
+    gidx = col_idx.astype(jnp.int32) + block_base[None, :]  # (rows, knm)
+    # Gather the addressed rows of B: (rows, knm, N_cols) -- the memory
+    # traffic Algorithm 2 pays per nonzero.
+    b_rows = b[gidx]  # vload per nonzero
+    return jnp.einsum("rj,rjn->rn", values.astype(b.dtype), b_rows)
+
+
+def indexmac_spmm(
+    values: jax.Array,
+    col_idx: jax.Array,
+    b: jax.Array,
+    cfg: NMConfig,
+    l_rows: int = 16,
+) -> jax.Array:
+    """Algorithm 3 semantics: B is pre-loaded tile-by-tile (L rows at a
+    time) and the bounded indices select rows *from the tile* (the
+    vindexmac indirect register read). Numerically identical to Alg. 2;
+    structured as a loop over stationary tiles of B to model the dataflow.
+
+    l_rows must be a multiple of m (paper §III).
+    """
+    if l_rows % cfg.m != 0:
+        raise ValueError("L must be a multiple of M")
+    k = b.shape[0]
+    if k % l_rows != 0:
+        raise ValueError(f"K={k} not divisible by L={l_rows}")
+    rows = values.shape[0]
+    blocks_per_tile = l_rows // cfg.m
+    nz_per_tile = blocks_per_tile * cfg.n
+    ntiles = k // l_rows
+
+    vt = values.reshape(rows, ntiles, nz_per_tile)
+    it = col_idx.reshape(rows, ntiles, nz_per_tile).astype(jnp.int32)
+    # index *within the stationary tile*: block-within-tile * m + col_idx
+    block_in_tile = (
+        jnp.repeat(jnp.arange(blocks_per_tile, dtype=jnp.int32), cfg.n) * cfg.m
+    )
+    tile_idx = it + block_in_tile[None, None, :]  # in [0, l_rows)
+    bt = b.reshape(ntiles, l_rows, -1)
+
+    def per_tile(t, c):
+        # vrf[tile_idx] — indirect read of the stationary tile, no B memory
+        # traffic. one_hot keeps it gather-free (bounded index → select).
+        sel = jax.nn.one_hot(tile_idx[:, t], l_rows, dtype=bt.dtype)
+        c = c + jnp.einsum(
+            "rj,rjl,ln->rn", vt[:, t].astype(bt.dtype), sel, bt[t]
+        )
+        return c
+
+    c0 = jnp.zeros((rows, b.shape[1]), dtype=jnp.promote_types(values.dtype, b.dtype))
+    c = jax.lax.fori_loop(0, ntiles, lambda t, c: per_tile(t, c), c0)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Operand-traffic accounting (paper Fig. 6 reproduction). Counts *vector
+# memory accesses* the way the paper's gem5 runs do: one access per
+# vector-register-width load/store. elem_bytes and vector bytes cancel in
+# the reported ratios, so we count in units of vector-length rows.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficReport:
+    loads_a: float  # values + col_idx vector loads
+    loads_b: float
+    loads_c: float
+    stores_c: float
+
+    @property
+    def total(self) -> float:
+        return self.loads_a + self.loads_b + self.loads_c + self.stores_c
+
+
+def _common(rows_a: int, k: int, n_cols: int, cfg: NMConfig, vlen: int):
+    nnz_row = k * cfg.n // cfg.m  # non-zeros per row of A
+    a_vec_loads = 2 * -(-nnz_row // vlen)  # values + col_idx per row of A
+    c_tiles = -(-n_cols // vlen)  # vector tiles per row of C
+    return nnz_row, a_vec_loads, c_tiles
+
+
+def rowwise_spmm_traffic(
+    rows_a: int, k: int, n_cols: int, cfg: NMConfig, vlen: int = 16
+) -> TrafficReport:
+    """Algorithm 2, B-stationary over column tiles (paper's best baseline
+    dataflow): for each column-tile of B/C, every row of A re-streams its
+    values/idx and issues one vector load of B per nonzero; C row loaded
+    once and stored once per tile."""
+    nnz_row, a_vec_loads, c_tiles = _common(rows_a, k, n_cols, cfg, vlen)
+    loads_a = rows_a * a_vec_loads * c_tiles
+    loads_b = rows_a * nnz_row * c_tiles  # one vload B[row,:] per nonzero
+    loads_c = 0.0  # accumulate in regs within a tile pass
+    stores_c = rows_a * c_tiles
+    return TrafficReport(loads_a, loads_b, loads_c, stores_c)
+
+
+def indexmac_traffic(
+    rows_a: int,
+    k: int,
+    n_cols: int,
+    cfg: NMConfig,
+    vlen: int = 16,
+    l_rows: int = 16,
+) -> TrafficReport:
+    """Algorithm 3: B loaded exactly once (tile pre-loads); C reloaded and
+    re-stored once per (row, B-tile) because the accumulator register is
+    repurposed across stationary tiles (paper lines 8/15)."""
+    nnz_row, a_vec_loads, c_tiles = _common(rows_a, k, n_cols, cfg, vlen)
+    ntiles_b = -(-k // l_rows)
+    loads_b = ntiles_b * l_rows * c_tiles  # each row of B loaded once/tile-col
+    loads_a = rows_a * a_vec_loads * c_tiles  # same A streaming as Alg.2
+    loads_c = rows_a * c_tiles * ntiles_b
+    stores_c = rows_a * c_tiles * ntiles_b
+    return TrafficReport(loads_a, loads_b, loads_c, stores_c)

@@ -1,0 +1,164 @@
+"""N:M structured sparsity primitives.
+
+The paper's data format (Fig. 1b): within every block of M consecutive
+elements along a row of the sparse matrix A, at most N are non-zero. The
+compressed representation stores, per block, exactly N ``values`` and N
+``col_idx`` entries (zero-padded when fewer than N non-zeros exist). The
+indices are *bounded*: ``col_idx in [0, M)`` relative to the block — the
+property that makes register-file (here: VMEM) residency of the dense
+operand possible.
+
+Orientation note: the paper compresses A along its rows (the contraction
+dimension k of C = A @ B). For transformer weights we use y = x @ W with W
+sparse along K (its rows), i.e. per *output column* of W each K-block of M
+holds at most N non-zeros. ``axis`` selects the compressed axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "NMConfig",
+    "prune_mask_nm",
+    "apply_mask",
+    "compress_nm",
+    "decompress_nm",
+    "check_nm_pattern",
+    "random_nm_matrix",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class NMConfig:
+    """N:M structured sparsity configuration.
+
+    n: max non-zeros per block.
+    m: block size (consecutive elements along the compressed axis).
+    """
+
+    n: int = 2
+    m: int = 4
+
+    def __post_init__(self):
+        if not (1 <= self.n < self.m):
+            raise ValueError(f"need 1 <= n < m, got {self.n}:{self.m}")
+
+    @property
+    def density(self) -> float:
+        return self.n / self.m
+
+    @property
+    def tag(self) -> str:
+        return f"{self.n}:{self.m}"
+
+    # Compressed-bytes ratio vs dense, for a given value dtype (+1B int8 idx).
+    def byte_ratio(self, value_bytes: int = 2) -> float:
+        return (self.n * (value_bytes + 1)) / (self.m * value_bytes)
+
+
+def _move_axis_last(x: jax.Array, axis: int) -> jax.Array:
+    return jnp.moveaxis(x, axis, -1)
+
+
+def prune_mask_nm(w: jax.Array, cfg: NMConfig, axis: int = 0) -> jax.Array:
+    """Magnitude-based N:M mask: keep the top-``n`` |w| in every ``m``-block.
+
+    Returns a boolean mask with w's shape. Deterministic (ties broken by
+    position via stable argsort on (-|w|, position)).
+    """
+    if w.shape[axis] % cfg.m != 0:
+        raise ValueError(
+            f"axis {axis} size {w.shape[axis]} not divisible by M={cfg.m}"
+        )
+    wl = _move_axis_last(w, axis)
+    blocks = wl.reshape(*wl.shape[:-1], wl.shape[-1] // cfg.m, cfg.m)
+    # rank within each block by |value| descending; keep rank < n
+    order = jnp.argsort(-jnp.abs(blocks), axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    mask = ranks < cfg.n
+    mask = mask.reshape(*wl.shape[:-1], wl.shape[-1])
+    return jnp.moveaxis(mask, -1, axis)
+
+
+def apply_mask(w: jax.Array, mask: jax.Array) -> jax.Array:
+    return jnp.where(mask, w, jnp.zeros_like(w))
+
+
+def compress_nm(w: jax.Array, cfg: NMConfig, axis: int = 0):
+    """Compress an (already N:M-sparse) matrix.
+
+    Returns (values, idx):
+      values: same dtype as w, shape = w.shape with ``axis`` shrunk by n/m.
+      idx:    int8, same shape as values, entries in [0, m).
+
+    Within each block the kept entries are ordered by ascending position
+    (paper Fig. 1b stores them left-to-right). Blocks with fewer than n
+    non-zeros are padded with value 0 / idx of the last kept position (a
+    zero value makes the index a don't-care).
+    """
+    if w.shape[axis] % cfg.m != 0:
+        raise ValueError(
+            f"axis {axis} size {w.shape[axis]} not divisible by M={cfg.m}"
+        )
+    wl = _move_axis_last(w, axis)
+    lead = wl.shape[:-1]
+    blocks = wl.reshape(*lead, wl.shape[-1] // cfg.m, cfg.m)
+    nz = blocks != 0
+    # Order: non-zeros first (by position), then zeros. Stable sort on key:
+    # key = position + m * (is_zero) keeps ascending-position among non-zeros.
+    pos = jnp.arange(cfg.m, dtype=jnp.int32)
+    key = jnp.where(nz, pos, pos + cfg.m)
+    order = jnp.argsort(key, axis=-1, stable=True)  # (..., blocks, m)
+    take = order[..., : cfg.n]  # first n slots
+    values = jnp.take_along_axis(blocks, take, axis=-1)
+    idx = take.astype(jnp.int8)
+    values = values.reshape(*lead, -1)
+    idx = idx.reshape(*lead, -1)
+    return jnp.moveaxis(values, -1, axis), jnp.moveaxis(idx, -1, axis)
+
+
+def decompress_nm(
+    values: jax.Array, idx: jax.Array, cfg: NMConfig, axis: int = 0
+) -> jax.Array:
+    """Inverse of :func:`compress_nm` (zero-padded positions stay zero)."""
+    vl = _move_axis_last(values, axis)
+    il = _move_axis_last(idx, axis)
+    lead = vl.shape[:-1]
+    nblocks = vl.shape[-1] // cfg.n
+    v = vl.reshape(*lead, nblocks, cfg.n)
+    i = il.reshape(*lead, nblocks, cfg.n).astype(jnp.int32)
+    # one-hot expand: out[..., b, j] = sum_n v[..., b, n] * (i[..., b, n]==j)
+    onehot = jax.nn.one_hot(i, cfg.m, dtype=v.dtype)  # (..., b, n, m)
+    dense = jnp.einsum("...bn,...bnm->...bm", v, onehot)
+    dense = dense.reshape(*lead, nblocks * cfg.m)
+    return jnp.moveaxis(dense, -1, axis)
+
+
+def check_nm_pattern(w: jax.Array | np.ndarray, cfg: NMConfig, axis: int = 0) -> bool:
+    """True iff every M-block along ``axis`` has at most N non-zeros."""
+    w = np.asarray(w)
+    wl = np.moveaxis(w, axis, -1)
+    blocks = wl.reshape(*wl.shape[:-1], wl.shape[-1] // cfg.m, cfg.m)
+    return bool(((blocks != 0).sum(-1) <= cfg.n).all())
+
+
+def random_nm_matrix(
+    key: jax.Array,
+    shape: Sequence[int],
+    cfg: NMConfig,
+    axis: int = 0,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """Random dense-valued matrix that satisfies the N:M pattern exactly
+    (every block has exactly N non-zeros) — used by tests and benchmarks."""
+    k1, _ = jax.random.split(key)
+    w = jax.random.normal(k1, tuple(shape), dtype=jnp.float32)
+    # Avoid exact zeros so "exactly N per block" holds post-masking.
+    w = jnp.where(w == 0, 1e-3, w)
+    mask = prune_mask_nm(w, cfg, axis=axis)
+    return apply_mask(w, mask).astype(dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.indexmac.ops import nm_matmul  # noqa: F401

@@ -1,0 +1,104 @@
+"""Public op for the indexmac kernel: `nm_matmul`.
+
+Dispatches to the Pallas kernel (interpret=True on CPU so the kernel body
+is validated here; compiled Mosaic on real TPUs) or the jnp reference, and
+defines the training backward:
+
+  y     = x @ W,           W = decompress(vals, idx)
+  dx    = dy @ W^T
+  dvals = gather_{kept positions}(x^T @ dy)     (straight-through on idx)
+
+The backward keeps the compressed representation closed under training
+(compressed fine-tuning); the paper's prune->retrain flow additionally uses
+masked-dense training in `repro/training`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import NMConfig, decompress_nm
+from repro.kernels.indexmac.kernel import nm_spmm_pallas
+from repro.kernels.indexmac.ref import nm_matmul_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5)
+)
+def nm_matmul(
+    x: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    cfg: NMConfig,
+    use_kernel: bool = True,
+    block: tuple[int, int, int] = (256, 256, 2048),
+) -> jax.Array:
+    """y = x @ decompress(vals, idx); x: (..., K), vals/idx: (Kc, N)."""
+    return _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block)
+
+
+def _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block):
+    import os
+
+    if os.environ.get("REPRO_GATHER_COMPRESSED") == "1":
+        # Pin the compressed operands to (None, "model") so the FSDP
+        # all-gather over "data" moves the COMPRESSED bytes (vals+idx,
+        # 0.375-0.75x dense) and decompression runs shard-locally — without
+        # this, SPMD may decompress on the home shards and gather the
+        # dense W (EXPERIMENTS.md §Perf P3).
+        from repro.parallel.hints import shard_hint
+
+        vals = shard_hint(vals, None, "model")
+        idx = shard_hint(idx, None, "model")
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    mm = x2.shape[0]
+    bm, bn, bk = block
+    nn = vals.shape[1]
+    divisible = (
+        mm % min(bm, mm) == 0
+        and nn % min(bn, nn) == 0
+        and k % min(bk, k) == 0
+        and min(bk, k) % cfg.m == 0
+        and (vals.shape[0] * cfg.m) % cfg.n == 0
+    )
+    if use_kernel and divisible and mm >= 8:
+        y2 = nm_spmm_pallas(
+            x2, vals, idx, cfg=cfg,
+            block_m=min(bm, mm), block_n=min(bn, nn), block_k=min(bk, k),
+            interpret=_on_cpu(),
+        )
+    else:
+        y2 = nm_matmul_ref(x2, vals, idx, cfg)
+    return y2.reshape(*lead, nn)
+
+
+def _fwd(x, vals, idx, cfg, use_kernel, block):
+    y = _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block)
+    return y, (x, vals, idx)
+
+
+def _bwd(cfg, use_kernel, block, res, dy):
+    x, vals, idx = res
+    w = decompress_nm(vals, idx, cfg, axis=0)  # (K, N)
+    dy32 = dy.astype(jnp.float32)
+    dx = jnp.einsum("...n,kn->...k", dy32, w.astype(jnp.float32)).astype(x.dtype)
+    dw = jnp.einsum(
+        "...k,...n->kn", x.astype(jnp.float32), dy32
+    )  # dense (K, N) grad
+    # gather kept positions: dvals[r, c] = dw[(r//n)*m + idx[r, c], c]
+    kc, nn = vals.shape
+    block_id = jnp.arange(kc, dtype=jnp.int32) // cfg.n  # (Kc,)
+    grow = block_id[:, None] * cfg.m + idx.astype(jnp.int32)  # (Kc, N)
+    dvals = jnp.take_along_axis(dw, grow, axis=0).astype(vals.dtype)
+    return dx, dvals, jnp.zeros_like(idx)
+
+
+nm_matmul.defvjp(_fwd, _bwd)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the indexmac N:M sparse matmul kernel.
+
+Computes y = x @ W where W is stored compressed along K:
+  vals: (K*n/m, N) same dtype family as x
+  idx:  (K*n/m, N) int8, entries in [0, m)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import NMConfig, decompress_nm
+
+
+def nm_matmul_ref(
+    x: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    cfg: NMConfig,
+    out_dtype=None,
+) -> jax.Array:
+    """Decompress W (in the stored dtype — upcasting here would double the
+    weight bytes crossing HBM/ICI) and matmul with f32 accumulation."""
+    from repro.core.dots import acc_dot
+
+    w = decompress_nm(vals, idx, cfg, axis=0)  # (K, N), vals dtype
+    y = acc_dot(x, w)
+    return y.astype(out_dtype or x.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.indexmac_gather.ops import indexmac_gather_spmm  # noqa: F401

@@ -1,0 +1,102 @@
+"""Literal port of the paper's Algorithm 3 / vindexmac to Pallas.
+
+C[Mr, Nc] = A_sparse[Mr, K] @ B[K, Nc], paper orientation (A sparse along
+its rows). Per nonzero:  C[i, :] += vals[i, j] * B_vmem[(j//n)*m + idx, :]
+
+Faithfulness mapping:
+  * the B tile sits stationary in VMEM (BlockSpec index constant over the
+    whole m sweep)                                  -> vector register file
+  * vals/idx live in SMEM and are read as scalars    -> scalar register rs
+  * the scalar index drives a dynamic VMEM row read  -> the vindexmac
+    indirect read port
+  * one scalar-vector MAC per nonzero on the VPU     -> vindexmac execute
+
+This is deliberately *not* how one should do it on a TPU — the MXU idles
+and throughput is one VPU MAC row per step. It exists to (a) demonstrate
+the mechanism 1:1, (b) quantify in the roofline why the decompress->MXU
+adaptation (kernels/indexmac) is the right TPU mapping (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sparsity import NMConfig
+
+
+def _gather_kernel(vals_ref, idx_ref, b_ref, o_ref, acc_ref, *, n, m, nk, bm, bkc):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body(t, _):
+        i = t // bkc  # row of A within the tile
+        j = t % bkc   # nonzero slot within the row strip
+        v = vals_ref[i, j]          # scalar read (SMEM)
+        ii = idx_ref[i, j]          # scalar read (SMEM) -> "rs"
+        r = (j // n) * m + jnp.int32(ii)
+        b_row = b_ref[pl.dslice(r, 1), :]          # indirect VMEM read
+        acc_ref[pl.dslice(i, 1), :] += v.astype(jnp.float32) * b_row.astype(
+            jnp.float32
+        )
+        return 0
+
+    jax.lax.fori_loop(0, bm * bkc, body, 0)
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "block_m", "block_n", "block_k", "interpret"),
+)
+def indexmac_gather_pallas(
+    vals: jax.Array,   # (Mr, Kc) compressed A values
+    idx: jax.Array,    # (Mr, Kc) int8
+    b: jax.Array,      # (K, Nc) dense
+    *,
+    cfg: NMConfig,
+    block_m: int = 8,
+    block_n: int = 128,
+    block_k: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    mr, kc = vals.shape
+    k, nc = b.shape
+    if kc * cfg.m != k * cfg.n:
+        raise ValueError("compressed width inconsistent with K and N:M")
+    if k % block_k or block_k % cfg.m or mr % block_m or nc % block_n:
+        raise ValueError("shapes not tileable")
+    nk = k // block_k
+    bkc = block_k * cfg.n // cfg.m
+    kernel = functools.partial(
+        _gather_kernel, n=cfg.n, m=cfg.m, nk=nk, bm=block_m, bkc=bkc
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(mr // block_m, nc // block_n, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, bkc), lambda i, j, kk: (i, kk),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_m, bkc), lambda i, j, kk: (i, kk),
+                         memory_space=pltpu.SMEM),
+            # stationary dense tile: index does not depend on i -> loaded
+            # once per (j, k) and reused across the whole m sweep.
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mr, nc), b.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(vals, idx, b)

@@ -1,0 +1,28 @@
+"""jit'd wrapper for the literal gather-port kernel (inference-only)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.sparsity import NMConfig
+from repro.kernels.indexmac_gather.kernel import indexmac_gather_pallas
+from repro.kernels.indexmac_gather.ref import indexmac_gather_ref
+
+
+def indexmac_gather_spmm(
+    vals: jax.Array,
+    idx: jax.Array,
+    b: jax.Array,
+    cfg: NMConfig,
+    use_kernel: bool = True,
+    block: tuple[int, int, int] = (8, 128, 64),
+) -> jax.Array:
+    bm, bn, bk = block
+    mr, kc = vals.shape
+    k, nc = b.shape
+    tileable = mr % bm == 0 and nc % bn == 0 and k % bk == 0 and bk % cfg.m == 0
+    if use_kernel and tileable:
+        return indexmac_gather_pallas(
+            vals, idx, b, cfg=cfg, block_m=bm, block_n=bn, block_k=bk,
+            interpret=jax.default_backend() == "cpu",
+        )
+    return indexmac_gather_ref(vals, idx, b, cfg)

@@ -1,0 +1,18 @@
+"""Oracle for the gather-port kernel: paper orientation C = A_sp @ B."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import NMConfig, decompress_nm
+
+
+def indexmac_gather_ref(
+    vals: jax.Array, idx: jax.Array, b: jax.Array, cfg: NMConfig
+) -> jax.Array:
+    a = decompress_nm(vals, idx, cfg, axis=1)  # (Mr, K)
+    y = jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return y.astype(b.dtype)

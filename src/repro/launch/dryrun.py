@@ -1,0 +1,121 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["REPRO_MIXED_PRECISION_DOTS"] = "1"  # TPU-form HLO (lower-only)
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+# the production meshes and record memory/cost/collective analysis.
+#
+# The two lines above MUST stay the first statements in this module: jax
+# locks the device count on first init, and the dry-run needs 512 host
+# placeholder devices. (Smoke tests / benches never import this module.)
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+#   ... --dense --sharding tp_only --out experiments/dryrun
+
+import argparse
+import json
+import time
+import traceback
+
+import jax  # noqa: E402  (after XLA_FLAGS on purpose)
+
+from repro.configs import ARCHS, SHAPES, runnable_shapes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import lower_cell, make_cell
+from repro.roofline.analysis import analyze, fmt_row
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, sparse: bool,
+             sharding_mode: str, out_dir: str | None,
+             microbatches: int = 8, attn_chunk=None, tag: str = "",
+             remat: str = "dots", cache_dtype: str = "bf16") -> dict:
+    import jax.numpy as jnp
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    cell = make_cell(arch, shape, mesh, sparse=sparse,
+                     sharding_mode=sharding_mode, microbatches=microbatches,
+                     attn_chunk=attn_chunk, remat=remat,
+                     cache_dtype={"bf16": jnp.bfloat16,
+                                  "fp8": jnp.float8_e4m3fn}[cache_dtype])
+    lowered = lower_cell(cell, mesh)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    rep = analyze(cell.name + tag, compiled, cell.chips, cell.model_flops)
+    result = rep.to_json()
+    result.update(arch=arch, shape=shape, mesh=mesh_kind,
+                  sparse=sparse, sharding=sharding_mode,
+                  t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1))
+    mem = result.get("memory", {})
+    print(f"[ok] {cell.name}{tag}: "
+          f"args {mem.get('argument_size_in_bytes', 0)/2**30:.2f} GiB/dev, "
+          f"temp {mem.get('temp_size_in_bytes', 0)/2**30:.2f} GiB/dev, "
+          f"t_comp {rep.t_compute*1e3:.1f} ms, t_mem {rep.t_memory*1e3:.1f} ms, "
+          f"t_coll {rep.t_collective*1e3:.1f} ms -> {rep.bottleneck} "
+          f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)", flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}_{shape}_{mesh_kind}_" \
+                f"{'sparse' if sparse else 'dense'}_{sharding_mode}{tag}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--sharding", default="fsdp",
+                    choices=["fsdp", "tp_only"])
+    ap.add_argument("--microbatches", type=int, default=16)
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in runnable_shapes(a)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in cells:
+        for mk in meshes:
+            fname = f"{arch}_{shape}_{mk}_" \
+                    f"{'dense' if args.dense else 'sparse'}_" \
+                    f"{args.sharding}{args.tag}.json"
+            if args.skip_existing and os.path.exists(
+                    os.path.join(args.out, fname)):
+                print(f"[skip] {arch}|{shape}|{mk} (exists)", flush=True)
+                continue
+            try:
+                run_cell(arch, shape, mk, sparse=not args.dense,
+                         sharding_mode=args.sharding, out_dir=args.out,
+                         microbatches=args.microbatches,
+                         attn_chunk=args.attn_chunk, tag=args.tag,
+                         remat=args.remat)
+            except Exception as e:  # noqa: BLE001 — report all cell failures
+                failures.append((arch, shape, mk, repr(e)))
+                print(f"[FAIL] {arch}|{shape}|{mk}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: "
+                         + "; ".join(f"{a}|{s}|{m}" for a, s, m, _ in failures))
+    print("all dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+os.environ.setdefault("REPRO_MIXED_PRECISION_DOTS", "1")
+
+# Perf hillclimbing driver: run named variants of a dry-run cell and diff
+# the roofline terms (EXPERIMENTS.md §Perf). Each variant is a (tag,
+# kwargs) pair passed to run_cell; results append to a JSONL log.
+#
+#   PYTHONPATH=src python -m repro.launch.hillclimb --cell dsv2-train
+#   PYTHONPATH=src python -m repro.launch.hillclimb --cell yi-decode
+
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+
+# variant grids per hillclimbed cell -----------------------------------------
+
+CELLS: dict[str, dict] = {
+    # most representative of the paper's technique at scale (sparse expert
+    # weights dominate bytes) + the memory-bound train cell
+    "dsv2-train": {
+        "base": dict(arch="deepseek-v2-236b", shape="train_4k",
+                     mesh_kind="single", sparse=True, sharding_mode="fsdp",
+                     remat="full", microbatches=16),
+        "variants": [
+            ("paper_dense_baseline", dict(sparse=False)),
+            ("remat_dots", dict(remat="dots")),
+            ("mb8", dict(microbatches=8)),
+            ("chunk2048", dict(attn_chunk=2048)),
+            ("gather_compressed", dict(env={"REPRO_GATHER_COMPRESSED": "1"})),
+        ],
+    },
+    # memory-bound decode: the paper technique's direct win (weight bytes)
+    "yi-decode": {
+        "base": dict(arch="yi-9b", shape="decode_32k", mesh_kind="single",
+                     sparse=True, sharding_mode="fsdp"),
+        "variants": [
+            ("paper_dense_baseline", dict(sparse=False)),
+            ("tp_only", dict(sharding_mode="tp_only")),
+            ("cache_fp8", dict(cache_dtype="fp8")),
+            ("cache_fp8_tp_only", dict(cache_dtype="fp8",
+                                       sharding_mode="tp_only")),
+        ],
+    },
+    # worst roofline fraction candidate: collective/memory-heavy prefill
+    "gemma3-prefill": {
+        "base": dict(arch="gemma3-27b", shape="prefill_32k",
+                     mesh_kind="single", sparse=True, sharding_mode="fsdp"),
+        "variants": [
+            ("paper_dense_baseline", dict(sparse=False)),
+            ("chunk1024", dict(attn_chunk=1024)),
+            ("chunk2048", dict(attn_chunk=2048)),
+            ("tp_only", dict(sharding_mode="tp_only")),
+            ("gather_compressed", dict(env={"REPRO_GATHER_COMPRESSED": "1"})),
+            ("gather_compressed_chunk2048",
+             dict(attn_chunk=2048, env={"REPRO_GATHER_COMPRESSED": "1"})),
+        ],
+    },
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(CELLS))
+    ap.add_argument("--only", default=None,
+                    help="run a single variant tag (plus base)")
+    ap.add_argument("--out", default="experiments/hillclimb")
+    ap.add_argument("--skip-base", action="store_true")
+    args = ap.parse_args()
+
+    spec = CELLS[args.cell]
+    os.makedirs(args.out, exist_ok=True)
+    log = os.path.join(args.out, f"{args.cell}.jsonl")
+
+    def record(tag: str, kwargs: dict) -> None:
+        base = dict(spec["base"])
+        base.update(kwargs)
+        env = base.pop("env", {})
+        old = {k: os.environ.get(k) for k in env}
+        os.environ.update(env)
+        try:
+            res = run_cell(out_dir=None, tag="_" + tag, **base)
+        finally:
+            for k, v in old.items():
+                if v is None:
+                    os.environ.pop(k, None)
+                else:
+                    os.environ[k] = v
+        res["variant"] = tag
+        with open(log, "a") as f:
+            f.write(json.dumps(res) + "\n")
+
+    if not args.skip_base:
+        record("base", {})
+    for tag, kw in spec["variants"]:
+        if args.only and tag != args.only:
+            continue
+        record(tag, kw)
+    print(f"hillclimb log -> {log}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""Dry-run cell construction: (arch x shape x mesh) -> jit-able step +
+ShapeDtypeStruct inputs + in/out shardings + analytic MODEL_FLOPS.
+
+No allocation happens here: params/opt/caches are eval_shape trees
+(weak-type-correct ShapeDtypeStructs); the actual step functions are the
+production ones from repro.training / repro.serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import LM, count_params
+from repro.optim.optimizer import adamw_init
+from repro.parallel.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+)
+from repro.roofline.analysis import model_flops_for
+from repro.serving.engine import make_serve_steps
+from repro.training.train_loop import TrainConfig, make_train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    arch: str
+    shape: ShapeConfig
+    fn: Any  # to be jitted
+    args: tuple  # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    model_flops: float
+    chips: int
+    cfg: ModelConfig
+    donate: tuple = ()  # argnums aliased in place (params/opt/caches)
+
+
+def _named(mesh: Mesh, pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def make_cell(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    sparse: bool = True,
+    sharding_mode: str = "fsdp",
+    microbatches: int = 8,
+    remat: str = "dots",
+    param_dtype_train=jnp.float32,
+    attn_chunk: Optional[int] = None,
+    cfg_override: Optional[ModelConfig] = None,
+    shape_override: Optional[ShapeConfig] = None,
+    cache_dtype=jnp.bfloat16,  # fp8_e4m3 halves KV bytes (EXPERIMENTS P2)
+) -> Cell:
+    shape = shape_override or SHAPES[shape_name]
+    cfg = cfg_override or get_config(arch, sparse=sparse)
+    if attn_chunk is not None:
+        cfg = dataclasses.replace(cfg, attn_chunk=attn_chunk)
+    lm = LM(cfg)
+    chips = mesh.devices.size
+    n_active = count_params(cfg, active_only=True)
+    mflops = model_flops_for(cfg, shape, n_active, count_params(cfg))
+    name = f"{arch}|{shape_name}|{'x'.join(map(str, mesh.devices.shape))}" \
+           f"|{'sparse' if sparse else 'dense'}"
+
+    b, s = shape.global_batch, shape.seq_len
+    tok_sh = NamedSharding(mesh, batch_pspec(b, mesh))
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        params = jax.eval_shape(
+            lambda: lm.init(jax.random.PRNGKey(0),
+                            param_dtype=param_dtype_train))
+        opt = jax.eval_shape(adamw_init, params)
+        p_sh = _named(mesh, param_pspecs(params, mesh, sharding_mode))
+        o_sh = {"step": repl,
+                "m": _named(mesh, param_pspecs(opt["m"], mesh, sharding_mode)),
+                "v": _named(mesh, param_pspecs(opt["v"], mesh, sharding_mode))}
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        b_sh = {"tokens": tok_sh, "labels": tok_sh}
+        if cfg.encoder_plan is not None:
+            batch["enc_input"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            b_sh["enc_input"] = NamedSharding(
+                mesh, batch_pspec(b, mesh, rank=3))
+        # per-microbatch batch must stay divisible by the DP extent
+        dp = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                dp *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        mb = max(1, min(microbatches, b // dp))
+        while b % mb or (b // mb) % dp:
+            mb -= 1
+        tcfg = TrainConfig(microbatches=mb, remat=remat)
+        step = make_train_step(lm, tcfg)
+        return Cell(name, arch, shape, step, (params, opt, batch),
+                    (p_sh, o_sh, b_sh), (p_sh, o_sh, None), mflops, chips,
+                    cfg, donate=(0, 1))
+
+    # serving cells: bf16 params
+    params = jax.eval_shape(
+        lambda: lm.init(jax.random.PRNGKey(0), param_dtype=jnp.bfloat16))
+    p_sh = _named(mesh, param_pspecs(params, mesh, sharding_mode))
+    prefill_step, decode_step = make_serve_steps(lm, jit=False)
+    caches = jax.eval_shape(
+        lambda: lm.init_cache(b, s, dtype=cache_dtype))
+    c_sh = _named(mesh, cache_pspecs(
+        caches, mesh,
+        batch_axes=batch_pspec(b, mesh)[0] or ()))
+
+    if shape.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        args = [params, tokens, caches]
+        in_sh = [p_sh, tok_sh, c_sh]
+        if cfg.encoder_plan is not None:
+            args.append(jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16))
+            in_sh.append(NamedSharding(mesh, batch_pspec(b, mesh, rank=3)))
+            fn = prefill_step
+        else:
+            fn = lambda p, t, c: prefill_step(p, t, c)  # noqa: E731
+        return Cell(name, arch, shape, fn, tuple(args), tuple(in_sh),
+                    (None, c_sh), mflops, chips, cfg, donate=(2,))
+
+    # decode: one token against a cache of length s
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    clen = jax.ShapeDtypeStruct((), jnp.int32)
+    return Cell(name, arch, shape, decode_step,
+                (params, token, caches, clen),
+                (p_sh, tok_sh, c_sh, repl), (None, c_sh), mflops, chips,
+                cfg, donate=(2,))
+
+
+def lower_cell(cell: Cell, mesh: Optional[Mesh] = None):
+    """Lower under an active mesh so in-model shard_hint constraints fire
+    (jax.set_mesh exposes the abstract mesh to the trace; a bare
+    `with mesh:` does not). Donation aliases params/opt (train) and caches
+    (serve) in place — without it XLA copies every loop-carried buffer."""
+    jf = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                 out_shardings=cell.out_shardings,
+                 donate_argnums=cell.donate)
+    if mesh is None:
+        return jf.lower(*cell.args)
+    with jax.set_mesh(mesh):
+        return jf.lower(*cell.args)

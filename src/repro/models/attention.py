@@ -1,0 +1,440 @@
+"""Attention mixers: GQA (with RoPE, sliding window, qk-norm) and MLA
+(DeepSeek-V2 multi-head latent attention), with three execution modes:
+
+  train    — full-sequence, chunked flash-style softmax (lax.scan over KV
+             chunks, fp32 running max/denominator) so the Sq x Skv score
+             matrix is never materialized; O(Sq * chunk) memory.
+  prefill  — same math as train; additionally returns the KV cache laid
+             out (B, S, ...) so decode can shard S over the model axis.
+  decode   — single new token against the cache. Written as plain reductions
+             over the (sharded) cache axis so SPMD lowers them to
+             all-reduces; MLA uses the weight-absorbed form and attends
+             directly over the compressed c_kv cache.
+
+All projections are sparse-eligible (target "attn_proj") — the paper's
+technique applied to attention GEMMs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnConfig, SparsityConfig
+from repro.models.common import (
+    DEFAULT_COMPUTE_DTYPE,
+    apply_rope,
+    linear_apply,
+    linear_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+)
+
+from repro.core.dots import acc_einsum  # noqa: E402  (shared dot policy)
+
+NEG_INF = -1e30
+
+
+def _write_cache(cache_arr: jax.Array, new: jax.Array,
+                 cache_len: jax.Array) -> jax.Array:
+    """Write a 1-token update at position cache_len.
+
+    cache_len scalar: same position for the whole batch (dry-run shapes).
+    cache_len (B,): per-slot positions (continuous batching).
+    new: (B, 1, ...) slice to write into cache (B, S, ...).
+    """
+    if cache_len.ndim == 0:
+        start = (0, cache_len) + (0,) * (cache_arr.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache_arr,
+                                            new.astype(cache_arr.dtype), start)
+    b = cache_arr.shape[0]
+    return cache_arr.at[jnp.arange(b), cache_len].set(
+        new[:, 0].astype(cache_arr.dtype))
+
+
+def _len_mask(length: jax.Array, s: int) -> jax.Array:
+    """valid-position mask; (s,) for scalar length, (B, s) for vector."""
+    pos = jnp.arange(s)
+    if length.ndim == 0:
+        return pos < length
+    return pos[None, :] < length[:, None]
+
+
+def _apply_len_mask(logits: jax.Array, valid: jax.Array) -> jax.Array:
+    """logits: (b, ..., s); valid: (s,) scalar-length or (b, s) per-slot."""
+    if valid.ndim == 1:
+        shape = (1,) * (logits.ndim - 1) + (valid.shape[-1],)
+    else:
+        shape = (valid.shape[0],) + (1,) * (logits.ndim - 2) + (valid.shape[-1],)
+    return jnp.where(valid.reshape(shape), logits, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention core
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, Hq, Dk)
+    k: jax.Array,  # (B, Skv, Hkv, Dk)
+    v: jax.Array,  # (B, Skv, Hkv, Dv)
+    *,
+    causal: bool,
+    window: Optional[int],
+    chunk: int,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Online-softmax attention, scanning over KV chunks."""
+    b, sq, hq, dk = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else dk ** -0.5
+    chunk = min(chunk, skv)
+    valid_kv = skv
+    if skv % chunk:  # pad KV to a chunk multiple; pad keys are masked off
+        pad = chunk - skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        skv += pad
+    n_chunks = skv // chunk
+
+    # operands stay in the model dtype; accumulation is f32 via
+    # preferred_element_type — casting k/v to f32 materializes full f32
+    # copies of the KV stream (measured 2x memory term; EXPERIMENTS §Perf)
+    qf = (q * jnp.asarray(scale, q.dtype)).reshape(b, sq, hkv, g, dk)
+    kc = k.reshape(b, n_chunks, chunk, hkv, dk).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, chunk, hkv, dv).swapaxes(0, 1)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, o = carry  # (b,sq,hkv,g), same, (b,sq,hkv,g,dv)
+        kb, vb, c0 = inp
+        s = acc_einsum("bqhgd,bchd->bqhgc", qf, kb)  # (b,sq,hkv,g,chunk)
+        kv_pos = c0 + jnp.arange(chunk)
+        mask = jnp.broadcast_to((kv_pos < valid_kv)[None, :], (sq, chunk))
+        if causal:
+            mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+        if window is not None:
+            mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        o_new = o * corr[..., None] + acc_einsum(
+            "bqhgc,bchd->bqhgd", p.astype(v.dtype), vb)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, sq, hkv, g), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, g), dtype=jnp.float32)
+    o0 = jnp.zeros((b, sq, hkv, g, dv), dtype=jnp.float32)
+    starts = jnp.arange(n_chunks) * chunk
+    (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (kc, vc, starts))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, hq, dv).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, Hq, Dk)
+    k: jax.Array,  # (B, S, Hkv, Dk) — S may be sharded over 'model'
+    v: jax.Array,  # (B, S, Hkv, Dv)
+    *,
+    length: jax.Array,  # valid cache length (scalar int32)
+    window: Optional[int],
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """One-token attention as plain (SPMD-friendly) reductions over S."""
+    b, sq, hq, dk = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else dk ** -0.5
+    # bf16 operands + f32 accumulation: casting the (sharded, huge) cache
+    # to f32 would materialize f32 copies of it every step
+    qf = (q * jnp.asarray(scale, q.dtype)).reshape(b, sq, hkv, g, dk)
+    logits = acc_einsum("bqhgd,bshd->bqhgs", qf, k.astype(q.dtype))
+    pos = jnp.arange(s)
+    valid = _len_mask(length, s)
+    if window is not None:
+        if length.ndim == 0:
+            valid &= pos >= length - window
+        else:
+            valid &= pos[None, :] >= (length - window)[:, None]
+    logits = _apply_len_mask(logits, valid)
+    m = logits.max(-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / p.sum(-1, keepdims=True)
+    out = acc_einsum("bqhgs,bshd->bqhgd", p.astype(q.dtype),
+                     v.astype(q.dtype))
+    return out.reshape(b, sq, hq, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(
+    key: jax.Array,
+    d_model: int,
+    cfg: AttnConfig,
+    *,
+    sp: Optional[SparsityConfig] = None,
+    param_dtype=jnp.float32,
+    qk_norm: bool = False,
+) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": linear_init(ks[0], d_model, cfg.q_heads * cfg.head_dim,
+                          sp=sp, target="attn_proj", param_dtype=param_dtype),
+        "wk": linear_init(ks[1], d_model, cfg.kv_heads * cfg.head_dim,
+                          sp=sp, target="attn_proj", param_dtype=param_dtype),
+        "wv": linear_init(ks[2], d_model, cfg.kv_heads * cfg.head_dim,
+                          sp=sp, target="attn_proj", param_dtype=param_dtype),
+        "wo": linear_init(ks[3], cfg.q_heads * cfg.head_dim, d_model,
+                          sp=sp, target="attn_proj", param_dtype=param_dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.head_dim, param_dtype)
+        p["k_norm"] = rmsnorm_init(cfg.head_dim, param_dtype)
+    return p
+
+
+def gqa_empty_cache(
+    batch: int, max_seq: int, cfg: AttnConfig, dtype=DEFAULT_COMPUTE_DTYPE
+) -> dict:
+    shape = (batch, max_seq, cfg.kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_apply(
+    params: dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: AttnConfig,
+    *,
+    mode: str,  # train | prefill | decode
+    positions: jax.Array,  # (S,) global positions of x's tokens
+    cache: Optional[dict] = None,
+    cache_len: Optional[jax.Array] = None,
+    rope_theta: float = 10_000.0,
+    chunk: int = 512,
+    sp: Optional[SparsityConfig] = None,
+    cross_kv: Optional[tuple[jax.Array, jax.Array]] = None,
+):
+    """Returns (y, new_cache). cross_kv supplies precomputed encoder K/V
+    for cross-attention (whisper); cache is then unused."""
+    b, s, _ = x.shape
+    q = linear_apply(params["wq"], x, sp=sp).reshape(b, s, cfg.q_heads, cfg.head_dim)
+    if cross_kv is None:
+        k = linear_apply(params["wk"], x, sp=sp).reshape(b, s, cfg.kv_heads, cfg.head_dim)
+        v = linear_apply(params["wv"], x, sp=sp).reshape(b, s, cfg.kv_heads, cfg.head_dim)
+    else:
+        k, v = cross_kv
+    if "q_norm" in params:
+        q = rmsnorm_apply(params["q_norm"], q)
+        if cross_kv is None:
+            k = rmsnorm_apply(params["k_norm"], k)
+    if cfg.rope and cross_kv is None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    new_cache = cache
+    if mode == "decode" and cross_kv is None:
+        assert cache is not None and cache_len is not None
+        k_cache = _write_cache(cache["k"], k, cache_len)
+        v_cache = _write_cache(cache["v"], v, cache_len)
+        new_cache = {"k": k_cache, "v": v_cache}
+        out = decode_attention(
+            q, k_cache, v_cache, length=cache_len + s, window=cfg.window
+        )
+    elif mode == "decode":  # cross-attention decode: static KV, full attend
+        out = decode_attention(
+            q, k, v, length=jnp.int32(k.shape[1]), window=None
+        )
+    else:
+        out = chunked_attention(
+            q, k, v, causal=cfg.causal and cross_kv is None,
+            window=cfg.window, chunk=chunk,
+        )
+        if mode == "prefill" and cross_kv is None:
+            assert cache is not None
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)
+            )
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
+            )
+            new_cache = {"k": k_cache, "v": v_cache}
+    y = linear_apply(params["wo"], out.reshape(b, s, -1), sp=sp)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(
+    key: jax.Array,
+    d_model: int,
+    cfg: AttnConfig,
+    *,
+    sp: Optional[SparsityConfig] = None,
+    param_dtype=jnp.float32,
+) -> dict:
+    ks = jax.random.split(key, 8)
+    h = cfg.q_heads
+    qk_dim = cfg.nope_head_dim + cfg.rope_head_dim
+    p = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = linear_init(ks[0], d_model, cfg.q_lora_rank, sp=sp,
+                                target="attn_proj", param_dtype=param_dtype)
+        p["q_a_norm"] = rmsnorm_init(cfg.q_lora_rank, param_dtype)
+        p["wq_b"] = linear_init(ks[1], cfg.q_lora_rank, h * qk_dim, sp=sp,
+                                target="attn_proj", param_dtype=param_dtype)
+    else:
+        p["wq"] = linear_init(ks[0], d_model, h * qk_dim, sp=sp,
+                              target="attn_proj", param_dtype=param_dtype)
+    p["wkv_a"] = linear_init(ks[2], d_model, cfg.kv_lora_rank, sp=sp,
+                             target="attn_proj", param_dtype=param_dtype)
+    p["kv_a_norm"] = rmsnorm_init(cfg.kv_lora_rank, param_dtype)
+    p["wk_rope"] = linear_init(ks[3], d_model, cfg.rope_head_dim, sp=sp,
+                               target="attn_proj", param_dtype=param_dtype)
+    # up-projections from the latent: stored per-head for absorbed decode
+    p["w_uk"] = (
+        jax.random.normal(ks[4], (h, cfg.kv_lora_rank, cfg.nope_head_dim))
+        * cfg.kv_lora_rank ** -0.5
+    ).astype(param_dtype)
+    p["w_uv"] = (
+        jax.random.normal(ks[5], (h, cfg.kv_lora_rank, cfg.v_head_dim))
+        * cfg.kv_lora_rank ** -0.5
+    ).astype(param_dtype)
+    p["wo"] = linear_init(ks[6], h * cfg.v_head_dim, d_model, sp=sp,
+                          target="attn_proj", param_dtype=param_dtype)
+    return p
+
+
+def mla_empty_cache(
+    batch: int, max_seq: int, cfg: AttnConfig, dtype=DEFAULT_COMPUTE_DTYPE
+) -> dict:
+    return {
+        "ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, max_seq, cfg.rope_head_dim), dtype),
+    }
+
+
+def _mla_q(params, x, cfg, positions, rope_theta, sp):
+    b, s, _ = x.shape
+    h = cfg.q_heads
+    qk_dim = cfg.nope_head_dim + cfg.rope_head_dim
+    if "wq_a" in params:
+        cq = rmsnorm_apply(params["q_a_norm"], linear_apply(params["wq_a"], x, sp=sp))
+        q = linear_apply(params["wq_b"], cq, sp=sp)
+    else:
+        q = linear_apply(params["wq"], x, sp=sp)
+    q = q.reshape(b, s, h, qk_dim)
+    q_nope = q[..., : cfg.nope_head_dim]
+    q_rope = apply_rope(q[..., cfg.nope_head_dim:], positions, rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: AttnConfig,
+    *,
+    mode: str,
+    positions: jax.Array,
+    cache: Optional[dict] = None,
+    cache_len: Optional[jax.Array] = None,
+    rope_theta: float = 10_000.0,
+    chunk: int = 512,
+    sp: Optional[SparsityConfig] = None,
+    cross_kv=None,  # unused (MLA is self-attention only here)
+):
+    b, s, _ = x.shape
+    h = cfg.q_heads
+    q_nope, q_rope = _mla_q(params, x, cfg, positions, rope_theta, sp)
+    ckv = rmsnorm_apply(params["kv_a_norm"], linear_apply(params["wkv_a"], x, sp=sp))
+    kr = apply_rope(
+        linear_apply(params["wk_rope"], x, sp=sp)[:, :, None, :], positions, rope_theta
+    )[:, :, 0, :]  # (b, s, rope_dim), shared across heads
+
+    w_uk = params["w_uk"].astype(q_nope.dtype)  # (h, lora, nope)
+    w_uv = params["w_uv"].astype(q_nope.dtype)  # (h, lora, v)
+    scale = (cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5
+
+    new_cache = cache
+    if mode == "decode":
+        assert cache is not None and cache_len is not None
+        ckv_c = _write_cache(cache["ckv"], ckv, cache_len)
+        kr_c = _write_cache(cache["kr"], kr, cache_len)
+        new_cache = {"ckv": ckv_c, "kr": kr_c}
+        # absorbed attention over the compressed cache (MLA decode):
+        #   logits = q_nope W_uk . ckv + q_rope . kr
+        # operands stay bf16 (f32 casts of the cache would materialize f32
+        # copies of it); accumulation is f32 via preferred_element_type
+        dt = x.dtype
+        q_abs = acc_einsum("bqhd,hcd->bqhc", q_nope, w_uk).astype(dt)
+        logits = acc_einsum("bqhc,bsc->bqhs", q_abs, ckv_c.astype(dt))
+        logits += acc_einsum("bqhr,bsr->bqhs", q_rope, kr_c.astype(dt))
+        logits *= scale
+        valid = _len_mask(cache_len + s, ckv_c.shape[1])
+        logits = _apply_len_mask(logits, valid)
+        m = logits.max(-1, keepdims=True)
+        p = jnp.exp(logits - m)
+        p = p / p.sum(-1, keepdims=True)
+        o_abs = acc_einsum("bqhs,bsc->bqhc", p.astype(dt),
+                           ckv_c.astype(dt)).astype(dt)
+        out = acc_einsum("bqhc,hcv->bqhv", o_abs, w_uv)
+        out = out.astype(x.dtype)
+    else:
+        # train/prefill: materialize per-head K/V from the latent, use the
+        # chunked flash path. K = [k_nope | kr broadcast], V = v.
+        k_nope = jnp.einsum("bsc,hcd->bshd", ckv, w_uk)  # (b,s,h,nope)
+        vfull = jnp.einsum("bsc,hcv->bshv", ckv, w_uv)  # (b,s,h,v)
+        kr_b = jnp.broadcast_to(kr[:, :, None, :], (b, s, h, cfg.rope_head_dim))
+        k = jnp.concatenate([k_nope, kr_b], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attention(
+            q, k, vfull, causal=True, window=cfg.window, chunk=chunk, scale=scale
+        )
+        if mode == "prefill":
+            assert cache is not None
+            ckv_c = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0)
+            )
+            kr_c = jax.lax.dynamic_update_slice(
+                cache["kr"], kr.astype(cache["kr"].dtype), (0, 0, 0)
+            )
+            new_cache = {"ckv": ckv_c, "kr": kr_c}
+    y = linear_apply(params["wo"], out.reshape(b, s, h * cfg.v_head_dim), sp=sp)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, d_model, cfg: AttnConfig, *, sp=None, param_dtype=jnp.float32,
+              qk_norm: bool = False):
+    if cfg.kind == "mla":
+        return mla_init(key, d_model, cfg, sp=sp, param_dtype=param_dtype)
+    return gqa_init(key, d_model, cfg, sp=sp, param_dtype=param_dtype,
+                    qk_norm=qk_norm)
+
+
+def attn_apply(params, x, cfg: AttnConfig, **kw):
+    if cfg.kind == "mla":
+        return mla_apply(params, x, cfg, **kw)
+    return gqa_apply(params, x, cfg, **kw)
+
+
+def attn_empty_cache(batch, max_seq, cfg: AttnConfig, dtype=DEFAULT_COMPUTE_DTYPE):
+    if cfg.kind == "mla":
+        return mla_empty_cache(batch, max_seq, cfg, dtype)
+    return gqa_empty_cache(batch, max_seq, cfg, dtype)

@@ -1,0 +1,186 @@
+"""Shared model building blocks: linear (dense / N:M sparse), norms,
+rotary embeddings, token embedding.
+
+Parameters are plain pytrees (nested dicts of jnp arrays); every layer is a
+pair of pure functions `*_init(key, ...) -> params` / `*_apply(params, x)`.
+Sparsity is integrated at the linear layer: a linear created with a target
+tag that the model's SparsityConfig covers stores compressed (vals, idx)
+parameters and dispatches to the indexmac kernel / XLA reference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SparsityConfig
+from repro.core.sparsity import (
+    NMConfig,
+    apply_mask,
+    compress_nm,
+    decompress_nm,
+    prune_mask_nm,
+)
+from repro.kernels.indexmac.ops import nm_matmul
+
+DEFAULT_PARAM_DTYPE = jnp.float32
+DEFAULT_COMPUTE_DTYPE = jnp.bfloat16
+
+_COMPUTE = {"dtype": DEFAULT_COMPUTE_DTYPE}
+
+
+def get_compute_dtype():
+    return _COMPUTE["dtype"]
+
+
+def set_compute_dtype(dt) -> None:
+    """Process-wide activation dtype (tests flip to f32 to separate
+    numerics from logic; training/serving use bf16)."""
+    _COMPUTE["dtype"] = dt
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+
+def sparse_applies(sp: Optional[SparsityConfig], target: str, in_dim: int) -> bool:
+    return (
+        sp is not None
+        and target in sp.targets
+        and in_dim % sp.nm.m == 0
+    )
+
+
+def linear_init(
+    key: jax.Array,
+    in_dim: int,
+    out_dim: int,
+    *,
+    sp: Optional[SparsityConfig] = None,
+    target: str = "dense",
+    param_dtype=DEFAULT_PARAM_DTYPE,
+    scale: Optional[float] = None,
+) -> dict:
+    scale = scale if scale is not None else in_dim ** -0.5
+    w = jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32) * scale
+    if not sparse_applies(sp, target, in_dim):
+        return {"w": w.astype(param_dtype)}
+    mask = prune_mask_nm(w, sp.nm, axis=0)
+    if sp.mode == "masked":
+        # dense storage; forward re-derives the top-N:M mask (SR-STE style)
+        return {"w": apply_mask(w, mask).astype(param_dtype)}
+    vals, idx = compress_nm(apply_mask(w, mask), sp.nm, axis=0)
+    return {"vals": vals.astype(param_dtype), "idx": idx}
+
+
+def linear_apply(
+    params: dict,
+    x: jax.Array,
+    *,
+    sp: Optional[SparsityConfig] = None,
+    compute_dtype=None,
+) -> jax.Array:
+    compute_dtype = compute_dtype or get_compute_dtype()
+    xc = x.astype(compute_dtype)
+    if "vals" in params:  # compressed N:M
+        assert sp is not None
+        return nm_matmul(
+            xc, params["vals"].astype(compute_dtype), params["idx"],
+            sp.nm, sp.use_kernel,
+        )
+    w = params["w"]
+    if sp is not None and sp.mode == "masked" and w.ndim == 2 and (
+        w.shape[0] % sp.nm.m == 0
+    ):
+        # re-project onto the N:M constraint set every forward; gradients
+        # flow to all entries (straight-through), pruned entries can revive.
+        w = apply_mask(w, prune_mask_nm(w, sp.nm, axis=0))
+    return jnp.einsum("...k,kn->...n", xc, w.astype(compute_dtype))
+
+
+def linear_weight_dense(params: dict, nm: Optional[NMConfig] = None) -> jax.Array:
+    """Materialize the dense weight (tests / export)."""
+    if "vals" in params:
+        return decompress_nm(params["vals"], params["idx"], nm, axis=0)
+    return params["w"]
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, param_dtype=DEFAULT_PARAM_DTYPE) -> dict:
+    return {"scale": jnp.ones((d,), dtype=param_dtype)}
+
+
+def rmsnorm_apply(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * rms).astype(x.dtype) * params["scale"].astype(x.dtype)
+
+
+def layernorm_init(d: int, param_dtype=DEFAULT_PARAM_DTYPE) -> dict:
+    return {
+        "scale": jnp.ones((d,), dtype=param_dtype),
+        "bias": jnp.zeros((d,), dtype=param_dtype),
+    }
+
+
+def layernorm_apply(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * params["scale"].astype(x.dtype) + params[
+        "bias"
+    ].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding (llama-style half rotation)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, half)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., s, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(
+    key: jax.Array, vocab: int, d: int, param_dtype=DEFAULT_PARAM_DTYPE
+) -> dict:
+    e = jax.random.normal(key, (vocab, d), dtype=jnp.float32) * (d ** -0.5)
+    return {"embedding": e.astype(param_dtype)}
+
+
+def embedding_apply(params: dict, tokens: jax.Array, compute_dtype=None):
+    return params["embedding"].astype(compute_dtype or get_compute_dtype())[tokens]
+
+
+def embedding_attend(params: dict, x: jax.Array) -> jax.Array:
+    """Tied output head: logits = x @ E^T (fp32 logits)."""
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32),
+        params["embedding"].astype(jnp.float32),
+    )

@@ -1,0 +1,53 @@
+"""Feed-forward blocks (dense MLP) — sparse-eligible (target "ffn")."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FFNConfig, SparsityConfig
+from repro.models.common import linear_apply, linear_init
+
+
+def ffn_init(
+    key: jax.Array,
+    d_model: int,
+    cfg: FFNConfig,
+    *,
+    sp: Optional[SparsityConfig] = None,
+    param_dtype=jnp.float32,
+    target: str = "ffn",
+) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": linear_init(ks[0], d_model, cfg.d_ff, sp=sp, target=target,
+                            param_dtype=param_dtype),
+        "w_down": linear_init(ks[1], cfg.d_ff, d_model, sp=sp, target=target,
+                              param_dtype=param_dtype),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = linear_init(ks[2], d_model, cfg.d_ff, sp=sp, target=target,
+                                  param_dtype=param_dtype)
+    return p
+
+
+def ffn_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: FFNConfig,
+    *,
+    sp: Optional[SparsityConfig] = None,
+) -> jax.Array:
+    up = linear_apply(params["w_up"], x, sp=sp)
+    if cfg.act in ("swiglu", "geglu"):
+        gate = linear_apply(params["w_gate"], x, sp=sp)
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(gate) * up
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(up)
+    elif cfg.act == "relu_sq":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(cfg.act)
+    return linear_apply(params["w_down"], h, sp=sp)

@@ -1,0 +1,148 @@
+"""Mamba-1 selective-state-space mixer (Jamba's SSM layers).
+
+Training/prefill run the selective scan with lax.scan over time (state
+(B, d_inner, d_state) carried in fp32); decode is a single state update.
+The in/out/x/dt projections are GEMMs and therefore sparse-eligible
+(target "attn_proj" — they play the mixer-projection role); the recurrence
+itself is not a GEMM and is left dense (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, SparsityConfig
+from repro.models.common import linear_apply, linear_init
+
+
+def mamba_init(
+    key: jax.Array,
+    d_model: int,
+    cfg: MambaConfig,
+    *,
+    sp: Optional[SparsityConfig] = None,
+    param_dtype=jnp.float32,
+) -> dict:
+    d_in = cfg.expand * d_model
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32), (d_in, 1))
+    return {
+        "w_in": linear_init(ks[0], d_model, 2 * d_in, sp=sp, target="attn_proj",
+                            param_dtype=param_dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, d_in)) *
+                   cfg.d_conv ** -0.5).astype(param_dtype),
+        "conv_b": jnp.zeros((d_in,), param_dtype),
+        "w_x": linear_init(ks[2], d_in, cfg.dt_rank + 2 * cfg.d_state, sp=sp,
+                           target="attn_proj", param_dtype=param_dtype),
+        "w_dt": linear_init(ks[3], cfg.dt_rank, d_in, sp=None,
+                            param_dtype=param_dtype),
+        "dt_bias": jnp.zeros((d_in,), param_dtype),
+        "a_log": jnp.log(a).astype(param_dtype),
+        "d_skip": jnp.ones((d_in,), param_dtype),
+        "w_out": linear_init(ks[4], d_in, d_model, sp=sp, target="attn_proj",
+                             param_dtype=param_dtype),
+    }
+
+
+def mamba_empty_cache(batch: int, d_model: int, cfg: MambaConfig,
+                      dtype=jnp.float32) -> dict:
+    d_in = cfg.expand * d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, cfg.d_state), jnp.float32),
+    }
+
+
+def _ssm_params(params, xc, cfg: MambaConfig, sp):
+    """xc: (..., d_in) post-conv activations -> (dt, b, c) selective params."""
+    proj = linear_apply(params["w_x"], xc, sp=sp)
+    dt_raw, b, c = jnp.split(
+        proj, [cfg.dt_rank, cfg.dt_rank + cfg.d_state], axis=-1
+    )
+    dt = jax.nn.softplus(
+        linear_apply(params["w_dt"], dt_raw, sp=None)
+        + params["dt_bias"].astype(dt_raw.dtype)
+    )
+    return dt, b, c
+
+
+def mamba_apply(
+    params: dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: MambaConfig,
+    *,
+    mode: str,
+    cache: Optional[dict] = None,
+    sp: Optional[SparsityConfig] = None,
+    **_,
+):
+    bsz, s, d_model = x.shape
+    d_in = cfg.expand * d_model
+    xz = linear_apply(params["w_in"], x, sp=sp)
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    conv_w = params["conv_w"].astype(xin.dtype)  # (d_conv, d_in)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (d_in, n)
+    d_skip = params["d_skip"].astype(jnp.float32)
+
+    if mode == "decode":
+        assert cache is not None
+        hist = jnp.concatenate([cache["conv"].astype(xin.dtype), xin], axis=1)
+        xc = jnp.einsum("bkd,kd->bd", hist, conv_w) + params["conv_b"].astype(
+            xin.dtype
+        )
+        xc = jax.nn.silu(xc)
+        dt, b, c = _ssm_params(params, xc, cfg, sp)
+        dtf = dt.astype(jnp.float32)
+        da = jnp.exp(dtf[:, :, None] * a[None])  # (B, d_in, n)
+        dbx = (dtf * xc.astype(jnp.float32))[:, :, None] * b.astype(jnp.float32)[
+            :, None, :
+        ]
+        ssm = cache["ssm"] * da + dbx
+        y = jnp.einsum("bdn,bn->bd", ssm, c.astype(jnp.float32)) + d_skip * xc.astype(
+            jnp.float32
+        )
+        y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0])).reshape(bsz, 1, d_in)
+        new_cache = {"conv": hist[:, 1:], "ssm": ssm}
+    else:
+        # causal depthwise conv over time
+        pad = jnp.zeros((bsz, cfg.d_conv - 1, d_in), xin.dtype)
+        xin_p = jnp.concatenate([pad, xin], axis=1)
+        xc = sum(
+            xin_p[:, i : i + s] * conv_w[i] for i in range(cfg.d_conv)
+        ) + params["conv_b"].astype(xin.dtype)
+        xc = jax.nn.silu(xc)
+        dt, b, c = _ssm_params(params, xc, cfg, sp)
+        dtf = dt.astype(jnp.float32)
+        da = jnp.exp(dtf[..., None] * a[None, None])  # (B,S,d_in,n)
+        dbx = (dtf * xc.astype(jnp.float32))[..., None] * b.astype(jnp.float32)[
+            :, :, None, :
+        ]
+
+        def step(h, inp):
+            da_t, dbx_t, c_t = inp
+            h = h * da_t + dbx_t
+            y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+            return h, y_t
+
+        h0 = (cache["ssm"] if (cache is not None and mode == "prefill")
+              else jnp.zeros((bsz, d_in, cfg.d_state), jnp.float32))
+        hT, ys = jax.lax.scan(
+            step, h0,
+            (da.swapaxes(0, 1), dbx.swapaxes(0, 1),
+             c.astype(jnp.float32).swapaxes(0, 1)),
+        )
+        y = ys.swapaxes(0, 1) + d_skip * xc.astype(jnp.float32)
+        y = y.astype(x.dtype) * jax.nn.silu(z)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": xin_p[:, s:][:, -(cfg.d_conv - 1):].astype(
+                jnp.float32) if cfg.d_conv > 1 else xin[:, :0],
+                "ssm": hT}
+            new_cache["conv"] = jnp.concatenate(
+                [pad.astype(jnp.float32), xin.astype(jnp.float32)], axis=1
+            )[:, -(cfg.d_conv - 1):]
+    out = linear_apply(params["w_out"], y, sp=sp)
+    return out, new_cache

@@ -1,0 +1,178 @@
+"""RWKV-6 (Finch) mixer: time-mix with data-dependent decay + channel-mix.
+
+The block owns both sublayers (time-mix plays the attention role,
+channel-mix the FFN role) because both need the token-shift state; the
+transformer assembly passes mlp=None for RWKV blocks.
+
+State per layer: time-mix wkv state (B, H, dk, dv) fp32 + the last token
+for each of the two shift gates — O(1) in sequence length, which is why
+rwkv6-3b is a `long_500k` runner (DESIGN.md §6).
+
+All projections (r/k/v/g/o, channel-mix) are GEMMs -> sparse-eligible.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RWKVConfig, SparsityConfig
+from repro.models.common import (
+    linear_apply,
+    linear_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+)
+
+
+def rwkv_init(
+    key: jax.Array,
+    d_model: int,
+    cfg: RWKVConfig,
+    *,
+    d_ff: int,
+    sp: Optional[SparsityConfig] = None,
+    param_dtype=jnp.float32,
+) -> dict:
+    h = d_model // cfg.head_dim
+    ks = jax.random.split(key, 12)
+    u = jax.random.uniform(ks[0], (h, cfg.head_dim), minval=-1.0, maxval=1.0)
+    return {
+        # time-mix
+        "mu": jax.random.uniform(ks[1], (5, d_model)).astype(param_dtype),
+        "mix_lora_a": (jax.random.normal(ks[2], (d_model, 5 * cfg.mix_lora))
+                       * d_model ** -0.5).astype(param_dtype),
+        "mix_lora_b": jnp.zeros((5, cfg.mix_lora, d_model), param_dtype),
+        "w_r": linear_init(ks[3], d_model, d_model, sp=sp, target="attn_proj",
+                           param_dtype=param_dtype),
+        "w_k": linear_init(ks[4], d_model, d_model, sp=sp, target="attn_proj",
+                           param_dtype=param_dtype),
+        "w_v": linear_init(ks[5], d_model, d_model, sp=sp, target="attn_proj",
+                           param_dtype=param_dtype),
+        "w_g": linear_init(ks[6], d_model, d_model, sp=sp, target="attn_proj",
+                           param_dtype=param_dtype),
+        "w_o": linear_init(ks[7], d_model, d_model, sp=sp, target="attn_proj",
+                           param_dtype=param_dtype),
+        "decay_base": jnp.full((d_model,), -5.0, param_dtype),
+        "decay_lora_a": (jax.random.normal(ks[8], (d_model, cfg.decay_lora))
+                         * d_model ** -0.5).astype(param_dtype),
+        "decay_lora_b": jnp.zeros((cfg.decay_lora, d_model), param_dtype),
+        "bonus": u.astype(param_dtype),
+        "wkv_norm": rmsnorm_init(cfg.head_dim, param_dtype),
+        # channel-mix
+        "cm_mu": jax.random.uniform(ks[9], (2, d_model)).astype(param_dtype),
+        "cm_norm": rmsnorm_init(d_model, param_dtype),
+        "w_cm_k": linear_init(ks[10], d_model, d_ff, sp=sp, target="ffn",
+                              param_dtype=param_dtype),
+        "w_cm_v": linear_init(ks[11], d_ff, d_model, sp=sp, target="ffn",
+                              param_dtype=param_dtype),
+        "w_cm_r": linear_init(jax.random.fold_in(key, 99), d_model, d_model,
+                              sp=sp, target="ffn", param_dtype=param_dtype),
+    }
+
+
+def rwkv_empty_cache(batch: int, d_model: int, cfg: RWKVConfig,
+                     dtype=jnp.float32) -> dict:
+    h = d_model // cfg.head_dim
+    return {
+        "wkv": jnp.zeros((batch, h, cfg.head_dim, cfg.head_dim), jnp.float32),
+        "tm_last": jnp.zeros((batch, d_model), dtype),
+        "cm_last": jnp.zeros((batch, d_model), dtype),
+    }
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]) -> jax.Array:
+    """Previous token's activation (zeros / cache at position 0)."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = last[:, None, :] if last is not None else jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([first.astype(x.dtype), prev[:, 1:]], axis=1)
+
+
+def _ddlerp(params, x, prev):
+    """Data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
+    xx = prev - x
+    mu = params["mu"].astype(x.dtype)  # (5, D)
+    base = x[:, :, None, :] + xx[:, :, None, :] * mu[None, None]
+    lora = jnp.tanh(
+        jnp.einsum("bsd,dk->bsk", x + xx * mu[0], params["mix_lora_a"].astype(x.dtype))
+    )
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)
+    adj = jnp.einsum("bsik,ikd->bsid", lora, params["mix_lora_b"].astype(x.dtype))
+    mixed = base + xx[:, :, None, :] * adj
+    return [mixed[:, :, i] for i in range(5)]
+
+
+def rwkv_time_mix(params, x, cfg: RWKVConfig, *, sp, state, last):
+    b, s, d = x.shape
+    h = d // cfg.head_dim
+    dk = cfg.head_dim
+    prev = _token_shift(x, last)
+    xr, xk, xv, xw, xg = _ddlerp(params, x, prev)
+    r = linear_apply(params["w_r"], xr, sp=sp).reshape(b, s, h, dk)
+    k = linear_apply(params["w_k"], xk, sp=sp).reshape(b, s, h, dk)
+    v = linear_apply(params["w_v"], xv, sp=sp).reshape(b, s, h, dk)
+    g = jax.nn.silu(linear_apply(params["w_g"], xg, sp=sp))
+    dlora = jnp.tanh(
+        jnp.einsum("bsd,dk->bsk", xw, params["decay_lora_a"].astype(x.dtype))
+    )
+    wraw = params["decay_base"].astype(jnp.float32) + jnp.einsum(
+        "bsk,kd->bsd", dlora, params["decay_lora_b"].astype(x.dtype)
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wraw)).reshape(b, s, h, dk)  # decay in (0,1)
+    u = params["bonus"].astype(jnp.float32)  # (h, dk)
+
+    rf = r.astype(jnp.float32).swapaxes(0, 1)  # (S,B,h,dk)
+    kf = k.astype(jnp.float32).swapaxes(0, 1)
+    vf = v.astype(jnp.float32).swapaxes(0, 1)
+    wf = w.swapaxes(0, 1)
+
+    def step(st, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,h,dk)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, st + u[None] [..., None] * kv)
+        st = w_t[..., None] * st + kv
+        return st, y
+
+    st0 = state if state is not None else jnp.zeros((b, h, dk, dk), jnp.float32)
+    stT, ys = jax.lax.scan(step, st0, (rf, kf, vf, wf))
+    y = ys.swapaxes(0, 1)  # (B,S,h,dk)
+    y = rmsnorm_apply(params["wkv_norm"], y.astype(x.dtype))
+    y = (y.reshape(b, s, d) * g)
+    out = linear_apply(params["w_o"], y, sp=sp)
+    return out, stT, x[:, -1]
+
+
+def rwkv_channel_mix(params, x, *, sp, last):
+    prev = _token_shift(x, last)
+    mu = params["cm_mu"].astype(x.dtype)
+    xk = x + (prev - x) * mu[0]
+    xr = x + (prev - x) * mu[1]
+    k = linear_apply(params["w_cm_k"], xk, sp=sp)
+    v = linear_apply(params["w_cm_v"], jnp.square(jax.nn.relu(k)), sp=sp)
+    r = jax.nn.sigmoid(linear_apply(params["w_cm_r"], xr, sp=sp))
+    return r * v, x[:, -1]
+
+
+def rwkv_apply(
+    params: dict,
+    x: jax.Array,  # (B, S, D) — already layer-normed by the block wrapper
+    cfg: RWKVConfig,
+    *,
+    mode: str,
+    cache: Optional[dict] = None,
+    sp: Optional[SparsityConfig] = None,
+    **_,
+):
+    """Time-mix sublayer only; channel-mix is exposed separately so the
+    block wrapper can put its own norm + residual around each."""
+    state = cache["wkv"] if cache is not None else None
+    last = cache["tm_last"] if cache is not None else None
+    y, st, tm_last = rwkv_time_mix(params, x, cfg, sp=sp, state=state, last=last)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        assert cache is not None
+        new_cache = dict(cache)
+        new_cache["wkv"] = st
+        new_cache["tm_last"] = tm_last.astype(cache["tm_last"].dtype)
+    return y, new_cache

@@ -1,0 +1,97 @@
+"""AdamW with cosine schedule and global-norm clipping.
+
+Integer (non-inexact) parameter leaves — the sparse idx arrays — carry no
+optimizer state and are passed through untouched; their gradients arrive
+as float0 from `jax.grad(..., allow_int=True)`.
+
+Optimizer-state sharding: moments mirror the parameter PartitionSpecs, so
+under the 2D (fsdp x tp) parameter layout the optimizer state is fully
+sharded across the mesh (ZeRO-equivalent storage).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def _is_trainable(leaf) -> bool:
+    return jnp.issubdtype(leaf.dtype, jnp.inexact)
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: (jnp.zeros_like(p) if _is_trainable(p)
+                       else jnp.zeros((), jnp.int8))
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(grads: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)
+              if hasattr(g, "dtype") and jnp.issubdtype(g.dtype, jnp.floating)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any, state: dict):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        if not _is_trainable(p):
+            return p, m, v
+        g = g.astype(jnp.float32) * scale
+        pf = p.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        pf = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    # out is a tree of 3-tuples; split it
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"step": step, "m": new_m, "v": new_v}, {
+        "lr": lr, "grad_norm": gnorm}

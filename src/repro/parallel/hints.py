@@ -1,0 +1,48 @@
+"""Sharding hints that degrade to no-ops outside a mesh context.
+
+Model code calls `shard_hint(x, "model", None, ...)` to pin intermediate
+layouts (expert buffers, attention activations). Under pjit with an active
+mesh the hint becomes a with_sharding_constraint; in single-device smoke
+tests it vanishes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _active_mesh():
+    m = jax.sharding.get_abstract_mesh()
+    return m if m is not None and m.shape_tuple else None
+
+
+def shard_hint(x: jax.Array, *spec) -> jax.Array:
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    # inside shard_map regions axes are Manual — constraints are illegal
+    # there (the sharding is already explicit); the hint becomes a no-op
+    try:
+        if any(t == jax.sharding.AxisType.Manual for t in mesh.axis_types):
+            return x
+    except AttributeError:
+        pass
+    axes = set(mesh.axis_names)
+    clean = []
+    for s in spec:
+        if s is None:
+            clean.append(None)
+        elif isinstance(s, tuple):
+            kept = tuple(a for a in s if a in axes)
+            clean.append(kept if kept else None)
+        else:
+            clean.append(s if s in axes else None)
+    # drop axes whose size does not divide the dim
+    fixed = []
+    for dim, s in zip(x.shape, clean):
+        names = (s,) if isinstance(s, str) else (s or ())
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        fixed.append(s if size > 0 and dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(x, P(*fixed))

@@ -1,0 +1,206 @@
+"""Sharding rules: params, optimizer state, caches, and batches -> PartitionSpecs.
+
+Mesh axes (launch/mesh.py):
+  single-pod: ("data"=16, "model"=16)          — 256 chips
+  multi-pod:  ("pod"=2, "data"=16, "model"=16) — 512 chips
+
+Strategy (MaxText-style 2D param sharding):
+  * TP over "model": attention heads / FFN hidden / vocab / experts (EP).
+  * FSDP over "data": the other large axis of every 2D+ weight is sharded
+    over "data" — parameter and optimizer-state memory scale with the full
+    mesh (ZeRO-3-equivalent storage; XLA SPMD inserts the all-gathers).
+  * DP over ("pod", "data") for the batch; gradients all-reduce over those
+    axes (cross-pod traffic only carries gradient reductions).
+  * SP for decode caches: the sequence axis shards over "model" so a 524k
+    KV cache fits; softmax reductions over the sharded axis lower to
+    all-reduces.
+
+`sharding_mode`:
+  fsdp     — as above (default; memory-optimal)
+  tp_only  — params replicated over "data" (lower collective volume,
+             higher memory) — a hillclimb knob
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# parameter leaves whose *last-but-one / last* axes are (in, out) of a GEMM,
+# keyed by leaf name: value = (spec for in-axis, spec for out-axis)
+_COL = ("data", "model")   # column-parallel: out axis = heads/ffn-hidden
+_ROW = ("model", "data")   # row-parallel: in axis sharded
+_GEMM_RULES: dict[str, tuple] = {
+    # attention
+    "wq": _COL, "wk": _COL, "wv": _COL, "wo": _ROW,
+    "wq_a": _COL, "wq_b": _COL, "wkv_a": ("data", None), "wk_rope": ("data", None),
+    # ffn
+    "w_up": _COL, "w_gate": _COL, "w_down": _ROW,
+    # mamba / rwkv projections
+    "w_in": _COL, "w_x": _ROW, "w_dt": (None, "model"), "w_out": _ROW,
+    "w_r": _COL, "w_k": _COL, "w_v": _COL, "w_g": _COL, "w_o": _ROW,
+    "w_cm_k": _COL, "w_cm_v": _ROW, "w_cm_r": _COL,
+    # heads / embeddings
+    "w_lm_head": _COL,
+    # router stays replicated (tiny, and gate math wants full logits)
+    "w_router": (None, None),
+}
+# non-GEMM leaves: full spec by name (leading axes listed explicitly)
+_NAMED_RULES: dict[str, tuple] = {
+    "embedding": ("model", "data"),       # vocab x d_model
+    "pos": (None, "data"),
+    "enc_pos": (None, "data"),
+    "w_uk": ("model", None, None),        # (heads, lora, hd) — heads = TP
+    "w_uv": ("model", None, None),
+    "conv_w": (None, "model"),
+    "a_log": ("model", None),
+    "mix_lora_a": ("data", None),
+    "mix_lora_b": (None, None, "data"),
+    "decay_lora_a": ("data", None),
+    "decay_lora_b": (None, "data"),
+    "mu": (None, "data"),
+    "cm_mu": (None, "data"),
+    "bonus": (None, None),
+}
+
+
+def _axis_ok(dim: int, axis, mesh_shape: dict[str, int]) -> bool:
+    if axis is None:
+        return True
+    names = (axis,) if isinstance(axis, str) else axis
+    size = int(np.prod([mesh_shape[a] for a in names]))
+    return dim % size == 0
+
+
+def _fit(spec: tuple, shape: tuple, mesh_shape: dict[str, int]) -> P:
+    """Drop axes that don't divide; pad/trim spec to the array rank
+    (stacked scan params get leading None axes)."""
+    spec = tuple(spec)
+    if len(spec) < len(shape):
+        spec = (None,) * (len(shape) - len(spec)) + spec
+    spec = spec[-len(shape):] if len(spec) > len(shape) else spec
+    fixed = tuple(
+        s if _axis_ok(d, s, mesh_shape) else None for d, s in zip(shape, spec)
+    )
+    return P(*fixed)
+
+
+def _leaf_spec(path: tuple, leaf, mesh_shape: dict[str, int],
+               sharding_mode: str) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1]
+    in_moe_experts = "experts" in names
+    in_moe_shared = "shared" in names
+
+    if name in ("w", "vals", "idx"):
+        owner = names[-2] if len(names) >= 2 else ""
+        rule = _GEMM_RULES.get(owner)
+        if rule is None:
+            rule = _COL if owner not in ("router",) else (None, None)
+        if owner == "router":
+            rule = (None, None)
+        if names[-2:] == ["lm_head", name] or (len(names) >= 2 and names[-2] == "lm_head"):
+            rule = _COL
+    elif name in _NAMED_RULES:
+        rule = _NAMED_RULES[name]
+    elif name in ("scale", "bias", "dt_bias", "d_skip", "conv_b",
+                  "decay_base"):
+        rule = (None,) * leaf.ndim
+    else:
+        rule = (None,) * leaf.ndim
+
+    if in_moe_experts:
+        # experts are stacked on a leading E axis -> expert parallelism
+        rule = ("model",) + tuple(None if r == "model" else r for r in rule)
+    elif in_moe_shared:
+        # shared experts enter the MoE shard_map as pure TP blocks
+        rule = tuple(None if r == "data" else r for r in rule)
+
+    if sharding_mode == "tp_only":
+        rule = tuple(None if r == "data" else r for r in rule)
+    return _fit(rule, leaf.shape, mesh_shape)
+
+
+def param_pspecs(params: Any, mesh: Mesh, sharding_mode: str = "fsdp"):
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _leaf_spec(p, l, mesh_shape, sharding_mode), params
+    )
+
+
+def param_shardings(params: Any, mesh: Mesh, sharding_mode: str = "fsdp"):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_pspecs(params, mesh, sharding_mode),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+# axis-1-is-sequence cache leaves (sharded over "model" = SP for decode)
+_SEQ_CACHE = {"k", "v", "ckv", "kr", "cross_k", "cross_v"}
+
+
+def _cache_leaf_spec(path, leaf, mesh_shape, batch_axes) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1]
+    # stacked scan caches have a leading layer axis; batch is the first
+    # axis whose size matches nothing structural — we detect by rank of the
+    # known layouts instead:
+    base_rank = {"k": 4, "v": 4, "cross_k": 4, "cross_v": 4, "ckv": 3,
+                 "kr": 3, "conv": 3, "ssm": 3, "wkv": 4, "tm_last": 2,
+                 "cm_last": 2}.get(name, leaf.ndim)
+    lead = leaf.ndim - base_rank  # 0 or 1 (scan-stacked)
+    spec = [None] * leaf.ndim
+    b_dim = lead  # batch axis position
+    if _axis_ok(leaf.shape[b_dim], batch_axes, mesh_shape):
+        spec[b_dim] = batch_axes
+    if name in _SEQ_CACHE and _axis_ok(leaf.shape[b_dim + 1], "model",
+                                       mesh_shape):
+        spec[b_dim + 1] = "model"
+    elif name in ("conv", "ssm") and _axis_ok(leaf.shape[b_dim + 1], "model",
+                                              mesh_shape):
+        # mamba states: channel axis over model
+        if name == "ssm":
+            spec[b_dim + 1] = "model"
+        else:
+            spec[b_dim + 2] = ("model" if _axis_ok(leaf.shape[b_dim + 2],
+                                                   "model", mesh_shape)
+                               else None)
+    return P(*spec)
+
+
+def cache_pspecs(caches: Any, mesh: Mesh, batch_axes=("data",)):
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _cache_leaf_spec(p, l, mesh_shape, batch_axes), caches
+    )
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+
+def batch_pspec(batch_size: int, mesh: Mesh, rank: int = 2) -> P:
+    """Shard the batch axis over as many of (pod, data) as divide it."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cands = [a for a in ("pod", "data") if a in mesh_shape]
+    axes: tuple = ()
+    size = 1
+    for a in cands:
+        if batch_size % (size * mesh_shape[a]) == 0:
+            axes = axes + (a,)
+            size *= mesh_shape[a]
+    spec = (axes if axes else None,) + (None,) * (rank - 1)
+    return P(*spec)
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,204 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+Per (arch x shape x mesh):
+  compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory term     = HLO_bytes_per_chip / HBM_bw
+  collective term = collective_operand_bytes_per_chip / link_bw
+
+(cost_analysis and the post-optimization HLO are per-device programs, so
+the per-chip forms above are identical to the task's global/(chips*rate)
+formulas.)
+
+Hardware constants (task spec, TPU v5e-class): 197 bf16 TFLOP/s per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s/link (conservative single-link form)
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# "%name = <output-type> <op>(" — output-type may be a tuple of shapes
+_LINE_RE = re.compile(
+    r"= ((?:\([^)]*\))|(?:\S+)) "
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    if dtype not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]<=[...]
+    return 1
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, float]:
+    """Per-device collective *operand* bytes from post-SPMD HLO.
+
+    Post-optimization HLO names operands without inline types, so operand
+    bytes are derived from the output shapes on the LHS:
+      all-gather:     operand = output / group_size
+      reduce-scatter: operand = output * group_size
+      all-reduce / all-to-all / collective-permute: operand = output
+    `-done` ops are skipped (their `-start` was already counted).
+    """
+    out: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if m is None:
+            continue
+        outtype, coll = m.group(1), m.group(2)
+        ob = sum(_shape_bytes(dt, dims)
+                 for dt, dims in _SHAPE_RE.findall(outtype))
+        gs = _group_size(line)
+        if coll == "all-gather":
+            ob = ob / max(gs, 1)
+        elif coll == "reduce-scatter":
+            ob = ob * gs
+        out[coll] += ob
+    out["total"] = sum(out.values())
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_breakdown: dict
+    model_flops: float  # analytic 6ND (or decode 2ND) GLOBAL
+    memory: dict  # memory_analysis fields (per chip)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs — remat/redundancy/decompress waste."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the bound spent on useful model FLOPs: the score.
+        (model_flops/chips/peak) / t_bound."""
+        if self.t_bound == 0:
+            return 0.0
+        return (self.model_flops / self.chips / PEAK_FLOPS) / self.t_bound
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_frac=self.useful_flops_frac,
+                 roofline_frac=self.roofline_frac)
+        return d
+
+
+def analyze(name: str, compiled, chips: int, model_flops: float,
+            hlo_text: Optional[str] = None) -> RooflineReport:
+    """Roofline terms via the trip-count-aware HLO analyzer.
+
+    XLA's own cost_analysis counts while (scan) bodies once — orders of
+    magnitude off for scan-over-layers models (tests/test_hlo_cost.py) —
+    so flops/bytes/collectives come from roofline.hlo_cost instead.
+    """
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    h = analyze_hlo(text)
+    flops = float(h["flops"])
+    byts = float(h["bytes"])
+    colls = dict(h["collectives"])
+    for c in _COLLECTIVES:
+        colls.setdefault(c, 0.0)
+    ma = compiled.memory_analysis()
+    mem = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, f, None)
+        if v is not None:
+            mem[f] = int(v)
+    return RooflineReport(
+        name=name, chips=chips, flops_per_chip=flops, bytes_per_chip=byts,
+        collective_bytes_per_chip=colls["total"],
+        collective_breakdown={k: v for k, v in colls.items() if k != "total"},
+        model_flops=model_flops, memory=mem,
+    )
+
+
+def model_flops_for(cfg, shape, n_params_active: int, n_params_total: int,
+                    sparse_density: float = 1.0) -> float:
+    """Analytic MODEL_FLOPS for the cell.
+
+    train:   6 * N_active * tokens     (fwd 2ND + bwd 4ND)
+    prefill: 2 * N_active * tokens
+    decode:  2 * N_active * batch      (one token per sequence)
+    """
+    n = n_params_active
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch
+
+
+def fmt_row(r: RooflineReport) -> str:
+    return (f"| {r.name} | {r.chips} | {r.t_compute*1e3:.2f} | "
+            f"{r.t_memory*1e3:.2f} | {r.t_collective*1e3:.2f} | "
+            f"{r.bottleneck} | {r.useful_flops_frac:.2f} | "
+            f"{r.roofline_frac:.2f} |")

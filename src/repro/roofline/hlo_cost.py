@@ -1,0 +1,380 @@
+"""Trip-count-aware cost analysis over post-optimization HLO text.
+
+XLA's HloCostAnalysis (compiled.cost_analysis()) counts every computation
+ONCE — `while` bodies (jax.lax.scan over layers / microbatches / KV chunks
+/ recurrences) are not multiplied by their trip counts, which undercounts
+FLOPs/bytes/collectives by orders of magnitude on scan-structured models
+(verified: a 10-step scanned matmul reports the FLOPs of one matmul).
+
+This module re-derives the three roofline inputs by walking the HLO text:
+
+FLOPs   — dot ops (2 * prod(out) * contracted), including dots inside
+          fused computations; elementwise FLOPs are ignored (dots dominate
+          model FLOPs; documented approximation).
+bytes   — materialized-buffer traffic: every scheduled (top-level) op's
+          OUTPUT is charged twice (written once, read ~once by its
+          consumers). Counting operand lists directly triple-counts
+          multi-consumer tensors and charges whole stacked per-layer
+          arrays to every loop iteration; the output-centric convention
+          matches buffer-assignment reality within ~2x. Exceptions:
+            * dynamic-update-slice: 2x the update slice (RMW of a region,
+              not the whole buffer);
+            * scatter: 2x the updates;
+            * fusion params whose only internal uses are
+              (dynamic-)slice/gather additionally charge the slice read
+              (their producer is a loop-carried buffer nobody else counts);
+            * reshape/bitcast/tuple/gte/constant/iota: free.
+          Fusion internals are never byte-counted (registers/VMEM).
+collect — operand bytes per collective kind (all-gather scaled by
+          1/group_size, reduce-scatter by group_size).
+
+Totals multiply every `while` body by its trip count (parsed from the
+condition's `compare(.., constant(N)), direction=LT` — how jax scans
+lower), recursively. Unknown conditions count once.
+
+Validated in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_LHS_RE = re.compile(r"^(?:ROOT )?%([\w\.\-]+) = ")
+_CALLSITE_RE = re.compile(r"\b(while|fusion|call|conditional)\(")
+_CALLED_RE = re.compile(
+    r"(?:body|to_apply|calls|branch_computations)=\{?%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPND_RE = re.compile(r"%([\w\.\-]+)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+_SLICING_OPS = ("dynamic-slice", "slice", "gather")  # exact op names
+
+
+def _nelems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(dt: str, dims: str) -> float:
+    return _nelems(dims) * _DTYPE_BYTES.get(dt, 0)
+
+
+def _first_shape_bytes(seg: str) -> float:
+    m = _SHAPE_RE.search(seg)
+    return _shape_bytes(m.group(1), m.group(2)) if m else 0.0
+
+
+def _all_shapes_bytes(seg: str) -> float:
+    return sum(_shape_bytes(dt, d) for dt, d in _SHAPE_RE.findall(seg))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def _lhs_bytes(line: str) -> float:
+    """Output bytes: shapes between '=' and the op name's '('."""
+    rhs = line.split("= ", 1)
+    if len(rhs) < 2:
+        return 0.0
+    head = rhs[1].split("(", 1)[0]
+    return _all_shapes_bytes(head)
+
+
+def _op_of(line: str) -> str:
+    rhs = line.split("= ", 1)
+    if len(rhs) < 2:
+        return ""
+    m = re.search(r"([a-z0-9\-]+)\(", rhs[1])
+    return m.group(1) if m else ""
+
+
+def _operands(line: str) -> list[str]:
+    if "(" not in line:
+        return []
+    args = line.split("(", 1)[1]
+    # cut at the matching close paren
+    depth = 1
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args = args[:i]
+                break
+    return _OPND_RE.findall(args)
+
+
+@dataclasses.dataclass
+class FusionInfo:
+    dot_flops: float = 0.0
+    # param name -> True if every use is a slicing op (charge slice size)
+    sliced_params: dict = dataclasses.field(default_factory=dict)
+    # param name -> largest slice-output bytes observed
+    slice_bytes: dict = dataclasses.field(default_factory=dict)
+    param_order: list = dataclasses.field(default_factory=list)
+    # root is dynamic-update-slice: charge 2x update, not 2x buffer (the
+    # buffer aliases in place; XLA "DUS fusion" pattern)
+    root_dus_update_bytes: Optional[float] = None
+    # fusion body is only converts/bitcasts: a CPU-backend materialization
+    # of a dtype cast (free on TPU — fuses into the consumer)
+    pure_convert: bool = False
+
+
+def _parse_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if not s:
+            continue
+        if not line.startswith(" ") and " -> " in s and s.endswith("{"):
+            m = _COMP_HDR_RE.match(s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def analyze_hlo(hlo: str, detail: bool = False) -> dict:
+    comps = _parse_computations(hlo)
+
+    # global symbol table: op name -> (dtype, dims) of its (first) output
+    shapes: dict[str, tuple[str, str]] = {}
+    for lines in comps.values():
+        for ln in lines:
+            m = _LHS_RE.match(ln)
+            if m:
+                sm = _SHAPE_RE.search(ln[m.end():].split("(", 1)[0])
+                if sm:
+                    shapes[m.group(1)] = (sm.group(1), sm.group(2))
+
+    def dot_flops(line: str) -> float:
+        out_elems = 0
+        m = _SHAPE_RE.search(line.split("= ", 1)[1])
+        if m:
+            out_elems = _nelems(m.group(2))
+        ops = _operands(line)
+        lhs_shape = shapes.get(ops[0]) if ops else None
+        contracted = 1
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+        if lhs_shape:
+            lhs_dims = [int(x) for x in lhs_shape[1].split(",") if x]
+            if cm:
+                for d in (int(x) for x in cm.group(1).split(",") if x):
+                    if d < len(lhs_dims):
+                        contracted *= lhs_dims[d]
+            elif lhs_dims:
+                contracted = lhs_dims[-1]
+        return 2.0 * out_elems * contracted
+
+    # ---- per-fusion info (internal dots + sliced-param detection) --------
+    fusion_info: dict[str, FusionInfo] = {}
+    for name, lines in comps.items():
+        fi = FusionInfo()
+        uses: dict[str, list[str]] = {}
+        body_ops = {_op_of(ln) for ln in lines
+                    if " parameter(" not in ln and "= " in ln}
+        fi.pure_convert = bool(body_ops) and body_ops <= {"convert",
+                                                          "bitcast", ""}
+        for ln in lines:
+            if " parameter(" in ln:
+                m = _LHS_RE.match(ln)
+                if m:
+                    fi.param_order.append(m.group(1))
+                continue
+            op = _op_of(ln)
+            if op == "dot":
+                fi.dot_flops += dot_flops(ln)
+            if "dynamic-update-slice(" in ln:
+                # in-place DUS (possibly behind a root convert): the buffer
+                # aliases; only the updated region moves
+                ops_ = _operands(ln)
+                upd = (_shape_bytes(*shapes[ops_[1]])
+                       if len(ops_) > 1 and ops_[1] in shapes else 0.0)
+                fi.root_dus_update_bytes = max(
+                    fi.root_dus_update_bytes or 0.0, upd)
+            for o in _operands(ln):
+                uses.setdefault(o, []).append(ln)
+        for p in fi.param_order:
+            plines = uses.get(p, [])
+            if plines and all(_op_of(ln) in _SLICING_OPS for ln in plines):
+                fi.sliced_params[p] = True
+                fi.slice_bytes[p] = max(_lhs_bytes(ln) for ln in plines)
+        fusion_info[name] = fi
+
+    # ---- per-computation own costs + call edges ---------------------------
+    @dataclasses.dataclass
+    class CompCost:
+        flops: float = 0.0
+        bytes: float = 0.0
+        coll: dict = dataclasses.field(default_factory=dict)
+        calls: list = dataclasses.field(default_factory=list)
+
+    costs: dict[str, CompCost] = {}
+    line_charges: dict[str, list] = {}
+    for name, lines in comps.items():
+        c = CompCost()
+        charges = line_charges.setdefault(name, [])
+        for ln in lines:
+            _b0 = c.bytes
+            if " parameter(" in ln or "get-tuple-element(" in ln \
+                    or " constant(" in ln or " iota(" in ln \
+                    or " tuple(" in ln or " bitcast(" in ln:
+                continue
+            op = _op_of(ln)
+            is_coll = False
+            for coll in _COLLECTIVES:
+                if re.search(rf"\b{coll}(?:-start)?\(", ln):
+                    ob = _lhs_bytes(ln)
+                    gs = _group_size(ln)
+                    if coll == "all-gather":
+                        ob /= max(gs, 1)
+                    elif coll == "reduce-scatter":
+                        ob *= gs
+                    c.coll[coll] = c.coll.get(coll, 0.0) + ob
+                    c.bytes += 2 * ob  # in + out at the op boundary
+                    charges.append((2 * ob, ln[:140]))
+                    is_coll = True
+                    break
+            if is_coll:
+                continue
+            m = _CALLSITE_RE.search(ln)
+            if m and m.group(1) in ("while", "call", "conditional"):
+                called = _CALLED_RE.search(ln)
+                cond = _COND_RE.search(ln)
+                if called:
+                    c.calls.append((m.group(1), called.group(1),
+                                    cond.group(1) if cond else None))
+                continue
+            if op == "fusion":
+                called = _CALLED_RE.search(ln)
+                fi = fusion_info.get(called.group(1)) if called else None
+                extra = 0.0
+                if fi:
+                    opnds = _operands(ln)
+                    for i, _o in enumerate(opnds):
+                        if i < len(fi.param_order) and \
+                                fi.param_order[i] in fi.sliced_params:
+                            extra += fi.slice_bytes[fi.param_order[i]]
+                    c.flops += fi.dot_flops
+                if fi and fi.pure_convert:
+                    pass  # dtype-cast materialization: free on TPU
+                elif fi and fi.root_dus_update_bytes is not None:
+                    c.bytes += 2 * fi.root_dus_update_bytes + extra
+                else:
+                    c.bytes += 2 * _lhs_bytes(ln) + extra
+                charges.append((c.bytes - _b0, ln[:140]))
+                continue
+            if op == "dot":
+                c.flops += dot_flops(ln)
+                c.bytes += 2 * _lhs_bytes(ln)
+            elif op in ("dynamic-slice", "slice", "gather"):
+                c.bytes += 2 * _lhs_bytes(ln)  # reads+writes a slice's worth
+            elif op == "dynamic-update-slice":
+                ops_ = _operands(ln)
+                upd = (_shape_bytes(*shapes[ops_[1]])
+                       if len(ops_) > 1 and ops_[1] in shapes else 0.0)
+                c.bytes += 2 * upd
+            elif op == "scatter":
+                ops_ = _operands(ln)
+                upd = sum(_shape_bytes(*shapes[o]) for o in ops_[1:]
+                          if o in shapes)
+                c.bytes += 2 * upd
+            elif op in ("reshape", "copy-start", "copy-done", "convert"):
+                # convert: on TPU dtype casts fuse into the consuming op
+                # (mixed-precision dots are MXU-native); the CPU backend
+                # materializes them — a lowering artifact, not charged
+                pass
+            elif op:
+                c.bytes += 2 * _lhs_bytes(ln)
+            if c.bytes - _b0 > 0:
+                charges.append((c.bytes - _b0, ln[:140]))
+        costs[name] = c
+
+    # ---- while trip counts -------------------------------------------------
+    def trip_count(cond_name: str) -> int:
+        consts = []
+        for ln in comps.get(cond_name, []):
+            mm = _CONST_RE.search(ln)
+            if mm:
+                consts.append(int(mm.group(1)))
+        return max(consts) if consts else 1
+
+    memo: dict[str, tuple[float, float, dict]] = {}
+
+    def total(name: str) -> tuple[float, float, dict]:
+        if name in memo:
+            return memo[name]
+        c = costs.get(name, CompCost())
+        memo[name] = (c.flops, c.bytes, dict(c.coll))  # cycle guard
+        f, b = c.flops, c.bytes
+        coll = dict(c.coll)
+        for kind, called, cond in c.calls:
+            cf, cb, cc = total(called)
+            mult = trip_count(cond) if kind == "while" and cond else 1
+            f += cf * mult
+            b += cb * mult
+            for k2, v in cc.items():
+                coll[k2] = coll.get(k2, 0.0) + v * mult
+        memo[name] = (f, b, coll)
+        return memo[name]
+
+    entry = next((n for n in comps if n.startswith("main")), None)
+    if entry is None:
+        called_set = {c2 for cc in costs.values() for _, c2, _ in cc.calls}
+        entry = next((n for n in comps if n not in called_set),
+                     next(iter(comps)))
+    f, b, coll = total(entry)
+    coll["total"] = sum(coll.values())
+    out = {"flops": f, "bytes": b, "collectives": coll, "entry": entry}
+    if detail:
+        mults: dict[str, float] = {}
+
+        def walk(name, m):
+            mults[name] = mults.get(name, 0) + m
+            for kind, called, cond in costs.get(name, CompCost()).calls:
+                walk(called,
+                     m * (trip_count(cond) if kind == "while" and cond
+                          else 1))
+
+        walk(entry, 1)
+        out["percomp"] = {
+            n: {"flops": costs[n].flops, "bytes": costs[n].bytes,
+                "mult": mults.get(n, 0),
+                "top_lines": sorted(line_charges.get(n, []),
+                                    reverse=True)[:6]}
+            for n in comps
+        }
+        out["_costs"] = costs
+    return out

@@ -1,0 +1,158 @@
+"""Serving engine: prefill + decode with a continuous-batching scheduler.
+
+`ServeEngine` owns compiled prefill/decode steps (fixed shapes, compiled
+once) and a slot-based KV cache: requests are admitted into free batch
+slots as others finish (continuous batching), greedy or temperature
+sampling per slot. Per-request bookkeeping is host-side; all device steps
+are fixed-shape so the engine never recompiles mid-flight — the property
+that matters at fleet scale.
+
+The decode step is the artifact the `decode_*` / `long_*` dry-run shapes
+lower: one new token against a (B, S, ...) cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import LM
+
+# cache-leaf base ranks (without scan-stacking); leading extra axes are
+# layer stacking, the batch axis sits right after them
+_BASE_RANK = {"k": 4, "v": 4, "cross_k": 4, "cross_v": 4, "ckv": 3, "kr": 3,
+              "conv": 3, "ssm": 3, "wkv": 4, "tm_last": 2, "cm_last": 2}
+
+
+def _batch_axis(path, leaf) -> int:
+    name = [getattr(k, "key", str(k)) for k in path][-1]
+    return leaf.ndim - _BASE_RANK.get(name, leaf.ndim)
+
+
+def merge_cache_slot(new: Any, old: Any, slot: int) -> Any:
+    """Take slot `slot` (batch axis) from `new`, everything else from `old`."""
+
+    def one(path, n, o):
+        ax = _batch_axis(path, n)
+        idx = [slice(None)] * n.ndim
+        idx[ax] = slice(slot, slot + 1)
+        return jax.lax.dynamic_update_slice_in_dim(
+            o, jax.lax.slice_in_dim(n, slot, slot + 1, axis=ax), slot, axis=ax)
+
+    return jax.tree_util.tree_map_with_path(one, new, old)
+
+
+def make_serve_steps(lm: LM, *, jit: bool = True):
+    """Returns (prefill_step, decode_step) pure fns.
+
+    prefill_step(params, tokens, caches)            -> (last_logits, caches)
+    decode_step(params, token, caches, cache_len)   -> (logits, caches)
+    """
+
+    def prefill_step(params, tokens, caches, enc_input=None):
+        logits, caches, _ = lm.forward(
+            params, tokens, mode="prefill", caches=caches,
+            cache_len=jnp.int32(0), enc_input=enc_input)
+        return logits[:, -1], caches
+
+    def decode_step(params, token, caches, cache_len):
+        logits, caches, _ = lm.forward(
+            params, token, mode="decode", caches=caches, cache_len=cache_len)
+        return logits[:, 0], caches
+
+    if jit:
+        prefill_step = jax.jit(prefill_step)
+        decode_step = jax.jit(decode_step)
+    return prefill_step, decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (plen,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Slot-based continuous batching over fixed-shape compiled steps."""
+
+    def __init__(self, lm: LM, params: Any, *, slots: int, max_seq: int,
+                 prefill_len: int, temperature: float = 0.0, seed: int = 0):
+        self.lm = lm
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.prefill_len = prefill_len
+        self.temperature = temperature
+        self.rng = np.random.default_rng(seed)
+        self.prefill_step, self.decode_step = make_serve_steps(lm)
+        self.caches = lm.init_cache(slots, max_seq)
+        self.lengths = np.zeros(slots, np.int32)
+        self.active: list[Optional[Request]] = [None] * slots
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.temperature <= 0:
+            return int(np.argmax(logits))
+        p = np.exp((logits - logits.max()) / self.temperature)
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = req.prompt[-self.prefill_len:]
+            pad = self.prefill_len - len(prompt)
+            tokens = np.zeros((self.slots, self.prefill_len), np.int32)
+            tokens[slot, pad:] = prompt
+            logits, new_caches = self.prefill_step(
+                self.params, jnp.asarray(tokens), self.caches)
+            # keep only this slot's freshly prefetched cache rows
+            self.caches = merge_cache_slot(new_caches, self.caches, slot)
+            req.out.append(self._sample(np.asarray(logits)[slot]))
+            self.active[slot] = req
+            self.lengths[slot] = self.prefill_len
+
+    def _step_decode(self) -> None:
+        tok = np.zeros((self.slots, 1), np.int32)
+        for s, req in enumerate(self.active):
+            if req is not None:
+                tok[s, 0] = req.out[-1]
+        # per-slot cache lengths: slots admitted at different times decode
+        # against their own positions (vector cache_len)
+        logits, self.caches = self.decode_step(
+            self.params, jnp.asarray(tok),
+            self.caches, jnp.asarray(self.lengths, jnp.int32))
+        logits = np.asarray(logits)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(self._sample(logits[s]))
+            self.lengths[s] += 1
+            if len(req.out) >= req.max_new or \
+                    self.lengths[s] >= self.max_seq - 1:
+                req.done = True
+                self.finished.append(req)
+                self.active[s] = None
+                self.lengths[s] = 0
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.queue or any(a is not None for a in self.active)) \
+                and steps < max_steps:
+            self._admit()
+            if any(a is not None for a in self.active):
+                self._step_decode()
+            steps += 1
+        return self.finished

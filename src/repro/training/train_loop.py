@@ -1,0 +1,126 @@
+"""Training step: loss -> grads -> AdamW, with microbatch gradient
+accumulation, remat, and optional int8 error-feedback gradient compression
+on the cross-pod data-parallel reduction.
+
+The returned `train_step(params, opt_state, batch, compress_state)` is a
+pure function suitable for jax.jit with in/out shardings (launch/train.py
+and launch/dryrun.py own the pjit wrapping).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import LM
+from repro.optim.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatches: int = 1  # gradient accumulation steps per train step
+    remat: str = "dots"  # none | dots | full
+    grad_compression: bool = False  # int8 error-feedback DP reduction
+
+
+def _int8_compress(g: jax.Array):
+    """Error-feedback int8 quantization for gradient all-reduce volume.
+
+    Returns (q, scale). Dequant: q * scale. The residual (g - deq) is the
+    error-feedback term the caller folds into the next step.
+    """
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _compress_tree(grads, err):
+    """Quantize grads (+error feedback), return (deq_grads, new_err)."""
+    def one(g, e):
+        if not jnp.issubdtype(g.dtype, jnp.floating):
+            return g, e
+        gf = g.astype(jnp.float32) + e
+        q, s = _int8_compress(gf)
+        deq = q.astype(jnp.float32) * s
+        return deq, gf - deq
+
+    out = jax.tree.map(one, grads, err)
+    deq = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_err
+
+
+def init_compress_state(params):
+    return jax.tree.map(
+        lambda p: (jnp.zeros_like(p, dtype=jnp.float32)
+                   if jnp.issubdtype(p.dtype, jnp.inexact)
+                   else jnp.zeros((), jnp.int8)), params)
+
+
+def make_train_step(lm: LM, tcfg: TrainConfig):
+    """Builds train_step(params, opt_state, batch [, compress_err])."""
+
+    def loss_fn(params, batch):
+        loss, parts = lm.loss(params, batch, remat=tcfg.remat)
+        return loss, parts
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True, allow_int=True)
+
+    def accumulate(params, batch):
+        if tcfg.microbatches == 1:
+            (loss, parts), grads = grad_fn(params, batch)
+            return loss, parts, grads
+        mb = tcfg.microbatches
+        split = jax.tree.map(
+            lambda x: x.reshape(mb, x.shape[0] // mb, *x.shape[1:]), batch)
+
+        def body(carry, mbatch):
+            acc, loss_sum = carry
+            (loss, parts), grads = grad_fn(params, mbatch)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32)
+                if jnp.issubdtype(g.dtype, jnp.floating) else a,
+                acc, grads)
+            return (acc, loss_sum + loss), parts
+
+        zero = jax.tree.map(
+            lambda p: (jnp.zeros(p.shape, jnp.float32)
+                       if jnp.issubdtype(p.dtype, jnp.inexact)
+                       else jnp.zeros((), jnp.int8)), params)
+        (acc, loss_sum), parts = jax.lax.scan(body, (zero, 0.0), split)
+        grads = jax.tree.map(
+            lambda g: g / mb if jnp.issubdtype(g.dtype, jnp.floating) else g,
+            acc)
+        parts = jax.tree.map(lambda x: x[-1], parts)
+        return loss_sum / mb, parts, grads
+
+    def train_step(params, opt_state, batch, compress_err=None):
+        loss, parts, grads = accumulate(params, batch)
+        new_err = compress_err
+        if tcfg.grad_compression:
+            assert compress_err is not None
+            grads, new_err = _compress_tree(grads, compress_err)
+        params, opt_state, om = adamw_update(tcfg.opt, params, grads,
+                                             opt_state)
+        metrics = {"loss": loss, **parts, **om}
+        if tcfg.grad_compression:
+            return params, opt_state, new_err, metrics
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(lm: LM, key: jax.Array, tcfg: TrainConfig,
+                     param_dtype=jnp.float32):
+    params = lm.init(key, param_dtype=param_dtype)
+    opt_state = adamw_init(params)
+    if tcfg.grad_compression:
+        return params, opt_state, init_compress_state(params)
+    return params, opt_state

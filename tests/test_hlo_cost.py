@@ -1,0 +1,79 @@
+"""Validation of the trip-count-aware HLO cost analyzer."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops_exact():
+    x = jnp.zeros((256, 512))
+    w = jnp.zeros((512, 128))
+    res = analyze_hlo(_compiled_text(lambda x: x @ w, x))
+    assert res["flops"] == 2 * 256 * 512 * 128
+
+
+def test_scan_multiplies_by_trip_count():
+    w = jnp.zeros((256, 256))
+    x = jnp.zeros((256, 256))
+
+    def f(x):
+        return jax.lax.scan(lambda c, _: (c @ w, None), x, None,
+                            length=12)[0]
+
+    res = analyze_hlo(_compiled_text(f, x))
+    one = 2 * 256 ** 3
+    assert res["flops"] == pytest.approx(12 * one, rel=1e-6), \
+        res["flops"] / one
+
+
+def test_nested_scan_multiplies_both_levels():
+    w = jnp.zeros((128, 128))
+    x = jnp.zeros((128, 128))
+
+    def inner(x):
+        return jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=5)[0]
+
+    def outer(x):
+        return jax.lax.scan(lambda c, _: (inner(c), None), x, None,
+                            length=3)[0]
+
+    res = analyze_hlo(_compiled_text(outer, x))
+    one = 2 * 128 ** 3
+    assert res["flops"] == pytest.approx(15 * one, rel=1e-6), \
+        res["flops"] / one
+
+
+def test_matches_xla_on_loop_free_program():
+    """Sanity: within 2x of XLA's own numbers when there are no loops."""
+    x = jnp.zeros((512, 512))
+    w1 = jnp.zeros((512, 1024))
+    w2 = jnp.zeros((1024, 512))
+
+    def f(x):
+        return jax.nn.relu(x @ w1) @ w2
+
+    compiled = jax.jit(f).lower(x).compile()
+    xla = compiled.cost_analysis()
+    res = analyze_hlo(compiled.as_text())
+    assert res["flops"] == pytest.approx(float(xla["flops"]), rel=0.05)
+
+
+def test_grad_of_scan_counts_fwd_and_bwd():
+    w = jnp.zeros((64, 64))
+    x = jnp.zeros((8, 64))
+
+    def loss(w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return jnp.sum(y * y)
+
+    res = analyze_hlo(_compiled_text(jax.grad(loss), w))
+    one_fwd = 2 * 8 * 64 * 64
+    # fwd scan (7x) + bwd scan (7x, two matmuls each: dx and dw)
+    assert res["flops"] >= 20 * one_fwd, res["flops"] / one_fwd

@@ -1,0 +1,77 @@
+"""Validation of the paper's §IV claims against our reproduction.
+
+Claims (IndexMAC, 2023):
+  Fig. 5 — avg total speedup 1.95x (1:4) and 1.88x (2:4)
+  Fig. 6 — avg memory-access reduction 48% (1:4), 65% (2:4); the
+           reduction is LARGER at 2:4
+  Fig. 4 — per-layer speedups within ~1.6-2.2x
+
+Our instruction/traffic model is calibrated with ONE constant
+(stall_indexed); the assertions below check the *predicted* quantities
+against the paper's bands. The 1:4-vs-2:4 speedup ordering (a 3.7%
+second-order effect in the paper) is not captured by a counting model and
+is documented in EXPERIMENTS.md.
+"""
+import numpy as np
+import pytest
+
+from benchmarks import fig5_cnn_totals, fig6_memory_traffic
+from benchmarks.cnn_specs import CNNS, resnet50_gemms
+from repro.core.cost_model import VectorCoreModel
+from repro.core.sparsity import NMConfig
+
+
+def test_fig5_total_speedups_in_band():
+    res = fig5_cnn_totals.run()
+    for (cnn, tag), sp in res.items():
+        assert 1.6 < sp < 2.2, (cnn, tag, sp)
+    avg_14 = np.mean([res[(c, "1:4")] for c in CNNS])
+    avg_24 = np.mean([res[(c, "2:4")] for c in CNNS])
+    # paper: 1.95 / 1.88; combined average within 5%
+    combined = (avg_14 + avg_24) / 2
+    assert abs(combined - 1.915) / 1.915 < 0.05, (avg_14, avg_24)
+
+
+def test_fig6_memory_reduction_matches_paper():
+    res = fig6_memory_traffic.run()
+    avg_14 = np.mean([res[(c, "1:4")] for c in CNNS])
+    avg_24 = np.mean([res[(c, "2:4")] for c in CNNS])
+    assert 0.35 < avg_14 < 0.55, avg_14  # paper: 0.48
+    assert 0.55 < avg_24 < 0.75, avg_24  # paper: 0.65
+    assert avg_24 > avg_14  # paper's key ordering (Fig. 6)
+
+
+def test_fig4_per_layer_band():
+    model = VectorCoreModel()
+    for cfg, lo_p, hi_p in ((NMConfig(1, 4), 1.60, 2.15),
+                            (NMConfig(2, 4), 1.63, 1.99)):
+        sp = [model.speedup(m, k, n, cfg)
+              for _, m, k, n in resnet50_gemms()]
+        # every modeled layer inside a slightly widened paper band
+        assert min(sp) > lo_p - 0.15 and max(sp) < hi_p + 0.15, (
+            cfg.tag, min(sp), max(sp))
+
+
+def test_speedup_monotone_in_stall():
+    """More exposed memory latency -> more benefit from vindexmac (the
+    mechanism's premise: it eliminates indexed loads)."""
+    m, k, n = 256, 1152, 784
+    cfg = NMConfig(2, 4)
+    s_fast = VectorCoreModel(stall_indexed=1.0).speedup(m, k, n, cfg)
+    s_slow = VectorCoreModel(stall_indexed=8.0).speedup(m, k, n, cfg)
+    assert s_slow > s_fast
+
+
+def test_tpu_kernel_decode_gemms_memory_bound_win():
+    """Beyond-paper: on v5e constants, decode-shaped GEMMs are memory-bound
+    and the compressed kernel's roofline time improves by ~the byte
+    ratio."""
+    from repro.core.cost_model import tpu_dense_cost, tpu_indexmac_cost
+
+    cfg = NMConfig(2, 4)
+    m, k, n = 16, 4096, 11008  # yi-9b FFN at decode
+    dense = tpu_dense_cost(m, k, n)
+    sp = tpu_indexmac_cost(m, k, n, cfg)
+    assert dense.t_mem() > dense.t_compute()  # memory-bound
+    gain = dense.t_mem() / sp.t_mem()
+    assert 1.25 < gain < 1.4  # ~1/0.75 byte ratio (+x/out bytes)

@@ -1,0 +1,102 @@
+"""Unit + property tests for N:M sparsity primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparsity import (
+    NMConfig,
+    apply_mask,
+    check_nm_pattern,
+    compress_nm,
+    decompress_nm,
+    prune_mask_nm,
+    random_nm_matrix,
+)
+
+CFGS = [NMConfig(1, 2), NMConfig(1, 4), NMConfig(2, 4), NMConfig(2, 8), NMConfig(4, 8)]
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.tag)
+@pytest.mark.parametrize("axis", [0, 1])
+def test_prune_keeps_topn_magnitude(cfg, axis):
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 64))
+    mask = prune_mask_nm(w, cfg, axis=axis)
+    pruned = apply_mask(w, mask)
+    assert check_nm_pattern(pruned, cfg, axis=axis)
+    # every block keeps exactly n (no exact-zero inputs here)
+    wl = np.moveaxis(np.asarray(mask), axis, -1)
+    blocks = wl.reshape(*wl.shape[:-1], -1, cfg.m)
+    assert (blocks.sum(-1) == cfg.n).all()
+    # kept entries are the largest-|.| in each block
+    wa = np.moveaxis(np.abs(np.asarray(w)), axis, -1).reshape(*blocks.shape)
+    kept_min = np.where(blocks, wa, np.inf).min(-1)
+    dropped_max = np.where(~blocks, wa, -np.inf).max(-1)
+    assert (kept_min >= dropped_max - 1e-7).all()
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.tag)
+@pytest.mark.parametrize("axis", [0, 1])
+def test_compress_decompress_roundtrip(cfg, axis):
+    w = random_nm_matrix(jax.random.PRNGKey(1), (48, 32), cfg, axis=axis)
+    vals, idx = compress_nm(w, cfg, axis=axis)
+    assert idx.dtype == jnp.int8
+    assert int(idx.max()) < cfg.m and int(idx.min()) >= 0
+    back = decompress_nm(vals, idx, cfg, axis=axis)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+def test_compress_handles_underfull_blocks():
+    cfg = NMConfig(2, 4)
+    w = jnp.zeros((8, 4)).at[0, 1].set(3.0).at[3, 0].set(-1.0)  # <=1 nz per block
+    vals, idx = compress_nm(w, cfg, axis=1)
+    back = decompress_nm(vals, idx, cfg, axis=1)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w))
+
+
+def test_bad_config_rejected():
+    with pytest.raises(ValueError):
+        NMConfig(4, 4)
+    with pytest.raises(ValueError):
+        NMConfig(0, 4)
+    with pytest.raises(ValueError):
+        prune_mask_nm(jnp.zeros((3, 5)), NMConfig(2, 4), axis=1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_m=st.sampled_from([(1, 2), (1, 4), (2, 4), (2, 8)]),
+    rows=st.integers(1, 6),
+    blocks=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_roundtrip_and_pattern(n_m, rows, blocks, seed):
+    """For any matrix pruned to N:M: pattern holds, compression is lossless,
+    and the compressed form is exactly n/m the dense element count."""
+    cfg = NMConfig(*n_m)
+    k = blocks * cfg.m
+    w = jax.random.normal(jax.random.PRNGKey(seed), (rows, k))
+    pruned = apply_mask(w, prune_mask_nm(w, cfg, axis=1))
+    assert check_nm_pattern(pruned, cfg, axis=1)
+    vals, idx = compress_nm(pruned, cfg, axis=1)
+    assert vals.shape == (rows, k * cfg.n // cfg.m)
+    back = decompress_nm(vals, idx, cfg, axis=1)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(pruned), atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_m=st.sampled_from([(1, 4), (2, 4)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_masked_matmul_equals_compressed_matmul(n_m, seed):
+    """y computed from the masked-dense weight equals y from (vals, idx)."""
+    cfg = NMConfig(*n_m)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w = random_nm_matrix(k1, (32, 16), cfg, axis=0)
+    x = jax.random.normal(k2, (8, 32))
+    vals, idx = compress_nm(w, cfg, axis=0)
+    y1 = x @ w
+    y2 = x @ decompress_nm(vals, idx, cfg, axis=0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6, atol=1e-6)
