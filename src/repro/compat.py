@@ -1,0 +1,228 @@
+"""Single resolution point for version-drifted JAX APIs.
+
+The repo targets the current JAX while staying runnable on the 0.4.x line
+(the oldest toolchain we CI against). Every API whose name or home moved
+between 0.4.x and 0.5.x is resolved HERE, once, at import time — the rest
+of the codebase imports from ``repro.compat`` and never touches the
+drifting names directly (enforced by tests/test_compat.py).
+
+Resolved surface:
+
+* ``get_abstract_mesh()`` — 0.5.x ``jax.sharding.get_abstract_mesh``;
+  on 0.4.x falls back to the thread-local physical mesh's abstract view.
+  Returns ``None`` when no mesh context is active (callers treat that as
+  "hints are no-ops").
+* ``set_mesh(mesh)`` — context manager. 0.5.x ``jax.set_mesh`` /
+  ``jax.sharding.use_mesh``; on 0.4.x ``with mesh:`` (which is what feeds
+  the 0.4.x ``get_abstract_mesh`` fallback above, so the pair is
+  self-consistent on both lines).
+* ``make_mesh(shape, axes)`` — ``jax.make_mesh`` where present, else
+  built from ``mesh_utils.create_device_mesh``.
+* ``manual_axis_in(mesh)`` — True when any mesh axis is Manual
+  (inside shard_map). 0.4.x meshes have no axis_types: always False.
+* ``tpu_compiler_params(**kw)`` — Pallas-TPU compiler params object:
+  ``pltpu.CompilerParams`` (>= 0.5) or ``pltpu.TPUCompilerParams``
+  (0.4.x), whichever the installed Pallas exports.
+* ``resolved()`` — {name: "how it resolved"} for diagnostics and the
+  compat regression test.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional, Sequence
+
+import jax
+
+_RESOLVED: dict[str, str] = {}
+
+
+def jax_version() -> tuple[int, ...]:
+    return tuple(int(p) for p in jax.__version__.split(".")[:3])
+
+
+# ---------------------------------------------------------------------------
+# mesh context
+# ---------------------------------------------------------------------------
+
+if hasattr(jax.sharding, "get_abstract_mesh"):
+    _RESOLVED["get_abstract_mesh"] = "jax.sharding.get_abstract_mesh"
+
+    def get_abstract_mesh():
+        """Active (abstract) mesh, or None outside any mesh context."""
+        m = jax.sharding.get_abstract_mesh()
+        return m if m is not None and m.shape_tuple else None
+
+else:  # 0.4.x: the active mesh lives in the thread-local resource env
+    _RESOLVED["get_abstract_mesh"] = "jax._src.mesh.thread_resources"
+
+    def get_abstract_mesh():
+        """Active mesh, or None outside any mesh context.
+
+        Returns the *physical* mesh on this line: 0.4.x shard_map and
+        with_sharding_constraint are only fully supported against it
+        (AbstractMesh existed but plumbing it through jit trips XLA's
+        sharding-remover pass).
+        """
+        from jax._src import mesh as mesh_lib
+
+        pm = mesh_lib.thread_resources.env.physical_mesh
+        if pm is None or pm.empty:
+            return None
+        return pm
+
+
+if hasattr(jax, "set_mesh"):
+    _RESOLVED["set_mesh"] = "jax.set_mesh"
+    _set_mesh_impl = jax.set_mesh
+elif hasattr(jax.sharding, "use_mesh"):
+    _RESOLVED["set_mesh"] = "jax.sharding.use_mesh"
+    _set_mesh_impl = jax.sharding.use_mesh
+else:
+    _RESOLVED["set_mesh"] = "with-mesh-context (0.4.x)"
+
+    @contextlib.contextmanager
+    def _set_mesh_impl(mesh):
+        with mesh:
+            yield
+
+
+def set_mesh(mesh):
+    """Context manager activating `mesh` so shard hints see it."""
+    return _set_mesh_impl(mesh)
+
+
+if hasattr(jax, "make_mesh"):
+    _RESOLVED["make_mesh"] = "jax.make_mesh"
+
+    def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+        return jax.make_mesh(tuple(shape), tuple(axes))
+
+else:
+    _RESOLVED["make_mesh"] = "mesh_utils.create_device_mesh"
+
+    def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+        from jax.experimental import mesh_utils
+
+        devices = mesh_utils.create_device_mesh(tuple(shape))
+        return jax.sharding.Mesh(devices, tuple(axes))
+
+
+# Alias without the drifted name: call sites outside this module use
+# `compat.active_mesh()` so a grep for the moved API hits only this file.
+def active_mesh():
+    return get_abstract_mesh()
+
+
+def manual_axis_in(mesh: Any) -> bool:
+    """True iff any axis of `mesh` is Manual (inside a shard_map region).
+
+    0.5.x meshes carry axis_types; on 0.4.x shard_map instead binds the
+    mesh axes into the tracing axis env, so "any mesh axis currently
+    bound" is the equivalent signal. Missing either detection would let
+    shard hints emit with_sharding_constraint inside manual regions —
+    which trips XLA's sharding-remover on the 0.4.x line.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    types = getattr(mesh, "axis_types", None)
+    if axis_type is not None and types is not None:
+        try:
+            return any(t == axis_type.Manual for t in types)
+        except TypeError:
+            return False
+    try:
+        from jax._src import core as _core
+
+        bound = _core.get_axis_env().axis_sizes
+    except (ImportError, AttributeError):
+        return False
+    return any(a in bound for a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+    _RESOLVED["shard_map"] = "jax.shard_map"
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+
+else:  # 0.4.x: experimental home, and the check kwarg is `check_rep`
+    _RESOLVED["shard_map"] = "jax.experimental.shard_map"
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )
+
+
+# ---------------------------------------------------------------------------
+# compiled-artifact introspection
+# ---------------------------------------------------------------------------
+
+_RESOLVED["cost_analysis"] = "normalized (dict | [dict])"
+
+
+def cost_analysis(compiled) -> dict:
+    """`Compiled.cost_analysis()` as a flat dict.
+
+    0.4.x returns a one-element list of dicts (per device program), newer
+    JAX returns the dict itself.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+# ---------------------------------------------------------------------------
+# Pallas TPU compiler params
+# ---------------------------------------------------------------------------
+
+
+def _resolve_tpu_params_cls():
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:  # pallas not available at all
+        return None, "unavailable"
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            return cls, f"pltpu.{name}"
+    return None, "unavailable"
+
+
+_TPU_PARAMS_CLS, _how = _resolve_tpu_params_cls()
+_RESOLVED["tpu_compiler_params"] = _how
+
+
+def tpu_compiler_params(**kwargs) -> Optional[Any]:
+    """Pallas-TPU compiler params under whichever name this JAX exports.
+
+    Drops kwargs the installed class doesn't know (field sets drifted
+    too); returns None when Pallas TPU params are unavailable, which
+    ``pallas_call`` accepts as "no params".
+    """
+    if _TPU_PARAMS_CLS is None:
+        return None
+    try:
+        return _TPU_PARAMS_CLS(**kwargs)
+    except TypeError:
+        import dataclasses
+
+        known = {f.name for f in dataclasses.fields(_TPU_PARAMS_CLS)}
+        return _TPU_PARAMS_CLS(
+            **{k: v for k, v in kwargs.items() if k in known}
+        )
+
+
+def resolved() -> dict[str, str]:
+    """How each drifted API resolved on the installed JAX (diagnostics)."""
+    return dict(_RESOLVED)

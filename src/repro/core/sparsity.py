@@ -30,6 +30,7 @@ __all__ = [
     "decompress_nm",
     "check_nm_pattern",
     "random_nm_matrix",
+    "pad_compressed_kn",
 ]
 
 
@@ -137,6 +138,27 @@ def decompress_nm(
     dense = jnp.einsum("...bn,...bnm->...bm", v, onehot)
     dense = dense.reshape(*lead, nblocks * cfg.m)
     return jnp.moveaxis(dense, -1, axis)
+
+
+def pad_compressed_kn(
+    values: jax.Array, idx: jax.Array, *, kc_pad: int, n_pad: int
+):
+    """Zero-pad a compressed (Kc, N) pair to (kc_pad, n_pad).
+
+    Appended rows are whole zero blocks (callers pad K by multiples of M,
+    so Kc grows by multiples of N) and appended columns are zero output
+    channels; a zero value makes its index a don't-care, so the padded
+    pair decompresses to the original W bordered by zeros.
+    """
+    kc, nn = values.shape
+    if kc_pad < kc or n_pad < nn:
+        raise ValueError(
+            f"pad target ({kc_pad}, {n_pad}) smaller than ({kc}, {nn})"
+        )
+    if (kc_pad, n_pad) == (kc, nn):
+        return values, idx
+    pad = ((0, kc_pad - kc), (0, n_pad - nn))
+    return jnp.pad(values, pad), jnp.pad(idx, pad)
 
 
 def check_nm_pattern(w: jax.Array | np.ndarray, cfg: NMConfig, axis: int = 0) -> bool:

@@ -1,3 +1,10 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom-kernel layer for the paper's compute hot spot (N:M spmm).
+
+Structure:
+  registry.py  — named implementations per op, priority dispatch, records
+  padding.py   — shape normalization (pad-to-tileable, slice back)
+  autotune.py  — per-shape block sweep with a persistent on-disk cache
+  indexmac/    — TPU adaptation: decompress-in-VMEM -> MXU (the fast path)
+  indexmac_gather/ — literal vindexmac port (faithfulness artifact)
+"""
+from repro.kernels import registry  # noqa: F401  (re-export for callers)

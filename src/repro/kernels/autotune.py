@@ -1,0 +1,205 @@
+"""Block-size autotuner for the N:M Pallas kernel, with a persistent cache.
+
+The follow-up paper (arXiv 2501.10189) shows the speedup of structured-
+sparse matmul hinges on picking the right tiling per layer shape — one
+fixed block triple leaves decode-shaped GEMMs memory-starved and
+prefill-shaped ones pipeline-stalled. This module sweeps candidate
+``(block_m, block_n, block_k)`` triples per problem key and remembers the
+winner on disk so the sweep is paid once per shape per machine.
+
+Cache
+-----
+JSON at ``$REPRO_AUTOTUNE_CACHE`` (default
+``~/.cache/repro/autotune.json``), one entry per key::
+
+    {"v1|backend|dtype|n:m|MxKxN": [block_m, block_n, block_k], ...}
+
+Lookup policy in the hot path (``nm_matmul`` with ``block=None``):
+cache hit wins; on a miss the default triple is used unless
+``REPRO_AUTOTUNE=1``, in which case the sweep runs inline and the result
+is persisted. The serving engine and the roofline benchmark call
+:func:`ensure_tuned` explicitly to pre-pay sweeps for their shapes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import NMConfig
+from repro.kernels.padding import plan_nm_matmul
+
+DEFAULT_BLOCK = (256, 256, 2048)
+_CACHE_VERSION = "v1"
+
+_LOCK = threading.Lock()
+_MEM: dict[str, tuple] = {}
+_LOADED_FROM: Optional[str] = None
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune.json"),
+    )
+
+
+def _key(m: int, n: int, k: int, cfg: NMConfig, dtype, backend: str) -> str:
+    return f"{_CACHE_VERSION}|{backend}|{jnp.dtype(dtype).name}|{cfg.tag}|{m}x{k}x{n}"
+
+
+def _load_locked() -> None:
+    global _LOADED_FROM
+    path = cache_path()
+    if _LOADED_FROM == path:
+        return
+    _MEM.clear()
+    _LOADED_FROM = path
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        for key, blk in raw.items():
+            if isinstance(blk, list) and len(blk) == 3:
+                _MEM[key] = tuple(int(b) for b in blk)
+    except (OSError, ValueError):
+        pass  # missing/corrupt cache == empty cache
+
+
+def _save_locked() -> None:
+    path = cache_path()
+    try:
+        # merge-on-save: another process may have persisted entries since
+        # our load — re-read and overlay so concurrent tuners append
+        # rather than erase each other's winners
+        try:
+            with open(path) as f:
+                for key, blk in json.load(f).items():
+                    if key not in _MEM and isinstance(blk, list) and len(blk) == 3:
+                        _MEM[key] = tuple(int(b) for b in blk)
+        except (OSError, ValueError):
+            pass
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({k: list(v) for k, v in sorted(_MEM.items())}, f, indent=1)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS: keep the in-memory cache only
+
+
+def clear_memory_cache() -> None:
+    """Forget loaded entries (tests repoint REPRO_AUTOTUNE_CACHE)."""
+    global _LOADED_FROM
+    with _LOCK:
+        _MEM.clear()
+        _LOADED_FROM = None
+
+
+def cached_block(m: int, n: int, k: int, cfg: NMConfig, dtype) -> Optional[tuple]:
+    backend = jax.default_backend()
+    with _LOCK:
+        _load_locked()
+        return _MEM.get(_key(m, n, k, cfg, dtype, backend))
+
+
+def candidate_blocks(m: int, n: int, k: int, cfg: NMConfig) -> list[tuple]:
+    """Plan-feasible, deduplicated candidate triples for this problem.
+
+    On CPU the kernel runs in interpret mode (each probe is orders of
+    magnitude slower than compiled Mosaic), so the grid is trimmed — the
+    cache key carries the backend, so a CPU-tuned entry never shadows a
+    TPU sweep."""
+    if jax.default_backend() == "cpu":
+        grid_m, grid_n, grid_k = (8, 128), (128, 256), (256, 1024)
+    else:
+        grid_m, grid_n, grid_k = (8, 64, 128, 256), (128, 256, 512), (
+            256, 512, 1024, 2048)
+    seen, out = set(), []
+    for bm in grid_m:
+        for bn in grid_n:
+            for bk in grid_k:
+                plan = plan_nm_matmul(m, n, k, cfg, (bm, bn, bk))
+                if plan is None or plan.block in seen:
+                    continue
+                seen.add(plan.block)
+                out.append(plan.block)
+    return out
+
+
+def tune(
+    m: int,
+    n: int,
+    k: int,
+    cfg: NMConfig,
+    dtype=jnp.float32,
+    candidates: Optional[Sequence[tuple]] = None,
+    repeats: int = 3,
+) -> tuple:
+    """Time every candidate on real operands; persist and return the winner."""
+    from repro.core.sparsity import compress_nm, random_nm_matrix
+    from repro.kernels.indexmac.ops import run_pallas_padded
+
+    backend = jax.default_backend()
+    interpret = backend == "cpu"
+    kk = -(-k // cfg.m) * cfg.m  # operand K must hold whole blocks
+    w = random_nm_matrix(jax.random.PRNGKey(0), (kk, n), cfg, axis=0)
+    vals, idx = compress_nm(w, cfg, axis=0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, kk)).astype(dtype)
+    vals = vals.astype(dtype)
+
+    best, best_t = None, float("inf")
+    for block in candidates or candidate_blocks(m, n, kk, cfg):
+        plan = plan_nm_matmul(m, n, kk, cfg, block)
+        if plan is None:
+            continue
+        try:
+            run_pallas_padded(
+                x, vals, idx, cfg=cfg, plan=plan, interpret=interpret
+            ).block_until_ready()  # compile / warm up
+            t = min(
+                _time_once(run_pallas_padded, x, vals, idx, cfg, plan, interpret)
+                for _ in range(repeats)
+            )
+        except Exception:  # noqa: BLE001 — infeasible on this backend
+            continue
+        if t < best_t:
+            best, best_t = plan.block, t
+    if best is None:
+        best = plan_nm_matmul(m, n, kk, cfg, DEFAULT_BLOCK).block
+    with _LOCK:
+        _load_locked()
+        _MEM[_key(m, n, k, cfg, dtype, backend)] = best
+        _save_locked()
+    return best
+
+
+def _time_once(fn, x, vals, idx, cfg, plan, interpret) -> float:
+    t0 = time.perf_counter()
+    fn(x, vals, idx, cfg=cfg, plan=plan, interpret=interpret).block_until_ready()
+    return time.perf_counter() - t0
+
+
+def best_block(
+    m: int, n: int, k: int, cfg: NMConfig, dtype=jnp.float32
+) -> tuple:
+    """Hot-path lookup: cache hit, else sweep iff REPRO_AUTOTUNE=1, else
+    the default triple (clamped to the problem later by the pad plan)."""
+    hit = cached_block(m, n, k, cfg, dtype)
+    if hit is not None:
+        return hit
+    if os.environ.get("REPRO_AUTOTUNE") == "1":
+        return tune(m, n, k, cfg, dtype)
+    return DEFAULT_BLOCK
+
+
+def ensure_tuned(
+    m: int, n: int, k: int, cfg: NMConfig, dtype=jnp.float32
+) -> tuple:
+    """Sweep-if-missing, for callers that want to pre-pay (serving warmup,
+    benchmarks) regardless of REPRO_AUTOTUNE."""
+    return cached_block(m, n, k, cfg, dtype) or tune(m, n, k, cfg, dtype)

@@ -1,8 +1,17 @@
 """Public op for the indexmac kernel: `nm_matmul`.
 
-Dispatches to the Pallas kernel (interpret=True on CPU so the kernel body
-is validated here; compiled Mosaic on real TPUs) or the jnp reference, and
-defines the training backward:
+Dispatches through the kernel registry (`repro.kernels.registry`): the
+padded Pallas implementation normalizes arbitrary (M, K, N) up to a
+tileable geometry — zero-padding x and the compressed (vals, idx) pair
+and slicing the output — so real transformer shapes execute the kernel
+(interpret=True on CPU so the kernel body is validated here; compiled
+Mosaic on real TPUs) instead of silently falling back to the dense
+reference. Blocks come from the caller, the autotune cache, or the
+default triple, in that order. The reference implementation remains
+registered as the priority-0 fallback (use_kernel=False, or padding
+waste beyond REPRO_PAD_WASTE_LIMIT — e.g. single-token decode M=1).
+
+Training backward (unchanged by padding — it works on logical shapes):
 
   y     = x @ W,           W = decompress(vals, idx)
   dx    = dy @ W^T
@@ -15,17 +24,70 @@ masked-dense training in `repro/training`.
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.sparsity import NMConfig, decompress_nm
+from repro.kernels import autotune, registry
 from repro.kernels.indexmac.kernel import nm_spmm_pallas
 from repro.kernels.indexmac.ref import nm_matmul_ref
+from repro.kernels.padding import (
+    PadPlan,
+    pad_nm_operands,
+    pad_waste_limit,
+    plan_nm_matmul,
+)
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def run_pallas_padded(
+    x2: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    *,
+    cfg: NMConfig,
+    plan: PadPlan,
+    interpret: bool,
+) -> jax.Array:
+    """Pad operands to the plan, run the kernel, slice the logical output."""
+    xp, vp, ip = pad_nm_operands(x2, vals, idx, plan, cfg)
+    bm, bn, bk = plan.block
+    y = nm_spmm_pallas(
+        xp, vp, ip, cfg=cfg, block_m=bm, block_n=bn, block_k=bk,
+        interpret=interpret,
+    )
+    return y[: plan.m, : plan.n]
+
+
+def _pallas_supports(ctx: dict) -> Optional[str]:
+    if not ctx["use_kernel"]:
+        return "use_kernel=False"
+    plan = ctx["plan"]
+    if plan is None:
+        return "shape not normalizable"
+    limit = pad_waste_limit()
+    if plan.waste > limit:
+        return f"padding waste {plan.waste:.2f}x > limit {limit:.2f}x"
+    return None
+
+
+@registry.register("nm_matmul", "pallas_padded", priority=100,
+                   supports=_pallas_supports, uses_plan=True)
+def _run_pallas_impl(x2, vals, idx, *, cfg, plan, interpret):
+    return run_pallas_padded(
+        x2, vals, idx, cfg=cfg, plan=plan, interpret=interpret
+    )
+
+
+@registry.register("nm_matmul", "reference", priority=0)
+def _run_ref_impl(x2, vals, idx, *, cfg, plan, interpret):
+    return nm_matmul_ref(x2, vals, idx, cfg)
 
 
 @functools.partial(
@@ -37,15 +99,17 @@ def nm_matmul(
     idx: jax.Array,
     cfg: NMConfig,
     use_kernel: bool = True,
-    block: tuple[int, int, int] = (256, 256, 2048),
+    block: Optional[tuple[int, int, int]] = None,
 ) -> jax.Array:
-    """y = x @ decompress(vals, idx); x: (..., K), vals/idx: (Kc, N)."""
+    """y = x @ decompress(vals, idx); x: (..., K), vals/idx: (Kc, N).
+
+    ``block=None`` consults the autotune cache (see
+    ``repro.kernels.autotune``) and falls back to the default triple.
+    """
     return _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block)
 
 
 def _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block):
-    import os
-
     if os.environ.get("REPRO_GATHER_COMPRESSED") == "1":
         # Pin the compressed operands to (None, "model") so the FSDP
         # all-gather over "data" moves the COMPRESSED bytes (vals+idx,
@@ -60,23 +124,30 @@ def _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block):
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
     mm = x2.shape[0]
-    bm, bn, bk = block
     nn = vals.shape[1]
-    divisible = (
-        mm % min(bm, mm) == 0
-        and nn % min(bn, nn) == 0
-        and k % min(bk, k) == 0
-        and min(bk, k) % cfg.m == 0
-        and (vals.shape[0] * cfg.m) % cfg.n == 0
-    )
-    if use_kernel and divisible and mm >= 8:
-        y2 = nm_spmm_pallas(
-            x2, vals, idx, cfg=cfg,
-            block_m=min(bm, mm), block_n=min(bn, nn), block_k=min(bk, k),
-            interpret=_on_cpu(),
+    if vals.shape[0] * cfg.m != k * cfg.n:
+        raise ValueError(
+            f"vals rows {vals.shape[0]} inconsistent with K={k} and {cfg.tag}"
         )
-    else:
-        y2 = nm_matmul_ref(x2, vals, idx, cfg)
+    if idx.shape != vals.shape:
+        raise ValueError("idx/vals shape mismatch")
+    plan = None
+    if use_kernel:  # skip block resolution (cache I/O, possible inline
+        # sweep under REPRO_AUTOTUNE=1) when the kernel can't be taken
+        if block is None:
+            block = autotune.best_block(mm, nn, k, cfg, x.dtype)
+        plan = plan_nm_matmul(mm, nn, k, cfg, tuple(block))
+    ctx = {
+        "shape": (mm, k, nn),
+        "plan": plan,
+        "use_kernel": use_kernel,
+        "cfg": cfg,
+        "dtype": x.dtype,
+    }
+    y2 = registry.dispatch(
+        "nm_matmul", ctx, x2, vals, idx,
+        cfg=cfg, plan=plan, interpret=_on_cpu(),
+    )
     return y2.reshape(*lead, nn)
 
 

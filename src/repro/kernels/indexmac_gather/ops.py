@@ -1,11 +1,44 @@
-"""jit'd wrapper for the literal gather-port kernel (inference-only)."""
+"""jit'd wrapper for the literal gather-port kernel (inference-only).
+
+Routed through the kernel registry so dispatch decisions (Pallas gather
+port vs. jnp reference) land in the same inspectable record stream as
+`nm_matmul`. The gather port is a faithfulness artifact, not a perf
+path — shapes that don't tile exactly fall back to the reference rather
+than padding.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
 from repro.core.sparsity import NMConfig
+from repro.kernels import registry
 from repro.kernels.indexmac_gather.kernel import indexmac_gather_pallas
 from repro.kernels.indexmac_gather.ref import indexmac_gather_ref
+
+
+def _pallas_supports(ctx: dict) -> Optional[str]:
+    if not ctx["use_kernel"]:
+        return "use_kernel=False"
+    if not ctx["tileable"]:
+        return "shape not tileable (gather port does not pad)"
+    return None
+
+
+@registry.register("indexmac_gather", "pallas_gather", priority=100,
+                   supports=_pallas_supports)
+def _run_pallas(vals, idx, b, *, cfg, block):
+    bm, bn, bk = block
+    return indexmac_gather_pallas(
+        vals, idx, b, cfg=cfg, block_m=bm, block_n=bn, block_k=bk,
+        interpret=jax.default_backend() == "cpu",
+    )
+
+
+@registry.register("indexmac_gather", "reference", priority=0)
+def _run_ref(vals, idx, b, *, cfg, block):
+    return indexmac_gather_ref(vals, idx, b, cfg)
 
 
 def indexmac_gather_spmm(
@@ -20,9 +53,14 @@ def indexmac_gather_spmm(
     mr, kc = vals.shape
     k, nc = b.shape
     tileable = mr % bm == 0 and nc % bn == 0 and k % bk == 0 and bk % cfg.m == 0
-    if use_kernel and tileable:
-        return indexmac_gather_pallas(
-            vals, idx, b, cfg=cfg, block_m=bm, block_n=bn, block_k=bk,
-            interpret=jax.default_backend() == "cpu",
-        )
-    return indexmac_gather_ref(vals, idx, b, cfg)
+    ctx = {
+        "shape": (mr, k, nc),
+        "plan": None,
+        "use_kernel": use_kernel,
+        "tileable": tileable,
+        "cfg": cfg,
+        "dtype": b.dtype,
+    }
+    return registry.dispatch(
+        "indexmac_gather", ctx, vals, idx, b, cfg=cfg, block=block
+    )

@@ -1,0 +1,105 @@
+"""Shape normalization for the N:M Pallas kernel.
+
+The kernel needs M/N/K divisible by its blocks, block_k a multiple of the
+sparsity block M, and TPU-friendly tile granularity (sublane 8, lane 128).
+Real transformer shapes rarely oblige — so instead of falling back to the
+dense reference, the op pads up to the nearest tileable geometry:
+
+* x gets zero rows (M) and zero columns (K),
+* vals/idx get zero rows (whole compressed K-blocks) and zero columns (N),
+* the kernel output is sliced back to the logical (M, N).
+
+Zero-padding is exact: a zero value kills its index's contribution
+regardless of the index byte, zero x columns multiply zero W rows, and
+fp32 accumulation of exact zeros is lossless — the padded kernel result
+equals the unpadded reference bit-for-bit on the logical slice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparsity import NMConfig, pad_compressed_kn
+
+_SUBLANE = 8  # second-to-last dim granularity (fp32)
+_LANE = 128  # last dim granularity
+
+# Above this ratio of padded to logical output work the dense reference
+# is assumed cheaper than the mostly-empty kernel launch.
+_DEFAULT_WASTE_LIMIT = 4.0
+
+
+def pad_waste_limit() -> float:
+    return float(os.environ.get("REPRO_PAD_WASTE_LIMIT", _DEFAULT_WASTE_LIMIT))
+
+
+def _round_up(a: int, b: int) -> int:
+    return -(-a // b) * b
+
+
+@dataclasses.dataclass(frozen=True)
+class PadPlan:
+    """Resolved geometry: clamped blocks + padded dims for one call."""
+
+    m: int
+    n: int
+    k: int
+    pm: int
+    pn: int
+    pk: int
+    block: tuple  # (block_m, block_n, block_k), each divides its padded dim
+
+    @property
+    def padded_shape(self) -> tuple:
+        return (self.pm, self.pk, self.pn)
+
+    @property
+    def needs_padding(self) -> bool:
+        return (self.pm, self.pn, self.pk) != (self.m, self.n, self.k)
+
+    @property
+    def waste(self) -> float:
+        """Padded / logical output-work ratio (1.0 = no padding)."""
+        return (self.pm * self.pn * self.pk) / (self.m * self.n * self.k)
+
+
+def plan_nm_matmul(
+    m: int, n: int, k: int, cfg: NMConfig, block: tuple
+) -> Optional[PadPlan]:
+    """Clamp ``block`` to the (padded) problem and compute padded dims.
+
+    Returns None when no legal geometry exists (degenerate dims).
+    K blocks must satisfy two granularities at once: block_k % cfg.m == 0
+    (whole sparsity blocks per tile) and the *compressed* tile height
+    block_k * n/m a sublane multiple — both folded into ``step_k``.
+    """
+    if m <= 0 or n <= 0 or k <= 0:
+        return None
+    bm, bn, bk = block
+    step_k = cfg.m * (_SUBLANE // math.gcd(cfg.n, _SUBLANE))
+    bm = max(_SUBLANE, min(_round_up(bm, _SUBLANE), _round_up(m, _SUBLANE)))
+    bn = max(_LANE, min(_round_up(bn, _LANE), _round_up(n, _LANE)))
+    bk = max(step_k, min(bk - bk % step_k, _round_up(k, step_k)))
+    return PadPlan(
+        m=m, n=n, k=k,
+        pm=_round_up(m, bm), pn=_round_up(n, bn), pk=_round_up(k, bk),
+        block=(bm, bn, bk),
+    )
+
+
+def pad_nm_operands(
+    x2: jax.Array, vals: jax.Array, idx: jax.Array, plan: PadPlan, cfg: NMConfig
+):
+    """Zero-pad (x, vals, idx) to the plan's geometry."""
+    if plan.pk > plan.k or plan.pm > plan.m:
+        x2 = jnp.pad(
+            x2, ((0, plan.pm - plan.m), (0, plan.pk - plan.k))
+        )
+    kc_pad = plan.pk * cfg.n // cfg.m
+    vals, idx = pad_compressed_kn(vals, idx, kc_pad=kc_pad, n_pad=plan.pn)
+    return x2, vals, idx

@@ -1,0 +1,132 @@
+"""Kernel registry: named implementations per op, priority dispatch,
+and an inspectable record of every routing decision.
+
+Ops (``nm_matmul``, ``indexmac_gather``) register candidate
+implementations with a ``supports(ctx) -> None | str`` predicate (None
+means "I can run this"; a string is the human-readable reason it
+cannot). ``dispatch`` walks candidates in descending priority, runs the
+first supported one, and appends a :class:`DispatchRecord` to a bounded
+history — tests and the serving engine use the record to assert *which*
+path executed (e.g. that an odd transformer shape really hit the padded
+Pallas kernel rather than silently falling back to the dense reference).
+
+Dispatch happens at trace time: under ``jax.jit`` one record is written
+per compilation, not per call — the routing is shape-static, so one
+record per compiled shape is the complete story.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchRecord:
+    """One routing decision (newest-last in the history)."""
+
+    op: str
+    impl: str
+    shape: tuple  # logical (M, K, N)
+    padded: Optional[tuple]  # (M', K', N') when the impl padded, else None
+    block: Optional[tuple]  # (block_m, block_n, block_k) when applicable
+    reason: str  # why higher-priority impls were skipped ("" if none)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelImpl:
+    op: str
+    name: str
+    priority: int
+    supports: Callable[[dict], Optional[str]]
+    run: Callable[..., Any]
+    uses_plan: bool = False  # True: records carry ctx["plan"] geometry
+
+
+_LOCK = threading.Lock()
+_IMPLS: dict[str, list[KernelImpl]] = {}
+_HISTORY: collections.deque[DispatchRecord] = collections.deque(maxlen=256)
+
+
+def register(
+    op: str,
+    name: str,
+    *,
+    priority: int = 0,
+    supports: Callable[[dict], Optional[str]] = lambda ctx: None,
+    uses_plan: bool = False,
+):
+    """Decorator registering ``fn`` as implementation ``name`` of ``op``."""
+
+    def deco(fn):
+        impl = KernelImpl(op, name, priority, supports, fn, uses_plan)
+        with _LOCK:
+            impls = [i for i in _IMPLS.get(op, ()) if i.name != name]
+            impls.append(impl)
+            impls.sort(key=lambda i: -i.priority)
+            _IMPLS[op] = impls
+        return fn
+
+    return deco
+
+
+def implementations(op: str) -> tuple[KernelImpl, ...]:
+    with _LOCK:
+        return tuple(_IMPLS.get(op, ()))
+
+
+def dispatch(op: str, ctx: dict, *args, **kwargs):
+    """Run the highest-priority supported implementation of ``op``.
+
+    ``ctx`` must carry ``shape=(M, K, N)``; when the chosen impl is a
+    padded kernel, ``ctx["plan"]`` (a PadPlan) supplies the padded
+    geometry recorded alongside.
+    """
+    skipped = []
+    for impl in implementations(op):
+        why = impl.supports(ctx)
+        if why is not None:
+            skipped.append(f"{impl.name}: {why}")
+            continue
+        out = impl.run(*args, **kwargs)
+        plan = ctx.get("plan")
+        uses_plan = plan is not None and impl.uses_plan
+        _record(
+            DispatchRecord(
+                op=op,
+                impl=impl.name,
+                shape=tuple(ctx.get("shape", ())),
+                padded=plan.padded_shape if uses_plan else None,
+                block=plan.block if uses_plan else None,
+                reason="; ".join(skipped),
+            )
+        )
+        return out
+    raise LookupError(
+        f"no implementation of {op!r} supports this call: {'; '.join(skipped)}"
+    )
+
+
+def _record(rec: DispatchRecord) -> None:
+    with _LOCK:
+        _HISTORY.append(rec)
+
+
+def last_dispatch(op: Optional[str] = None) -> Optional[DispatchRecord]:
+    """Most recent record (for ``op`` if given), or None."""
+    with _LOCK:
+        for rec in reversed(_HISTORY):
+            if op is None or rec.op == op:
+                return rec
+    return None
+
+
+def dispatch_history(op: Optional[str] = None) -> list[DispatchRecord]:
+    with _LOCK:
+        return [r for r in _HISTORY if op is None or r.op == op]
+
+
+def clear_history() -> None:
+    with _LOCK:
+        _HISTORY.clear()

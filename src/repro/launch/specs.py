@@ -153,13 +153,15 @@ def make_cell(
 
 def lower_cell(cell: Cell, mesh: Optional[Mesh] = None):
     """Lower under an active mesh so in-model shard_hint constraints fire
-    (jax.set_mesh exposes the abstract mesh to the trace; a bare
-    `with mesh:` does not). Donation aliases params/opt (train) and caches
+    (compat.set_mesh exposes the active mesh to the trace on every JAX
+    line we support). Donation aliases params/opt (train) and caches
     (serve) in place — without it XLA copies every loop-carried buffer."""
+    from repro import compat
+
     jf = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                  out_shardings=cell.out_shardings,
                  donate_argnums=cell.donate)
     if mesh is None:
         return jf.lower(*cell.args)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         return jf.lower(*cell.args)

@@ -271,7 +271,9 @@ def _moe_apply_shard_map(params, x, cfg: MoEConfig, mesh, *, sp):
     in_specs = (P(dp, None, None),
                 jax.tree.map(lambda _: P(), params["router"]),
                 expert_specs, shared_specs)
-    fn = jax.shard_map(
+    from repro import compat
+
+    fn = compat.shard_map(
         local, mesh=mesh, in_specs=in_specs,
         out_specs=(P(dp, None, None), P()), check_vma=False)
     return fn(x, params["router"], params["experts"], shared)

@@ -3,17 +3,19 @@
 Model code calls `shard_hint(x, "model", None, ...)` to pin intermediate
 layouts (expert buffers, attention activations). Under pjit with an active
 mesh the hint becomes a with_sharding_constraint; in single-device smoke
-tests it vanishes.
+tests it vanishes. Mesh-context discovery goes through `repro.compat` so
+the same code runs on jax 0.4.x and 0.5.x.
 """
 from __future__ import annotations
 
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def _active_mesh():
-    m = jax.sharding.get_abstract_mesh()
-    return m if m is not None and m.shape_tuple else None
+    return compat.active_mesh()
 
 
 def shard_hint(x: jax.Array, *spec) -> jax.Array:
@@ -22,11 +24,8 @@ def shard_hint(x: jax.Array, *spec) -> jax.Array:
         return x
     # inside shard_map regions axes are Manual — constraints are illegal
     # there (the sharding is already explicit); the hint becomes a no-op
-    try:
-        if any(t == jax.sharding.AxisType.Manual for t in mesh.axis_types):
-            return x
-    except AttributeError:
-        pass
+    if compat.manual_axis_in(mesh):
+        return x
     axes = set(mesh.axis_names)
     clean = []
     for s in spec:

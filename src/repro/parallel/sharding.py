@@ -160,7 +160,11 @@ def _cache_leaf_spec(path, leaf, mesh_shape, batch_axes) -> P:
     spec = [None] * leaf.ndim
     b_dim = lead  # batch axis position
     if _axis_ok(leaf.shape[b_dim], batch_axes, mesh_shape):
-        spec[b_dim] = batch_axes
+        # unwrap singleton axis tuples: P("data") and P(("data",)) shard
+        # identically but only compare equal on newer JAX
+        spec[b_dim] = (batch_axes[0]
+                       if isinstance(batch_axes, tuple) and len(batch_axes) == 1
+                       else batch_axes)
     if name in _SEQ_CACHE and _axis_ok(leaf.shape[b_dim + 1], "model",
                                        mesh_shape):
         spec[b_dim + 1] = "model"

@@ -82,7 +82,8 @@ class ServeEngine:
     """Slot-based continuous batching over fixed-shape compiled steps."""
 
     def __init__(self, lm: LM, params: Any, *, slots: int, max_seq: int,
-                 prefill_len: int, temperature: float = 0.0, seed: int = 0):
+                 prefill_len: int, temperature: float = 0.0, seed: int = 0,
+                 autotune_blocks: bool = False):
         self.lm = lm
         self.params = params
         self.slots = slots
@@ -90,6 +91,11 @@ class ServeEngine:
         self.prefill_len = prefill_len
         self.temperature = temperature
         self.rng = np.random.default_rng(seed)
+        if autotune_blocks:
+            # pre-pay the per-shape block sweep for every compressed GEMM
+            # this engine will issue, so the first real request never eats
+            # an inline autotune (results persist in the on-disk cache).
+            self._autotune_sparse_blocks()
         self.prefill_step, self.decode_step = make_serve_steps(lm)
         self.caches = lm.init_cache(slots, max_seq)
         self.lengths = np.zeros(slots, np.int32)
@@ -99,6 +105,35 @@ class ServeEngine:
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def _autotune_sparse_blocks(self) -> None:
+        """Warm the autotune cache for this engine's sparse-GEMM shapes:
+        decode steps run M = slots rows, prefill M = slots * prefill_len."""
+        sp = getattr(self.lm.cfg, "sparsity", None)
+        if sp is None or sp.mode != "compressed":
+            return
+        from repro.kernels import autotune
+        from repro.models.common import get_compute_dtype
+
+        shapes: set[tuple[int, int]] = set()
+
+        def visit(node: Any) -> None:
+            if isinstance(node, dict):
+                if "vals" in node and "idx" in node:
+                    kc, n = node["vals"].shape[-2:]  # scan-stacked leaves
+                    shapes.add((kc * sp.nm.m // sp.nm.n, n))
+                    return
+                for v in node.values():
+                    visit(v)
+            elif isinstance(node, (list, tuple)):
+                for v in node:
+                    visit(v)
+
+        visit(self.params)
+        for k, n in sorted(shapes):
+            for m_rows in {self.slots, self.slots * self.prefill_len}:
+                autotune.ensure_tuned(m_rows, n, k, sp.nm,
+                                      dtype=get_compute_dtype())
 
     def _sample(self, logits: np.ndarray) -> int:
         if self.temperature <= 0:

@@ -1,0 +1,115 @@
+"""Deterministic mini-implementation of the `hypothesis` subset the suite
+uses, installed by conftest.py when the real package is absent.
+
+The real hypothesis is a declared dev dependency (pyproject.toml) and is
+what CI installs; this fallback keeps the property tests *running* (not
+skipped, not collection errors) on minimal images: a fixed-seed RNG draws
+``max_examples`` examples per test. No shrinking, no database — failures
+reproduce exactly because the seed is fixed.
+
+Supported: ``given`` (kwargs form), ``settings(max_examples, deadline)``,
+``strategies.integers``, ``strategies.sampled_from``, ``strategies.booleans``.
+Anything else raises immediately with a pointer to install hypothesis.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SEED = 0
+
+
+class _Strategy:
+    def __init__(self, draw_fn, repr_str):
+        self._draw = draw_fn
+        self._repr = repr_str
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return self._repr
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        lambda rng: rng.randint(min_value, max_value),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements), f"sampled_from({elements!r})")
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def given(**kw_strategies):
+    if not kw_strategies:
+        raise TypeError("fallback given() supports keyword strategies only")
+
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:  # noqa: BLE001 — annotate the example
+                    raise AssertionError(
+                        f"falsifying example (fallback hypothesis): {drawn}"
+                    ) from e
+
+        # zero-arg signature on purpose: pytest must not mistake the drawn
+        # parameters for fixtures (real hypothesis does the same)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def _unsupported(name):
+    if name.startswith("__"):  # module machinery probes (__path__, ...)
+        raise AttributeError(name)
+    raise NotImplementedError(
+        f"hypothesis fallback does not implement {name!r}; "
+        "pip install hypothesis for the full library"
+    )
+
+
+def install() -> None:
+    """Register fallback modules as `hypothesis` / `hypothesis.strategies`."""
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.sampled_from = sampled_from
+    st.booleans = booleans
+    st.__getattr__ = _unsupported
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__version__ = "0.0-fallback"
+    hyp.__getattr__ = _unsupported
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

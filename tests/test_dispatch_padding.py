@@ -1,0 +1,232 @@
+"""The dispatch subsystem: registry records, shape padding, autotune cache.
+
+The padding path's contract is exactness: zero rows/columns contribute
+exact zeros to the fp32 accumulator, so the padded kernel output must
+match the unpadded reference BIT-FOR-BIT on the logical slice (f32).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparsity import (
+    NMConfig,
+    compress_nm,
+    decompress_nm,
+    pad_compressed_kn,
+    random_nm_matrix,
+)
+from repro.kernels import autotune, registry
+from repro.kernels.indexmac.ops import nm_matmul
+from repro.kernels.indexmac.ref import nm_matmul_ref
+from repro.kernels.padding import plan_nm_matmul
+
+
+def _mk(cfg, K, N, M, dtype=jnp.float32, seed=0):
+    w = random_nm_matrix(jax.random.PRNGKey(seed), (K, N), cfg, axis=0).astype(dtype)
+    vals, idx = compress_nm(w, cfg, axis=0)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (M, K)).astype(dtype)
+    return x, w, vals, idx
+
+
+# ---------------------------------------------------------------------------
+# padded kernel path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", [NMConfig(2, 4), NMConfig(1, 4)],
+                         ids=lambda c: c.tag)
+@pytest.mark.parametrize(
+    "shape",
+    [(384, 200, 7), (512, 200, 100), (96, 130, 13), (384, 384, 40)],
+    ids=lambda s: "K%dN%dM%d" % s,
+)
+def test_odd_shapes_hit_kernel_and_match_ref_exactly(cfg, shape):
+    K, N, M = shape
+    x, w, vals, idx = _mk(cfg, K, N, M)
+    registry.clear_history()
+    y = nm_matmul(x, vals, idx, cfg)
+    rec = registry.last_dispatch("nm_matmul")
+    assert rec is not None and rec.impl == "pallas_padded", rec
+    assert rec.shape == (M, K, N)
+    assert rec.padded is not None and rec.block is not None
+    pm, pk, pn = rec.padded
+    assert pm >= M and pk >= K and pn >= N
+    y_ref = nm_matmul_ref(x, vals, idx, cfg)
+    assert np.array_equal(np.asarray(y), np.asarray(y_ref)), (
+        float(jnp.abs(y - y_ref).max())
+    )
+
+
+def test_bf16_odd_shape_matches_ref():
+    cfg = NMConfig(2, 4)
+    x, w, vals, idx = _mk(cfg, 384, 200, 7, dtype=jnp.bfloat16)
+    registry.clear_history()
+    y = nm_matmul(x, vals, idx, cfg)
+    assert registry.last_dispatch("nm_matmul").impl == "pallas_padded"
+    y_ref = nm_matmul_ref(x, vals, idx, cfg)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32),
+        rtol=2e-2, atol=2e-1,
+    )
+
+
+def test_grad_through_padded_kernel_path():
+    cfg = NMConfig(2, 4)
+    x, w, vals, idx = _mk(cfg, 384, 200, 7)
+    g_x, g_v = jax.grad(
+        lambda x, v: jnp.sum(nm_matmul(x, v, idx, cfg) ** 2), argnums=(0, 1)
+    )(x, vals)
+    g_dx, g_dw = jax.grad(
+        lambda x, w: jnp.sum((x @ w) ** 2), argnums=(0, 1)
+    )(x, w)
+    np.testing.assert_allclose(np.asarray(g_x), np.asarray(g_dx),
+                               rtol=1e-4, atol=1e-3)
+    grow = (np.arange(vals.shape[0]) // cfg.n)[:, None] * cfg.m + np.asarray(
+        idx, dtype=np.int64)
+    expect = np.take_along_axis(np.asarray(g_dw), grow, axis=0)
+    np.testing.assert_allclose(np.asarray(g_v), expect, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# dispatch policy
+# ---------------------------------------------------------------------------
+
+
+def test_use_kernel_false_routes_to_reference():
+    cfg = NMConfig(2, 4)
+    x, w, vals, idx = _mk(cfg, 256, 128, 64)
+    registry.clear_history()
+    nm_matmul(x, vals, idx, cfg, False)
+    rec = registry.last_dispatch("nm_matmul")
+    assert rec.impl == "reference"
+    assert "use_kernel=False" in rec.reason
+
+
+def test_waste_limit_routes_tiny_m_to_reference():
+    # single-row decode: padding M 1 -> 8 alone exceeds the default 4x cap
+    cfg = NMConfig(2, 4)
+    x, w, vals, idx = _mk(cfg, 256, 128, 1)
+    registry.clear_history()
+    y = nm_matmul(x, vals, idx, cfg)
+    rec = registry.last_dispatch("nm_matmul")
+    assert rec.impl == "reference"
+    assert "padding waste" in rec.reason
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_inconsistent_operands_raise_value_error():
+    cfg = NMConfig(2, 4)
+    x, w, vals, idx = _mk(cfg, 256, 128, 16)
+    with pytest.raises(ValueError, match="inconsistent"):
+        nm_matmul(x, vals[:-2], idx[:-2], cfg)
+    with pytest.raises(ValueError, match="mismatch"):
+        nm_matmul(x, vals, idx[:-2], cfg)
+
+
+def test_dispatch_history_accumulates():
+    cfg = NMConfig(2, 4)
+    x, w, vals, idx = _mk(cfg, 256, 128, 64)
+    registry.clear_history()
+    nm_matmul(x, vals, idx, cfg)
+    nm_matmul(x, vals, idx, cfg, False)
+    impls = [r.impl for r in registry.dispatch_history("nm_matmul")]
+    assert impls == ["pallas_padded", "reference"]
+
+
+# ---------------------------------------------------------------------------
+# plan + pad primitives
+# ---------------------------------------------------------------------------
+
+
+def test_plan_respects_granularity():
+    cfg = NMConfig(2, 4)
+    plan = plan_nm_matmul(7, 200, 384, cfg, (256, 256, 2048))
+    bm, bn, bk = plan.block
+    assert plan.pm % bm == 0 and plan.pn % bn == 0 and plan.pk % bk == 0
+    assert bk % cfg.m == 0
+    assert (bk * cfg.n // cfg.m) % 8 == 0  # compressed tile sublane-aligned
+    assert plan.needs_padding and plan.waste > 1.0
+
+
+def test_plan_noop_on_tileable_shape():
+    cfg = NMConfig(2, 4)
+    plan = plan_nm_matmul(128, 256, 512, cfg, (128, 256, 512))
+    assert not plan.needs_padding
+    assert plan.waste == 1.0
+
+
+def test_pad_compressed_roundtrip():
+    cfg = NMConfig(2, 4)
+    w = random_nm_matrix(jax.random.PRNGKey(0), (32, 20), cfg, axis=0)
+    vals, idx = compress_nm(w, cfg, axis=0)
+    vp, ip = pad_compressed_kn(vals, idx, kc_pad=24, n_pad=128)
+    assert vp.shape == ip.shape == (24, 128)
+    back = decompress_nm(vp, ip, cfg, axis=0)
+    np.testing.assert_array_equal(np.asarray(back[:32, :20]), np.asarray(w))
+    assert float(jnp.abs(back[32:]).max(initial=0.0)) == 0.0
+    assert float(jnp.abs(back[:, 20:]).max(initial=0.0)) == 0.0
+
+
+def test_pad_compressed_rejects_shrink():
+    cfg = NMConfig(2, 4)
+    w = random_nm_matrix(jax.random.PRNGKey(0), (32, 20), cfg, axis=0)
+    vals, idx = compress_nm(w, cfg, axis=0)
+    with pytest.raises(ValueError):
+        pad_compressed_kn(vals, idx, kc_pad=8, n_pad=20)
+
+
+# ---------------------------------------------------------------------------
+# autotune cache
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_memory_cache()
+    yield path
+    autotune.clear_memory_cache()
+
+
+def test_autotune_persists_and_reloads(tmp_cache):
+    cfg = NMConfig(2, 4)
+    block = autotune.tune(8, 128, 128, cfg, candidates=[(8, 128, 128)])
+    assert block == (8, 128, 128)
+    on_disk = json.loads(tmp_cache.read_text())
+    assert list(on_disk.values()) == [[8, 128, 128]]
+    assert list(on_disk)[0].startswith("v1|cpu|float32|2:4|8x128x128")
+    # fresh in-memory state must reload from disk
+    autotune.clear_memory_cache()
+    assert autotune.cached_block(8, 128, 128, cfg, jnp.float32) == (8, 128, 128)
+    assert autotune.best_block(8, 128, 128, cfg, jnp.float32) == (8, 128, 128)
+
+
+def test_best_block_defaults_without_tuning(tmp_cache):
+    assert os.environ.get("REPRO_AUTOTUNE") != "1"
+    assert autotune.best_block(64, 256, 512, NMConfig(2, 4)) == \
+        autotune.DEFAULT_BLOCK
+
+
+def test_nm_matmul_uses_cached_block(tmp_cache):
+    cfg = NMConfig(2, 4)
+    autotune.tune(64, 128, 256, cfg, candidates=[(64, 128, 256)])
+    x, w, vals, idx = _mk(cfg, 256, 128, 64)
+    registry.clear_history()
+    nm_matmul(x, vals, idx, cfg)  # block=None -> cache lookup
+    rec = registry.last_dispatch("nm_matmul")
+    assert rec.impl == "pallas_padded"
+    assert rec.block == (64, 128, 256)
+
+
+def test_candidates_are_plan_feasible():
+    cfg = NMConfig(1, 4)
+    for bm, bn, bk in autotune.candidate_blocks(100, 200, 384, cfg):
+        assert bk % cfg.m == 0
+        plan = plan_nm_matmul(100, 200, 384, cfg, (bm, bn, bk))
+        assert plan is not None and plan.block == (bm, bn, bk)

@@ -58,7 +58,9 @@ def test_matches_xla_on_loop_free_program():
         return jax.nn.relu(x @ w1) @ w2
 
     compiled = jax.jit(f).lower(x).compile()
-    xla = compiled.cost_analysis()
+    from repro import compat
+
+    xla = compat.cost_analysis(compiled)
     res = analyze_hlo(compiled.as_text())
     assert res["flops"] == pytest.approx(float(xla["flops"]), rel=0.05)
 

@@ -28,8 +28,9 @@ x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
 
 y_local, aux_local = _moe_apply_local(params, x, cfg)
 
-mesh = jax.make_mesh((4, 2), ("data", "model"))
-with jax.set_mesh(mesh):
+from repro import compat
+mesh = compat.make_mesh((4, 2), ("data", "model"))
+with compat.set_mesh(mesh):
     y_dist, aux_dist = jax.jit(
         lambda p, x: moe_apply(p, x, cfg)
     )(params, x)

@@ -78,3 +78,38 @@ def test_temperature_sampling_runs(yi):
                        max_new=6))
     done = eng.run()
     assert len(done[0].out) == 6
+
+
+def test_autotune_blocks_warmup_covers_sparse_shapes(yi, monkeypatch):
+    """autotune_blocks=True must request a sweep for every compressed GEMM
+    shape at both the decode (M=slots) and prefill (M=slots*prefill_len)
+    row counts — pins the params-tree walk and the Kc -> K math."""
+    import dataclasses
+
+    from repro.configs.base import SparsityConfig
+    from repro.core.sparsity import NMConfig
+    from repro.kernels import autotune
+
+    cfg, _, _ = yi
+    scfg = dataclasses.replace(
+        cfg, sparsity=SparsityConfig(
+            nm=NMConfig(2, 4), mode="compressed", use_kernel=True))
+    lm = LM(scfg)
+    params = lm.init(jax.random.PRNGKey(0))
+
+    asked = []
+    monkeypatch.setattr(
+        autotune, "ensure_tuned",
+        lambda m, n, k, nm, dtype=None: asked.append((m, n, k)) or (8, 128, 128))
+    ServeEngine(lm, params, slots=2, max_seq=64, prefill_len=8,
+                autotune_blocks=True)
+
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    want = set()
+    for path, leaf in leaves:
+        if any(getattr(p, "key", None) == "vals" for p in path):
+            kc, n = leaf.shape[-2:]
+            for m_rows in (2, 16):  # slots, slots * prefill_len
+                want.add((m_rows, n, kc * 4 // 2))
+    assert want, "reduced config produced no compressed linears"
+    assert set(asked) == want
