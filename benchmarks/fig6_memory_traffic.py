@@ -5,7 +5,6 @@ larger at 2:4 because the baseline issues twice the per-nonzero B loads).
 from __future__ import annotations
 
 from benchmarks.cnn_specs import CNNS
-from repro.core.cost_model import VectorCoreModel
 from repro.core.sparse_matmul import indexmac_traffic, rowwise_spmm_traffic
 from repro.core.sparsity import NMConfig
 

@@ -1,10 +1,11 @@
 """Quickstart: the paper's technique end to end in ~60 lines.
 
-1. Prune a dense weight matrix to 2:4 structured sparsity (paper Fig. 1b).
-2. Compress it to (values, int8 col_idx).
-3. Multiply with the indexmac Pallas kernel (interpret mode on CPU) and
-   check it against the dense product.
-4. Build a sparse transformer LM from a registry config, run one training
+1. Prune a dense weight matrix to 2:4 structured sparsity (paper Fig. 1b)
+   and compress it into a typed `NMWeight` — (values, int8 col_idx)
+   leaves plus the N:M config and kernel policy as metadata.
+2. Multiply with `repro.api.nm_matmul` (the Pallas indexmac kernel,
+   interpret mode on CPU) and check it against the dense product.
+3. Build a sparse transformer LM from a registry config, run one training
    step and one decode step.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -12,34 +13,32 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparsity import (
-    NMConfig, apply_mask, compress_nm, prune_mask_nm,
-)
-from repro.kernels.indexmac.ops import nm_matmul
+from repro import api
 from repro.configs import get_reduced
 from repro.models.transformer import LM
 
-# --- 1-3: the kernel on a single GEMM -----------------------------------
-cfg = NMConfig(2, 4)
+# --- 1-2: the kernel on a single GEMM -----------------------------------
+nm = api.NMConfig(2, 4)
 key = jax.random.PRNGKey(0)
 w = jax.random.normal(key, (512, 256))          # dense weights (K, N)
-mask = prune_mask_nm(w, cfg, axis=0)            # keep top-2 |w| per 4-block
-w_sp = apply_mask(w, mask)
-vals, idx = compress_nm(w_sp, cfg, axis=0)      # values + bounded indices
-print(f"compressed {w.size} weights -> {vals.size} values "
-      f"({cfg.tag}, idx in [0,{cfg.m}))")
+sw = api.sparsify(w, nm)                        # typed compressed weight
+print(f"compressed {w.size} weights -> {sw.vals.size} values "
+      f"({sw.nm.tag}, idx in [0,{sw.nm.m}), policy={sw.kernel_policy.mode})")
 
 x = jax.random.normal(jax.random.PRNGKey(1), (128, 512))
-y_kernel = nm_matmul(x, vals, idx, cfg, True)   # Pallas (interpret on CPU)
-y_dense = x @ w_sp
+y_kernel = api.nm_matmul(x, sw)                 # Pallas (interpret on CPU)
+y_dense = x @ api.densify(sw)
 err = float(jnp.abs(y_kernel - y_dense).max())
 print(f"kernel vs dense max err: {err:.2e}")
 assert err < 1e-3
 
-# --- 4: a sparse LM from the registry ------------------------------------
+# --- 3: a sparse LM from the registry ------------------------------------
 model_cfg = get_reduced("yi-9b")                # 2:4-compressed projections
 lm = LM(model_cfg)
 params = lm.init(jax.random.PRNGKey(2))
+n_sparse = sum(api.is_sparse(l) for l in jax.tree.leaves(
+    params, is_leaf=api.is_sparse))
+print(f"model carries {n_sparse} NMWeight nodes")
 tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 32), 0,
                             model_cfg.vocab_size)
 loss, parts = lm.loss(params, {"tokens": tokens, "labels": tokens})

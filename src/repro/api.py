@@ -1,0 +1,116 @@
+"""Public facade for the compressed N:M representation.
+
+The four verbs most users need:
+
+  sparsify(w, nm)   dense (K, N) array -> NMWeight (prune + compress)
+  densify(w)        NMWeight / MaskedNMWeight / {"w": ...} -> dense array
+  nm_matmul(x, w)   y = x @ densify(w), dispatched by w's own metadata
+  is_sparse(obj)    True for typed sparse weight nodes
+
+An :class:`NMWeight` is a registered JAX pytree: ``vals``/``idx`` are
+leaves (jit/vmap/grad/shard like any array), while the ``NMConfig``, the
+compressed ``axis`` and the :class:`KernelPolicy` ride as static treedef
+metadata — the weight is self-describing, so nothing threads a sparsity
+config through apply paths, and different layers of one model can carry
+different N:M patterns.
+
+Kernel policy semantics (``KernelPolicy.mode``):
+
+  off    always the XLA reference implementation (default).
+  auto   padded Pallas kernel when the shape normalizes within the
+         padding waste limit (REPRO_PAD_WASTE_LIMIT), else reference.
+  force  Pallas whenever the shape normalizes at all; the waste limit
+         is ignored.
+
+``KernelPolicy.block`` optionally pins the (block_m, block_n, block_k)
+tile triple; ``None`` consults the autotune cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+
+from repro.core.nmweight import (
+    KernelPolicy,
+    MaskedNMWeight,
+    NMWeight,
+    is_weight_node,
+)
+from repro.core.sparsity import (
+    NMConfig,
+    apply_mask,
+    compress_nm,
+    decompress_nm,
+    prune_mask_nm,
+)
+from repro.kernels.indexmac.ops import nm_matmul as _nm_matmul_typed
+
+__all__ = [
+    "KernelPolicy",
+    "MaskedNMWeight",
+    "NMConfig",
+    "NMWeight",
+    "densify",
+    "is_sparse",
+    "nm_matmul",
+    "sparsify",
+]
+
+
+def _as_policy(kernel_policy) -> KernelPolicy:
+    if isinstance(kernel_policy, KernelPolicy):
+        return kernel_policy
+    if isinstance(kernel_policy, str):
+        return KernelPolicy(mode=kernel_policy)
+    raise TypeError(
+        f"kernel_policy must be a KernelPolicy or a mode string "
+        f"('off' | 'auto' | 'force'), got {type(kernel_policy).__name__}"
+    )
+
+
+def sparsify(
+    w: jax.Array,
+    nm: NMConfig,
+    *,
+    axis: int = 0,
+    kernel_policy: Union[KernelPolicy, str] = KernelPolicy("auto"),
+) -> NMWeight:
+    """Prune a dense weight to top-|w| N:M along ``axis`` and compress.
+
+    An already N:M-sparse ``w`` passes through losslessly (its non-zeros
+    are the per-block top-n by construction). ``axis=0`` is the
+    contraction dim of ``y = x @ W`` — what ``nm_matmul`` consumes.
+    """
+    if w.ndim != 2:
+        raise ValueError(f"sparsify expects a 2D weight, got shape {w.shape}")
+    if w.shape[axis] % nm.m != 0:
+        raise ValueError(
+            f"axis {axis} size {w.shape[axis]} not divisible by M={nm.m}")
+    pruned = apply_mask(w, prune_mask_nm(w, nm, axis=axis))
+    vals, idx = compress_nm(pruned, nm, axis=axis)
+    return NMWeight(vals=vals, idx=idx, nm=nm, axis=axis,
+                    kernel_policy=_as_policy(kernel_policy))
+
+
+def densify(w) -> jax.Array:
+    """Materialize the dense array behind any linear-weight node."""
+    if isinstance(w, NMWeight):
+        return decompress_nm(w.vals, w.idx, w.nm, axis=w.axis)
+    if isinstance(w, MaskedNMWeight):
+        return w.project()
+    if isinstance(w, dict) and "w" in w:
+        return w["w"]
+    return w  # already a dense array
+
+
+def is_sparse(obj) -> bool:
+    """True for the typed sparse weight nodes (compressed or masked)."""
+    return is_weight_node(obj)
+
+
+def nm_matmul(x: jax.Array, w: NMWeight, *,
+              block: Optional[tuple[int, int, int]] = None) -> jax.Array:
+    """y = x @ densify(w); dispatch (reference vs Pallas, tile sizes)
+    is decided by ``w.kernel_policy`` — see the module docstring."""
+    return _nm_matmul_typed(x, w, block=block)

@@ -23,6 +23,11 @@ Resolved surface:
 * ``tpu_compiler_params(**kw)`` — Pallas-TPU compiler params object:
   ``pltpu.CompilerParams`` (>= 0.5) or ``pltpu.TPUCompilerParams``
   (0.4.x), whichever the installed Pallas exports.
+* ``register_dataclass(cls, data_fields, meta_fields)`` — pytree
+  registration for dataclasses (``NMWeight``): native
+  ``jax.tree_util.register_dataclass`` where present (keyword spelling
+  drifted across lines), else built from
+  ``register_pytree_with_keys``.
 * ``resolved()`` — {name: "how it resolved"} for diagnostics and the
   compat regression test.
 """
@@ -221,6 +226,53 @@ def tpu_compiler_params(**kwargs) -> Optional[Any]:
         return _TPU_PARAMS_CLS(
             **{k: v for k, v in kwargs.items() if k in known}
         )
+
+
+# ---------------------------------------------------------------------------
+# dataclass pytree registration
+# ---------------------------------------------------------------------------
+
+if hasattr(jax.tree_util, "register_dataclass"):
+    _RESOLVED["register_dataclass"] = "jax.tree_util.register_dataclass"
+
+    def register_dataclass(cls, data_fields: Sequence[str],
+                           meta_fields: Sequence[str]):
+        """Register ``cls`` as a pytree: data_fields are leaves (with
+        GetAttrKey paths), meta_fields are static treedef aux data."""
+        return jax.tree_util.register_dataclass(
+            cls, list(data_fields), list(meta_fields)
+        )
+
+else:  # very old lines: build it from register_pytree_with_keys
+    _RESOLVED["register_dataclass"] = "register_pytree_with_keys"
+
+    def register_dataclass(cls, data_fields: Sequence[str],
+                           meta_fields: Sequence[str]):
+        import dataclasses
+
+        from jax.tree_util import GetAttrKey, register_pytree_with_keys
+
+        data_fields = tuple(data_fields)
+        meta_fields = tuple(meta_fields)
+
+        def flatten_with_keys(obj):
+            children = [(GetAttrKey(f), getattr(obj, f))
+                        for f in data_fields]
+            aux = tuple(getattr(obj, f) for f in meta_fields)
+            return children, aux
+
+        def unflatten(aux, children):
+            kw = dict(zip(data_fields, children))
+            kw.update(zip(meta_fields, aux))
+            return cls(**kw)
+
+        def flatten(obj):
+            return ([getattr(obj, f) for f in data_fields],
+                    tuple(getattr(obj, f) for f in meta_fields))
+
+        register_pytree_with_keys(cls, flatten_with_keys, unflatten, flatten)
+        return dataclasses.dataclass(cls) if not dataclasses.is_dataclass(
+            cls) else cls
 
 
 def resolved() -> dict[str, str]:

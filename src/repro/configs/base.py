@@ -31,12 +31,22 @@ class SparsityConfig:
                     indexmac kernel / its XLA reference (serving + dry-run)
     targets: which projection families are sparsified.
     use_kernel: dispatch to the Pallas kernel when shapes allow.
+    nm_overrides: per-target NMConfig overrides, e.g.
+      ``(("expert", NMConfig(1, 4)),)`` sparsifies experts at 1:4 while
+      everything else uses ``nm`` — mixed per-layer sparsity. This is
+      init-time routing only: once built, every weight carries its own
+      ``NMConfig`` (``repro.core.nmweight.NMWeight``).
     """
 
     nm: NMConfig = NMConfig(2, 4)
     mode: SparseMode = "compressed"
     targets: tuple[str, ...] = ("ffn", "attn_proj", "expert")
     use_kernel: bool = False  # pure-XLA path by default (dry-run friendly)
+    nm_overrides: tuple[tuple[str, NMConfig], ...] = ()
+
+    def nm_for(self, target: str) -> NMConfig:
+        """The N:M pattern a given target family is sparsified at."""
+        return dict(self.nm_overrides).get(target, self.nm)
 
     @property
     def tag(self) -> str:

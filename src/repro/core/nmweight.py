@@ -1,0 +1,144 @@
+"""First-class compressed N:M weight: a typed, registered JAX pytree.
+
+The paper's point is that bounded per-block indices make the compressed
+``(values, col_idx)`` pair a first-class operand the hardware can consume
+directly; :class:`NMWeight` is the software mirror of that — the pair
+travels as two pytree leaves, and the metadata the consumer needs to
+interpret them (the :class:`NMConfig`, the compressed axis, and the
+kernel dispatch policy) rides along as static treedef aux data. Every
+subsystem (model apply, kernel dispatch, sharding, optimizer,
+checkpointing, serving autotune) dispatches on the type instead of
+sniffing ``{"vals", "idx"}`` dict keys, and nothing threads an
+out-of-band ``sp=`` config through apply paths anymore.
+
+Because the metadata is static treedef data, two weights with different
+``nm`` hash/compare as different pytree structures — which is exactly
+what lets a single model mix sparsity ratios per layer (2:4 ffn next to
+1:4 experts) without a global config.
+
+:class:`MaskedNMWeight` is the dense-storage sibling used by the paper's
+prune->fine-tune training flow: the weight stays dense, the top-N:M mask
+is re-derived every forward (SR-STE style straight-through), and the
+``nm`` pattern again travels with the weight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import jax
+
+from repro import compat
+from repro.core.sparsity import (
+    NMConfig,
+    apply_mask,
+    decompress_nm,
+    prune_mask_nm,
+)
+
+__all__ = ["KernelPolicy", "NMWeight", "MaskedNMWeight", "is_weight_node"]
+
+KernelMode = Literal["off", "auto", "force"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """How a compressed weight's matmuls pick an implementation.
+
+    mode:
+      off   — always the XLA reference (dry-run friendly; the default of
+              ``SparsityConfig.use_kernel=False``).
+      auto  — Pallas kernel when the shape normalizes within the padding
+              waste limit, reference otherwise.
+      force — Pallas kernel whenever the shape normalizes at all; the
+              padding waste limit is ignored (benchmarking / pinning).
+    block: optional ``(block_m, block_n, block_k)`` override; ``None``
+      consults the autotune cache and falls back to the default triple.
+    """
+
+    mode: KernelMode = "off"
+    block: Optional[tuple[int, int, int]] = None
+
+    def __post_init__(self):
+        if self.mode not in ("off", "auto", "force"):
+            raise ValueError(f"kernel policy mode {self.mode!r} not in "
+                             "('off', 'auto', 'force')")
+        if self.block is not None:
+            object.__setattr__(self, "block", tuple(self.block))
+
+
+@dataclasses.dataclass(frozen=True)
+class NMWeight:
+    """Compressed N:M weight: ``vals``/``idx`` leaves + static metadata.
+
+    vals: kept values, ``axis`` shrunk by n/m relative to the dense
+      weight (same dtype as the dense weight).
+    idx:  int8 in-block positions in ``[0, m)``, same shape as ``vals``.
+    nm:   the N:M pattern the pair encodes.
+    axis: compressed axis of the *logical 2D* weight (0 = the contraction
+      dim K of ``y = x @ W``; leading stacked axes from scan/vmap don't
+      count — consumers always see the 2D weight under the transform).
+    kernel_policy: dispatch policy (see :class:`KernelPolicy`).
+
+    No shape validation happens here: instances flow through jit / vmap /
+    grad where leaves are tracers, float0 cotangents, ShapeDtypeStructs
+    or PartitionSpecs. ``repro.api.sparsify`` is the validating producer.
+    """
+
+    vals: jax.Array
+    idx: jax.Array
+    nm: NMConfig
+    axis: int = 0
+    kernel_policy: KernelPolicy = KernelPolicy()
+
+    def astype(self, dtype) -> "NMWeight":
+        """Cast ``vals`` (idx stays int8 — it is pattern, not payload)."""
+        return dataclasses.replace(self, vals=self.vals.astype(dtype))
+
+    def to_dense(self) -> jax.Array:
+        """Materialize the dense weight (tests / export)."""
+        return decompress_nm(self.vals, self.idx, self.nm, axis=self.axis)
+
+    @property
+    def dense_dim(self) -> int:
+        """Size of the compressed axis in the dense weight."""
+        return self.vals.shape[self.axis] * self.nm.m // self.nm.n
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskedNMWeight:
+    """Dense-storage N:M weight for the prune->fine-tune training flow.
+
+    ``w`` is stored dense; :meth:`project` re-derives the top-N:M mask so
+    gradients reach every entry (straight-through) and pruned entries can
+    revive between steps.
+    """
+
+    w: jax.Array
+    nm: NMConfig
+    axis: int = 0
+
+    def astype(self, dtype) -> "MaskedNMWeight":
+        return dataclasses.replace(self, w=self.w.astype(dtype))
+
+    def project(self) -> jax.Array:
+        """Dense weight re-projected onto the N:M constraint set."""
+        return apply_mask(self.w, prune_mask_nm(self.w, self.nm,
+                                                axis=self.axis))
+
+
+compat.register_dataclass(
+    NMWeight, data_fields=("vals", "idx"),
+    meta_fields=("nm", "axis", "kernel_policy"),
+)
+compat.register_dataclass(
+    MaskedNMWeight, data_fields=("w",), meta_fields=("nm", "axis"),
+)
+
+
+def is_weight_node(x) -> bool:
+    """True for the typed sparse weight nodes (compressed or masked) —
+    the shared ``is_leaf`` predicate for tree walks that treat a weight
+    as one unit. (The optimizer deliberately uses a narrower
+    NMWeight-only test: masked weights train their dense storage.)"""
+    return isinstance(x, (NMWeight, MaskedNMWeight))

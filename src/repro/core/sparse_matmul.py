@@ -16,7 +16,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparsity import NMConfig, compress_nm, decompress_nm
+from repro.core.sparsity import NMConfig, compress_nm
 
 __all__ = [
     "rowwise_dense_matmul",

@@ -1,15 +1,22 @@
-"""Public op for the indexmac kernel: `nm_matmul`.
+"""Public ops for the indexmac kernel: `nm_matmul` (typed) and
+`nm_matmul_raw` (positional compat wrapper).
 
-Dispatches through the kernel registry (`repro.kernels.registry`): the
-padded Pallas implementation normalizes arbitrary (M, K, N) up to a
+``nm_matmul(x, w)`` consumes an :class:`repro.core.nmweight.NMWeight`:
+the weight's own ``NMConfig`` and :class:`KernelPolicy` drive dispatch —
+``off`` pins the XLA reference, ``auto`` takes the padded Pallas kernel
+when the shape normalizes within the waste limit, ``force`` ignores the
+limit. ``nm_matmul_raw(x, vals, idx, cfg, ...)`` keeps the old
+positional surface for benchmarks and kernel-level tests.
+
+Dispatch goes through the kernel registry (`repro.kernels.registry`):
+the padded Pallas implementation normalizes arbitrary (M, K, N) up to a
 tileable geometry — zero-padding x and the compressed (vals, idx) pair
 and slicing the output — so real transformer shapes execute the kernel
 (interpret=True on CPU so the kernel body is validated here; compiled
 Mosaic on real TPUs) instead of silently falling back to the dense
-reference. Blocks come from the caller, the autotune cache, or the
-default triple, in that order. The reference implementation remains
-registered as the priority-0 fallback (use_kernel=False, or padding
-waste beyond REPRO_PAD_WASTE_LIMIT — e.g. single-token decode M=1).
+reference. Blocks come from the weight's policy, the caller, the
+autotune cache, or the default triple, in that order. The reference
+implementation remains registered as the priority-0 fallback.
 
 Training backward (unchanged by padding — it works on logical shapes):
 
@@ -30,6 +37,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.nmweight import NMWeight
 from repro.core.sparsity import NMConfig, decompress_nm
 from repro.kernels import autotune, registry
 from repro.kernels.indexmac.kernel import nm_spmm_pallas
@@ -71,6 +79,8 @@ def _pallas_supports(ctx: dict) -> Optional[str]:
     plan = ctx["plan"]
     if plan is None:
         return "shape not normalizable"
+    if ctx.get("force"):
+        return None  # KernelPolicy "force": waste limit ignored
     limit = pad_waste_limit()
     if plan.waste > limit:
         return f"padding waste {plan.waste:.2f}x > limit {limit:.2f}x"
@@ -90,36 +100,64 @@ def _run_ref_impl(x2, vals, idx, *, cfg, plan, interpret):
     return nm_matmul_ref(x2, vals, idx, cfg)
 
 
+def nm_matmul(x: jax.Array, w: NMWeight, *,
+              block: Optional[tuple[int, int, int]] = None) -> jax.Array:
+    """y = x @ densify(w); x: (..., K), w: an NMWeight compressed along
+    its axis 0 (the contraction dim).
+
+    The weight's own metadata drives dispatch: ``w.nm`` is the pattern,
+    ``w.kernel_policy`` picks reference/Pallas and the block triple.
+    ``block`` overrides the policy's block for this call (benchmarks).
+    """
+    if not isinstance(w, NMWeight):
+        raise TypeError(
+            f"nm_matmul expects an NMWeight, got {type(w).__name__}; wrap "
+            "compressed operands with repro.api.sparsify, or use "
+            "nm_matmul_raw for positional (vals, idx, cfg) calls"
+        )
+    if w.axis != 0:
+        raise ValueError(
+            f"nm_matmul needs the weight compressed along axis 0 (the "
+            f"contraction dim of y = x @ W); got axis={w.axis}"
+        )
+    pol = w.kernel_policy
+    blk = block if block is not None else pol.block
+    return nm_matmul_raw(x, w.vals, w.idx, w.nm, pol.mode != "off", blk,
+                         pol.mode == "force")
+
+
 @functools.partial(
-    jax.custom_vjp, nondiff_argnums=(3, 4, 5)
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
 )
-def nm_matmul(
+def nm_matmul_raw(
     x: jax.Array,
     vals: jax.Array,
     idx: jax.Array,
     cfg: NMConfig,
     use_kernel: bool = True,
     block: Optional[tuple[int, int, int]] = None,
+    force: bool = False,
 ) -> jax.Array:
-    """y = x @ decompress(vals, idx); x: (..., K), vals/idx: (Kc, N).
+    """Positional compat surface: y = x @ decompress(vals, idx);
+    x: (..., K), vals/idx: (Kc, N).
 
     ``block=None`` consults the autotune cache (see
     ``repro.kernels.autotune``) and falls back to the default triple.
+    ``force=True`` skips the padding waste limit (KernelPolicy "force").
     """
-    return _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block)
+    return _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block, force)
 
 
-def _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block):
+def _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block, force):
     if os.environ.get("REPRO_GATHER_COMPRESSED") == "1":
         # Pin the compressed operands to (None, "model") so the FSDP
         # all-gather over "data" moves the COMPRESSED bytes (vals+idx,
         # 0.375-0.75x dense) and decompression runs shard-locally — without
         # this, SPMD may decompress on the home shards and gather the
         # dense W (EXPERIMENTS.md §Perf P3).
-        from repro.parallel.hints import shard_hint
+        from repro.parallel.hints import shard_hint_leaves
 
-        vals = shard_hint(vals, None, "model")
-        idx = shard_hint(idx, None, "model")
+        vals, idx = shard_hint_leaves((vals, idx), None, "model")
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
@@ -137,13 +175,10 @@ def _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block):
         if block is None:
             block = autotune.best_block(mm, nn, k, cfg, x.dtype)
         plan = plan_nm_matmul(mm, nn, k, cfg, tuple(block))
-    ctx = {
-        "shape": (mm, k, nn),
-        "plan": plan,
-        "use_kernel": use_kernel,
-        "cfg": cfg,
-        "dtype": x.dtype,
-    }
+    ctx = registry.make_ctx(
+        (mm, k, nn), nm=cfg, use_kernel=use_kernel, plan=plan,
+        dtype=x.dtype, force=force,
+    )
     y2 = registry.dispatch(
         "nm_matmul", ctx, x2, vals, idx,
         cfg=cfg, plan=plan, interpret=_on_cpu(),
@@ -151,12 +186,12 @@ def _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block):
     return y2.reshape(*lead, nn)
 
 
-def _fwd(x, vals, idx, cfg, use_kernel, block):
-    y = _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block)
+def _fwd(x, vals, idx, cfg, use_kernel, block, force):
+    y = _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block, force)
     return y, (x, vals, idx)
 
 
-def _bwd(cfg, use_kernel, block, res, dy):
+def _bwd(cfg, use_kernel, block, force, res, dy):
     x, vals, idx = res
     w = decompress_nm(vals, idx, cfg, axis=0)  # (K, N)
     dy32 = dy.astype(jnp.float32)
@@ -172,4 +207,4 @@ def _bwd(cfg, use_kernel, block, res, dy):
     return dx, dvals, jnp.zeros_like(idx)
 
 
-nm_matmul.defvjp(_fwd, _bwd)
+nm_matmul_raw.defvjp(_fwd, _bwd)

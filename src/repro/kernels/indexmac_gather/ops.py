@@ -1,4 +1,10 @@
-"""jit'd wrapper for the literal gather-port kernel (inference-only).
+"""jit'd wrappers for the literal gather-port kernel (inference-only).
+
+``indexmac_gather(w, b)`` consumes an :class:`NMWeight` whose rows are
+compressed along axis 1 (the paper's A-matrix orientation, C = A @ B);
+nm and the use-kernel decision come from the weight's own metadata.
+``indexmac_gather_spmm`` keeps the positional (vals, idx, cfg) surface
+for benchmarks.
 
 Routed through the kernel registry so dispatch decisions (Pallas gather
 port vs. jnp reference) land in the same inspectable record stream as
@@ -12,10 +18,13 @@ from typing import Optional
 
 import jax
 
+from repro.core.nmweight import NMWeight
 from repro.core.sparsity import NMConfig
 from repro.kernels import registry
 from repro.kernels.indexmac_gather.kernel import indexmac_gather_pallas
 from repro.kernels.indexmac_gather.ref import indexmac_gather_ref
+
+DEFAULT_BLOCK = (8, 128, 64)
 
 
 def _pallas_supports(ctx: dict) -> Optional[str]:
@@ -41,26 +50,55 @@ def _run_ref(vals, idx, b, *, cfg, block):
     return indexmac_gather_ref(vals, idx, b, cfg)
 
 
+def _tileable(mr: int, k: int, nc: int, cfg: NMConfig,
+              block: tuple[int, int, int]) -> bool:
+    bm, bn, bk = block
+    return mr % bm == 0 and nc % bn == 0 and k % bk == 0 and bk % cfg.m == 0
+
+
+def indexmac_gather(
+    w: NMWeight,
+    b: jax.Array,
+    *,
+    block: Optional[tuple[int, int, int]] = None,
+) -> jax.Array:
+    """C = densify(w) @ b for a row-compressed A (w.axis == 1)."""
+    if not isinstance(w, NMWeight):
+        raise TypeError(
+            f"indexmac_gather expects an NMWeight, got {type(w).__name__}"
+        )
+    if w.axis != 1:
+        raise ValueError(
+            "the gather port consumes the paper's A-orientation: rows "
+            f"compressed along axis 1; got axis={w.axis}"
+        )
+    block = block or w.kernel_policy.block or DEFAULT_BLOCK
+    mr, _ = w.vals.shape
+    k, nc = b.shape
+    ctx = registry.weight_ctx(
+        w, (mr, k, nc),
+        dtype=b.dtype, tileable=_tileable(mr, k, nc, w.nm, block),
+    )
+    return registry.dispatch(
+        "indexmac_gather", ctx, w.vals, w.idx, b, cfg=w.nm, block=block
+    )
+
+
 def indexmac_gather_spmm(
     vals: jax.Array,
     idx: jax.Array,
     b: jax.Array,
     cfg: NMConfig,
     use_kernel: bool = True,
-    block: tuple[int, int, int] = (8, 128, 64),
+    block: tuple[int, int, int] = DEFAULT_BLOCK,
 ) -> jax.Array:
-    bm, bn, bk = block
+    """Positional compat surface (benchmarks, kernel-level tests)."""
     mr, kc = vals.shape
     k, nc = b.shape
-    tileable = mr % bm == 0 and nc % bn == 0 and k % bk == 0 and bk % cfg.m == 0
-    ctx = {
-        "shape": (mr, k, nc),
-        "plan": None,
-        "use_kernel": use_kernel,
-        "tileable": tileable,
-        "cfg": cfg,
-        "dtype": b.dtype,
-    }
+    ctx = registry.make_ctx(
+        (mr, k, nc), nm=cfg, use_kernel=use_kernel, dtype=b.dtype,
+        tileable=_tileable(mr, k, nc, cfg, block),
+    )
     return registry.dispatch(
         "indexmac_gather", ctx, vals, idx, b, cfg=cfg, block=block
     )

@@ -21,6 +21,8 @@ import dataclasses
 import threading
 from typing import Any, Callable, Optional
 
+from repro.core.nmweight import NMWeight
+
 
 @dataclasses.dataclass(frozen=True)
 class DispatchRecord:
@@ -47,6 +49,29 @@ class KernelImpl:
 _LOCK = threading.Lock()
 _IMPLS: dict[str, list[KernelImpl]] = {}
 _HISTORY: collections.deque[DispatchRecord] = collections.deque(maxlen=256)
+
+
+def make_ctx(shape, *, nm, use_kernel: bool, plan=None, dtype=None,
+             force: bool = False, **extra) -> dict:
+    """Dispatch context for a compressed-GEMM op.
+
+    ``shape`` is the logical (M, K, N); ``nm`` the NMConfig of the
+    compressed operand; ``force=True`` tells padded impls to ignore the
+    waste limit (KernelPolicy mode "force"). Extra keys (e.g. the gather
+    port's ``tileable``) pass through to ``supports`` predicates.
+    """
+    return {"shape": tuple(shape), "cfg": nm, "use_kernel": use_kernel,
+            "plan": plan, "dtype": dtype, "force": force, **extra}
+
+
+def weight_ctx(w: NMWeight, shape, *, plan=None, dtype=None,
+               **extra) -> dict:
+    """Dispatch context derived from an :class:`NMWeight`'s own metadata
+    — the weight, not the call site, decides nm / kernel policy."""
+    pol = w.kernel_policy
+    return make_ctx(shape, nm=w.nm, use_kernel=pol.mode != "off",
+                    plan=plan, dtype=dtype, force=pol.mode == "force",
+                    **extra)
 
 
 def register(

@@ -24,7 +24,7 @@ import jax  # noqa: E402  (after XLA_FLAGS on purpose)
 from repro.configs import ARCHS, SHAPES, runnable_shapes
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import lower_cell, make_cell
-from repro.roofline.analysis import analyze, fmt_row
+from repro.roofline.analysis import analyze
 
 
 def run_cell(arch: str, shape: str, mesh_kind: str, *, sparse: bool,

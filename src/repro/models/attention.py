@@ -12,11 +12,12 @@
              directly over the compressed c_kv cache.
 
 All projections are sparse-eligible (target "attn_proj") — the paper's
-technique applied to attention GEMMs.
+technique applied to attention GEMMs. Sparsity routing happens at init;
+the typed weight nodes are self-describing, so apply paths take no
+sparsity config.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -221,16 +222,15 @@ def gqa_apply(
     cache_len: Optional[jax.Array] = None,
     rope_theta: float = 10_000.0,
     chunk: int = 512,
-    sp: Optional[SparsityConfig] = None,
     cross_kv: Optional[tuple[jax.Array, jax.Array]] = None,
 ):
     """Returns (y, new_cache). cross_kv supplies precomputed encoder K/V
     for cross-attention (whisper); cache is then unused."""
     b, s, _ = x.shape
-    q = linear_apply(params["wq"], x, sp=sp).reshape(b, s, cfg.q_heads, cfg.head_dim)
+    q = linear_apply(params["wq"], x).reshape(b, s, cfg.q_heads, cfg.head_dim)
     if cross_kv is None:
-        k = linear_apply(params["wk"], x, sp=sp).reshape(b, s, cfg.kv_heads, cfg.head_dim)
-        v = linear_apply(params["wv"], x, sp=sp).reshape(b, s, cfg.kv_heads, cfg.head_dim)
+        k = linear_apply(params["wk"], x).reshape(b, s, cfg.kv_heads, cfg.head_dim)
+        v = linear_apply(params["wv"], x).reshape(b, s, cfg.kv_heads, cfg.head_dim)
     else:
         k, v = cross_kv
     if "q_norm" in params:
@@ -268,7 +268,7 @@ def gqa_apply(
                 cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
             )
             new_cache = {"k": k_cache, "v": v_cache}
-    y = linear_apply(params["wo"], out.reshape(b, s, -1), sp=sp)
+    y = linear_apply(params["wo"], out.reshape(b, s, -1))
     return y, new_cache
 
 
@@ -326,15 +326,15 @@ def mla_empty_cache(
     }
 
 
-def _mla_q(params, x, cfg, positions, rope_theta, sp):
+def _mla_q(params, x, cfg, positions, rope_theta):
     b, s, _ = x.shape
     h = cfg.q_heads
     qk_dim = cfg.nope_head_dim + cfg.rope_head_dim
     if "wq_a" in params:
-        cq = rmsnorm_apply(params["q_a_norm"], linear_apply(params["wq_a"], x, sp=sp))
-        q = linear_apply(params["wq_b"], cq, sp=sp)
+        cq = rmsnorm_apply(params["q_a_norm"], linear_apply(params["wq_a"], x))
+        q = linear_apply(params["wq_b"], cq)
     else:
-        q = linear_apply(params["wq"], x, sp=sp)
+        q = linear_apply(params["wq"], x)
     q = q.reshape(b, s, h, qk_dim)
     q_nope = q[..., : cfg.nope_head_dim]
     q_rope = apply_rope(q[..., cfg.nope_head_dim:], positions, rope_theta)
@@ -352,15 +352,14 @@ def mla_apply(
     cache_len: Optional[jax.Array] = None,
     rope_theta: float = 10_000.0,
     chunk: int = 512,
-    sp: Optional[SparsityConfig] = None,
     cross_kv=None,  # unused (MLA is self-attention only here)
 ):
     b, s, _ = x.shape
     h = cfg.q_heads
-    q_nope, q_rope = _mla_q(params, x, cfg, positions, rope_theta, sp)
-    ckv = rmsnorm_apply(params["kv_a_norm"], linear_apply(params["wkv_a"], x, sp=sp))
+    q_nope, q_rope = _mla_q(params, x, cfg, positions, rope_theta)
+    ckv = rmsnorm_apply(params["kv_a_norm"], linear_apply(params["wkv_a"], x))
     kr = apply_rope(
-        linear_apply(params["wk_rope"], x, sp=sp)[:, :, None, :], positions, rope_theta
+        linear_apply(params["wk_rope"], x)[:, :, None, :], positions, rope_theta
     )[:, :, 0, :]  # (b, s, rope_dim), shared across heads
 
     w_uk = params["w_uk"].astype(q_nope.dtype)  # (h, lora, nope)
@@ -411,7 +410,7 @@ def mla_apply(
                 cache["kr"], kr.astype(cache["kr"].dtype), (0, 0, 0)
             )
             new_cache = {"ckv": ckv_c, "kr": kr_c}
-    y = linear_apply(params["wo"], out.reshape(b, s, h * cfg.v_head_dim), sp=sp)
+    y = linear_apply(params["wo"], out.reshape(b, s, h * cfg.v_head_dim))
     return y, new_cache
 
 

@@ -1,26 +1,32 @@
 """Shared model building blocks: linear (dense / N:M sparse), norms,
 rotary embeddings, token embedding.
 
-Parameters are plain pytrees (nested dicts of jnp arrays); every layer is a
-pair of pure functions `*_init(key, ...) -> params` / `*_apply(params, x)`.
-Sparsity is integrated at the linear layer: a linear created with a target
-tag that the model's SparsityConfig covers stores compressed (vals, idx)
-parameters and dispatches to the indexmac kernel / XLA reference.
+Parameters are pytrees (nested dicts of jnp arrays, plus typed weight
+nodes); every layer is a pair of pure functions
+`*_init(key, ...) -> params` / `*_apply(params, x)`.
+
+Sparsity is integrated at the linear layer: a linear created with a
+target tag that the model's SparsityConfig covers stores a typed weight
+node — :class:`repro.core.nmweight.NMWeight` (compressed (vals, idx)
+pair) or :class:`MaskedNMWeight` (dense storage, mask re-derived each
+forward) — whose static metadata carries its own ``NMConfig`` and kernel
+policy. Apply paths dispatch on the node type; nothing threads an
+``sp=`` config through forward calls (the weight is self-describing),
+and nothing sniffs ``{"vals", "idx"}`` dict keys. Dense linears remain
+plain ``{"w": ...}`` dicts.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SparsityConfig
+from repro.core.nmweight import KernelPolicy, MaskedNMWeight, NMWeight
 from repro.core.sparsity import (
-    NMConfig,
     apply_mask,
     compress_nm,
-    decompress_nm,
     prune_mask_nm,
 )
 from repro.kernels.indexmac.ops import nm_matmul
@@ -50,7 +56,7 @@ def sparse_applies(sp: Optional[SparsityConfig], target: str, in_dim: int) -> bo
     return (
         sp is not None
         and target in sp.targets
-        and in_dim % sp.nm.m == 0
+        and in_dim % sp.nm_for(target).m == 0
     )
 
 
@@ -63,48 +69,70 @@ def linear_init(
     target: str = "dense",
     param_dtype=DEFAULT_PARAM_DTYPE,
     scale: Optional[float] = None,
-) -> dict:
+):
+    """Returns ``{"w": ...}`` (dense) or a typed sparse weight node.
+
+    ``sp`` routes *initialization only*: which targets are sparsified,
+    at which N:M pattern (per-target overrides allowed), in which mode.
+    The resulting node carries all of that as its own metadata — apply
+    paths never see the SparsityConfig again.
+    """
     scale = scale if scale is not None else in_dim ** -0.5
     w = jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32) * scale
     if not sparse_applies(sp, target, in_dim):
         return {"w": w.astype(param_dtype)}
-    mask = prune_mask_nm(w, sp.nm, axis=0)
+    nm = sp.nm_for(target)
+    mask = prune_mask_nm(w, nm, axis=0)
     if sp.mode == "masked":
         # dense storage; forward re-derives the top-N:M mask (SR-STE style)
-        return {"w": apply_mask(w, mask).astype(param_dtype)}
-    vals, idx = compress_nm(apply_mask(w, mask), sp.nm, axis=0)
-    return {"vals": vals.astype(param_dtype), "idx": idx}
+        return MaskedNMWeight(
+            w=apply_mask(w, mask).astype(param_dtype), nm=nm, axis=0
+        )
+    vals, idx = compress_nm(apply_mask(w, mask), nm, axis=0)
+    return NMWeight(
+        vals=vals.astype(param_dtype), idx=idx, nm=nm, axis=0,
+        kernel_policy=KernelPolicy("auto" if sp.use_kernel else "off"),
+    )
 
 
 def linear_apply(
-    params: dict,
+    params,
     x: jax.Array,
     *,
-    sp: Optional[SparsityConfig] = None,
     compute_dtype=None,
 ) -> jax.Array:
+    """y = x @ W. Dispatches on the weight node's type: NMWeight goes to
+    the indexmac kernel path (its own nm/policy), MaskedNMWeight
+    re-projects onto the N:M constraint set (straight-through grads),
+    ``{"w": ...}`` is a plain dense GEMM."""
     compute_dtype = compute_dtype or get_compute_dtype()
     xc = x.astype(compute_dtype)
-    if "vals" in params:  # compressed N:M
-        assert sp is not None
-        return nm_matmul(
-            xc, params["vals"].astype(compute_dtype), params["idx"],
-            sp.nm, sp.use_kernel,
+    if isinstance(params, NMWeight):
+        return nm_matmul(xc, params.astype(compute_dtype))
+    if isinstance(params, MaskedNMWeight):
+        # re-project every forward; gradients flow to all entries
+        # (straight-through), pruned entries can revive.
+        return jnp.einsum("...k,kn->...n", xc,
+                          params.project().astype(compute_dtype))
+    if not isinstance(params, dict) or "w" not in params:
+        raise TypeError(
+            "linear_apply expects an NMWeight, a MaskedNMWeight, or dense "
+            f"{{'w': ...}} params; got {type(params).__name__}. Legacy "
+            "compressed dicts must be upgraded to the typed representation "
+            "(repro.api.sparsify; checkpoints migrate on restore)."
         )
-    w = params["w"]
-    if sp is not None and sp.mode == "masked" and w.ndim == 2 and (
-        w.shape[0] % sp.nm.m == 0
-    ):
-        # re-project onto the N:M constraint set every forward; gradients
-        # flow to all entries (straight-through), pruned entries can revive.
-        w = apply_mask(w, prune_mask_nm(w, sp.nm, axis=0))
-    return jnp.einsum("...k,kn->...n", xc, w.astype(compute_dtype))
+    return jnp.einsum("...k,kn->...n", xc, params["w"].astype(compute_dtype))
 
 
-def linear_weight_dense(params: dict, nm: Optional[NMConfig] = None) -> jax.Array:
-    """Materialize the dense weight (tests / export)."""
-    if "vals" in params:
-        return decompress_nm(params["vals"], params["idx"], nm, axis=0)
+def linear_weight_dense(params) -> jax.Array:
+    """Materialize the *effective* dense weight (tests / export): what
+    the forward pass multiplies by. For masked weights that is the N:M
+    projection, matching ``repro.api.densify`` — the raw (unpruned)
+    training storage is ``params.w``."""
+    if isinstance(params, NMWeight):
+        return params.to_dense()
+    if isinstance(params, MaskedNMWeight):
+        return params.project()
     return params["w"]
 
 

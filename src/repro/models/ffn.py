@@ -1,4 +1,7 @@
-"""Feed-forward blocks (dense MLP) — sparse-eligible (target "ffn")."""
+"""Feed-forward blocks (dense MLP) — sparse-eligible (target "ffn").
+
+``sp`` is init-time routing only; the built weights carry their own
+sparsity metadata, so ``ffn_apply`` takes no config."""
 from __future__ import annotations
 
 from typing import Optional
@@ -36,12 +39,10 @@ def ffn_apply(
     params: dict,
     x: jax.Array,
     cfg: FFNConfig,
-    *,
-    sp: Optional[SparsityConfig] = None,
 ) -> jax.Array:
-    up = linear_apply(params["w_up"], x, sp=sp)
+    up = linear_apply(params["w_up"], x)
     if cfg.act in ("swiglu", "geglu"):
-        gate = linear_apply(params["w_gate"], x, sp=sp)
+        gate = linear_apply(params["w_gate"], x)
         act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
         h = act(gate) * up
     elif cfg.act == "gelu":
@@ -50,4 +51,4 @@ def ffn_apply(
         h = jnp.square(jax.nn.relu(up))
     else:
         raise ValueError(cfg.act)
-    return linear_apply(params["w_down"], h, sp=sp)
+    return linear_apply(params["w_down"], h)

@@ -55,14 +55,14 @@ def mamba_empty_cache(batch: int, d_model: int, cfg: MambaConfig,
     }
 
 
-def _ssm_params(params, xc, cfg: MambaConfig, sp):
+def _ssm_params(params, xc, cfg: MambaConfig):
     """xc: (..., d_in) post-conv activations -> (dt, b, c) selective params."""
-    proj = linear_apply(params["w_x"], xc, sp=sp)
+    proj = linear_apply(params["w_x"], xc)
     dt_raw, b, c = jnp.split(
         proj, [cfg.dt_rank, cfg.dt_rank + cfg.d_state], axis=-1
     )
     dt = jax.nn.softplus(
-        linear_apply(params["w_dt"], dt_raw, sp=None)
+        linear_apply(params["w_dt"], dt_raw)
         + params["dt_bias"].astype(dt_raw.dtype)
     )
     return dt, b, c
@@ -75,12 +75,11 @@ def mamba_apply(
     *,
     mode: str,
     cache: Optional[dict] = None,
-    sp: Optional[SparsityConfig] = None,
     **_,
 ):
     bsz, s, d_model = x.shape
     d_in = cfg.expand * d_model
-    xz = linear_apply(params["w_in"], x, sp=sp)
+    xz = linear_apply(params["w_in"], x)
     xin, z = jnp.split(xz, 2, axis=-1)
 
     conv_w = params["conv_w"].astype(xin.dtype)  # (d_conv, d_in)
@@ -94,7 +93,7 @@ def mamba_apply(
             xin.dtype
         )
         xc = jax.nn.silu(xc)
-        dt, b, c = _ssm_params(params, xc, cfg, sp)
+        dt, b, c = _ssm_params(params, xc, cfg)
         dtf = dt.astype(jnp.float32)
         da = jnp.exp(dtf[:, :, None] * a[None])  # (B, d_in, n)
         dbx = (dtf * xc.astype(jnp.float32))[:, :, None] * b.astype(jnp.float32)[
@@ -114,7 +113,7 @@ def mamba_apply(
             xin_p[:, i : i + s] * conv_w[i] for i in range(cfg.d_conv)
         ) + params["conv_b"].astype(xin.dtype)
         xc = jax.nn.silu(xc)
-        dt, b, c = _ssm_params(params, xc, cfg, sp)
+        dt, b, c = _ssm_params(params, xc, cfg)
         dtf = dt.astype(jnp.float32)
         da = jnp.exp(dtf[..., None] * a[None, None])  # (B,S,d_in,n)
         dbx = (dtf * xc.astype(jnp.float32))[..., None] * b.astype(jnp.float32)[
@@ -144,5 +143,5 @@ def mamba_apply(
             new_cache["conv"] = jnp.concatenate(
                 [pad.astype(jnp.float32), xin.astype(jnp.float32)], axis=1
             )[:, -(cfg.d_conv - 1):]
-    out = linear_apply(params["w_out"], y, sp=sp)
+    out = linear_apply(params["w_out"], y)
     return out, new_cache

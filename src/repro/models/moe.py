@@ -63,18 +63,16 @@ def moe_init(
     return p
 
 
-def _expert_ffn(params, xe: jax.Array, cfg: MoEConfig, sp):
+def _expert_ffn(params, xe: jax.Array, cfg: MoEConfig):
     """xe: (E, C, D) -> (E, C, D), vmapped over the expert axis."""
     fcfg = FFNConfig(d_ff=cfg.d_expert, act=cfg.act)
-    return jax.vmap(lambda pp, xx: ffn_apply(pp, xx, fcfg, sp=sp))(params, xe)
+    return jax.vmap(lambda pp, xx: ffn_apply(pp, xx, fcfg))(params, xe)
 
 
 def moe_apply(
     params: dict,
     x: jax.Array,  # (B, S, D)
     cfg: MoEConfig,
-    *,
-    sp: Optional[SparsityConfig] = None,
 ):
     """Returns (y, aux_loss). Dispatches to the shard_map expert-parallel
     path under an active multi-device mesh, else the single-device path."""
@@ -83,16 +81,14 @@ def moe_apply(
     mesh = _active_mesh()
     if mesh is not None and "model" in mesh.axis_names \
             and cfg.n_experts % mesh.shape["model"] == 0:
-        return _moe_apply_shard_map(params, x, cfg, mesh, sp=sp)
-    return _moe_apply_local(params, x, cfg, sp=sp)
+        return _moe_apply_shard_map(params, x, cfg, mesh)
+    return _moe_apply_local(params, x, cfg)
 
 
 def _moe_apply_local(
     params: dict,
     x: jax.Array,  # (B, S, D)
     cfg: MoEConfig,
-    *,
-    sp: Optional[SparsityConfig] = None,
 ):
     b, s, d = x.shape
     t = b * s
@@ -102,7 +98,7 @@ def _moe_apply_local(
     c = capacity(t, cfg)
 
     xf = shard_hint(xf, ("pod", "data"), None)
-    logits = linear_apply(params["router"], xf, sp=None,
+    logits = linear_apply(params["router"], xf,
                           compute_dtype=jnp.float32)  # (T, E) fp32
     scores = jax.nn.softmax(logits, axis=-1)
     gate_w, sel = jax.lax.top_k(scores, k)  # (T, k)
@@ -123,7 +119,7 @@ def _moe_apply_local(
         gathered, mode="drop")
     buf = shard_hint(buf, "model", None, None)
 
-    h = _expert_ffn(params["experts"], buf, cfg, sp)  # (E, C, D)
+    h = _expert_ffn(params["experts"], buf, cfg)  # (E, C, D)
     h = shard_hint(h, "model", None, None)
 
     out_sorted = jnp.where(
@@ -140,7 +136,7 @@ def _moe_apply_local(
     if "shared" in params:
         y = y + ffn_apply(
             params["shared"], xf,
-            FFNConfig(d_ff=cfg.n_shared * cfg.d_expert, act=cfg.act), sp=sp,
+            FFNConfig(d_ff=cfg.n_shared * cfg.d_expert, act=cfg.act),
         )
 
     # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
@@ -170,7 +166,7 @@ def _moe_apply_local(
 # ---------------------------------------------------------------------------
 
 
-def _moe_apply_shard_map(params, x, cfg: MoEConfig, mesh, *, sp):
+def _moe_apply_shard_map(params, x, cfg: MoEConfig, mesh):
     from jax.sharding import PartitionSpec as P
 
     b, s, d = x.shape
@@ -196,7 +192,7 @@ def _moe_apply_shard_map(params, x, cfg: MoEConfig, mesh, *, sp):
         c_loc = capacity(t_loc, cfg)
         r = jax.lax.axis_index("model")
 
-        logits = linear_apply(router, xf, sp=None,
+        logits = linear_apply(router, xf,
                               compute_dtype=jnp.float32)
         scores = jax.nn.softmax(logits, axis=-1)
         gate_w, sel = jax.lax.top_k(scores, k)  # (T, k)
@@ -224,7 +220,7 @@ def _moe_apply_shard_map(params, x, cfg: MoEConfig, mesh, *, sp):
                 < own_counts[:, None])  # (E_loc, C_loc)
         buf = buf * mask[..., None].astype(buf.dtype)
 
-        h = _expert_ffn(experts, buf, cfg, sp)  # (E_loc, C_loc, D)
+        h = _expert_ffn(experts, buf, cfg)  # (E_loc, C_loc, D)
         h = (h * mask[..., None].astype(h.dtype)).reshape(e_loc * c_loc, dl)
 
         # local combine: row for sorted slot i lives at
@@ -245,7 +241,7 @@ def _moe_apply_shard_map(params, x, cfg: MoEConfig, mesh, *, sp):
             y = y + ffn_apply(
                 shared, xf,
                 FFNConfig(d_ff=cfg.n_shared * cfg.d_expert // tp_size,
-                          act=cfg.act), sp=sp)
+                          act=cfg.act))
 
         y = jax.lax.psum(y, "model")
 

@@ -103,16 +103,16 @@ def _ddlerp(params, x, prev):
     return [mixed[:, :, i] for i in range(5)]
 
 
-def rwkv_time_mix(params, x, cfg: RWKVConfig, *, sp, state, last):
+def rwkv_time_mix(params, x, cfg: RWKVConfig, *, state, last):
     b, s, d = x.shape
     h = d // cfg.head_dim
     dk = cfg.head_dim
     prev = _token_shift(x, last)
     xr, xk, xv, xw, xg = _ddlerp(params, x, prev)
-    r = linear_apply(params["w_r"], xr, sp=sp).reshape(b, s, h, dk)
-    k = linear_apply(params["w_k"], xk, sp=sp).reshape(b, s, h, dk)
-    v = linear_apply(params["w_v"], xv, sp=sp).reshape(b, s, h, dk)
-    g = jax.nn.silu(linear_apply(params["w_g"], xg, sp=sp))
+    r = linear_apply(params["w_r"], xr).reshape(b, s, h, dk)
+    k = linear_apply(params["w_k"], xk).reshape(b, s, h, dk)
+    v = linear_apply(params["w_v"], xv).reshape(b, s, h, dk)
+    g = jax.nn.silu(linear_apply(params["w_g"], xg))
     dlora = jnp.tanh(
         jnp.einsum("bsd,dk->bsk", xw, params["decay_lora_a"].astype(x.dtype))
     )
@@ -139,18 +139,18 @@ def rwkv_time_mix(params, x, cfg: RWKVConfig, *, sp, state, last):
     y = ys.swapaxes(0, 1)  # (B,S,h,dk)
     y = rmsnorm_apply(params["wkv_norm"], y.astype(x.dtype))
     y = (y.reshape(b, s, d) * g)
-    out = linear_apply(params["w_o"], y, sp=sp)
+    out = linear_apply(params["w_o"], y)
     return out, stT, x[:, -1]
 
 
-def rwkv_channel_mix(params, x, *, sp, last):
+def rwkv_channel_mix(params, x, *, last):
     prev = _token_shift(x, last)
     mu = params["cm_mu"].astype(x.dtype)
     xk = x + (prev - x) * mu[0]
     xr = x + (prev - x) * mu[1]
-    k = linear_apply(params["w_cm_k"], xk, sp=sp)
-    v = linear_apply(params["w_cm_v"], jnp.square(jax.nn.relu(k)), sp=sp)
-    r = jax.nn.sigmoid(linear_apply(params["w_cm_r"], xr, sp=sp))
+    k = linear_apply(params["w_cm_k"], xk)
+    v = linear_apply(params["w_cm_v"], jnp.square(jax.nn.relu(k)))
+    r = jax.nn.sigmoid(linear_apply(params["w_cm_r"], xr))
     return r * v, x[:, -1]
 
 
@@ -161,14 +161,13 @@ def rwkv_apply(
     *,
     mode: str,
     cache: Optional[dict] = None,
-    sp: Optional[SparsityConfig] = None,
     **_,
 ):
     """Time-mix sublayer only; channel-mix is exposed separately so the
     block wrapper can put its own norm + residual around each."""
     state = cache["wkv"] if cache is not None else None
     last = cache["tm_last"] if cache is not None else None
-    y, st, tm_last = rwkv_time_mix(params, x, cfg, sp=sp, state=state, last=last)
+    y, st, tm_last = rwkv_time_mix(params, x, cfg, state=state, last=last)
     new_cache = None
     if mode in ("prefill", "decode"):
         assert cache is not None

@@ -11,7 +11,6 @@ structure (stacked leading dim for scanned groups).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
@@ -113,12 +112,12 @@ def block_apply(
     cache_len: Optional[jax.Array],
     enc_out: Optional[jax.Array] = None,
 ):
-    """Returns (x, new_cache, aux)."""
-    sp = cfg.sparsity
+    """Returns (x, new_cache, aux). Sparse weights are self-describing
+    typed nodes, so no sparsity config threads through apply calls."""
     mx = block.mixer
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
-    kw = dict(mode=mode, cache=None, sp=sp)
+    kw = dict(mode=mode, cache=None)
     mixer_cache = None
     if cache is not None:
         mixer_cache = {k: v for k, v in cache.items()
@@ -145,13 +144,13 @@ def block_apply(
             assert enc_out is not None
             amx = dataclasses.replace(mx, rope=False, causal=False)
             b = enc_out.shape[0]
-            kx = linear_apply(params["cross"]["wk"], enc_out, sp=sp)
-            vx = linear_apply(params["cross"]["wv"], enc_out, sp=sp)
+            kx = linear_apply(params["cross"]["wk"], enc_out)
+            vx = linear_apply(params["cross"]["wv"], enc_out)
             kx = kx.reshape(b, -1, mx.kv_heads, mx.head_dim)
             vx = vx.reshape(b, -1, mx.kv_heads, mx.head_dim)
             yc, _ = attention.gqa_apply(
                 params["cross"], hc, amx, mode="train", positions=positions,
-                rope_theta=cfg.rope_theta, chunk=cfg.attn_chunk, sp=sp,
+                rope_theta=cfg.rope_theta, chunk=cfg.attn_chunk,
                 cross_kv=(kx, vx),
             )
             if new_cache is not None:
@@ -161,7 +160,7 @@ def block_apply(
             amx = dataclasses.replace(mx, rope=False, causal=False)
             yc, _ = attention.gqa_apply(
                 params["cross"], hc, amx, mode="decode", positions=positions,
-                rope_theta=cfg.rope_theta, chunk=cfg.attn_chunk, sp=sp,
+                rope_theta=cfg.rope_theta, chunk=cfg.attn_chunk,
                 cross_kv=(cache["cross_k"], cache["cross_v"]),
             )
         x = x + yc
@@ -170,16 +169,16 @@ def block_apply(
         # channel-mix sublayer (token-shifted FFN) with its own state
         hm = rmsnorm_apply(params["mixer"]["cm_norm"], x, cfg.norm_eps)
         last = cache["cm_last"] if cache is not None else None
-        y2, cm_last = rwkv.rwkv_channel_mix(params["mixer"], hm, sp=sp, last=last)
+        y2, cm_last = rwkv.rwkv_channel_mix(params["mixer"], hm, last=last)
         x = x + y2
         if new_cache is not None:
             new_cache["cm_last"] = cm_last.astype(new_cache["cm_last"].dtype)
     elif block.mlp is not None:
         hm = rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
         if isinstance(block.mlp, MoEConfig):
-            y2, aux = moe.moe_apply(params["mlp"], hm, block.mlp, sp=sp)
+            y2, aux = moe.moe_apply(params["mlp"], hm, block.mlp)
         else:
-            y2 = ffn_apply(params["mlp"], hm, block.mlp, sp=sp)
+            y2 = ffn_apply(params["mlp"], hm, block.mlp)
         x = x + y2
     x = shard_hint(x, ("pod", "data"), None, None)
     return x, new_cache, aux
@@ -432,6 +431,7 @@ def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
                     per_expert = 2 * cfg.d_model * me.d_expert
                 if cfg.sparsity is not None and "expert" in cfg.sparsity.targets \
                    and cfg.sparsity.mode == "compressed":
-                    per_expert = int(per_expert * cfg.sparsity.nm.density)
+                    per_expert = int(
+                        per_expert * cfg.sparsity.nm_for("expert").density)
                 inactive += rep * per_expert * (me.n_experts - me.top_k)
     return total - inactive

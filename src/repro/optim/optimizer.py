@@ -1,8 +1,13 @@
 """AdamW with cosine schedule and global-norm clipping.
 
-Integer (non-inexact) parameter leaves — the sparse idx arrays — carry no
-optimizer state and are passed through untouched; their gradients arrive
-as float0 from `jax.grad(..., allow_int=True)`.
+Sparse weights are typed :class:`repro.core.nmweight.NMWeight` nodes and
+are handled *structurally*: the node is one unit (``is_leaf``), moments
+are allocated for its ``vals`` leaf only, and the ``idx`` leaf — pattern
+metadata, not a parameter — is passed through untouched with a scalar
+placeholder in the moment trees. No dtype sniffing is involved, so an
+unrelated integer leaf elsewhere in the params keeps its historical
+behavior (no state, passed through; its gradient arrives as float0 from
+`jax.grad(..., allow_int=True)`).
 
 Optimizer-state sharding: moments mirror the parameter PartitionSpecs, so
 under the 2D (fsdp x tp) parameter layout the optimizer state is fully
@@ -15,6 +20,8 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.nmweight import NMWeight
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,7 +38,14 @@ class AdamWConfig:
 
 
 def _is_trainable(leaf) -> bool:
+    """Plain-leaf rule: float leaves train, integer leaves pass through.
+    NMWeight nodes never reach this — they are excluded structurally
+    (see ``_is_weight_node`` call sites), not by dtype."""
     return jnp.issubdtype(leaf.dtype, jnp.inexact)
+
+
+def _is_weight_node(x) -> bool:
+    return isinstance(x, NMWeight)
 
 
 def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
@@ -46,12 +60,21 @@ def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 
 def adamw_init(params: Any) -> dict:
-    zeros = lambda p: (jnp.zeros_like(p) if _is_trainable(p)
-                       else jnp.zeros((), jnp.int8))
+    def zeros(p):
+        if _is_weight_node(p):
+            # moments for the trainable vals leaf only; the idx leaf is
+            # structural metadata — a scalar placeholder keeps the tree
+            # shape without allocating idx-sized state.
+            return dataclasses.replace(
+                p, vals=jnp.zeros_like(p.vals),
+                idx=jnp.zeros((), jnp.int8))
+        return (jnp.zeros_like(p) if _is_trainable(p)
+                else jnp.zeros((), jnp.int8))
+
     return {
         "step": jnp.zeros((), jnp.int32),
-        "m": jax.tree.map(zeros, params),
-        "v": jax.tree.map(zeros, params),
+        "m": jax.tree.map(zeros, params, is_leaf=_is_weight_node),
+        "v": jax.tree.map(zeros, params, is_leaf=_is_weight_node),
     }
 
 
@@ -73,9 +96,7 @@ def adamw_update(cfg: AdamWConfig, params: Any, grads: Any, state: dict):
     bc1 = 1 - b1 ** step.astype(jnp.float32)
     bc2 = 1 - b2 ** step.astype(jnp.float32)
 
-    def upd(p, g, m, v):
-        if not _is_trainable(p):
-            return p, m, v
+    def upd_leaf(p, g, m, v):
         g = g.astype(jnp.float32) * scale
         pf = p.astype(jnp.float32)
         m = b1 * m + (1 - b1) * g
@@ -85,7 +106,20 @@ def adamw_update(cfg: AdamWConfig, params: Any, grads: Any, state: dict):
         pf = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * pf)
         return pf.astype(p.dtype), m, v
 
-    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    def upd(p, g, m, v):
+        if _is_weight_node(p):
+            # structural exclusion: only vals trains; idx (and its scalar
+            # moment placeholders) pass through bit-identical.
+            nv, nm_, nvv = upd_leaf(p.vals, g.vals, m.vals, v.vals)
+            return (dataclasses.replace(p, vals=nv),
+                    dataclasses.replace(m, vals=nm_),
+                    dataclasses.replace(v, vals=nvv))
+        if not _is_trainable(p):
+            return p, m, v
+        return upd_leaf(p, g, m, v)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"],
+                       is_leaf=_is_weight_node)
     # out is a tree of 3-tuples; split it
     new_params = jax.tree.map(lambda t: t[0], out,
                               is_leaf=lambda t: isinstance(t, tuple))

@@ -45,3 +45,12 @@ def shard_hint(x: jax.Array, *spec) -> jax.Array:
             size *= mesh.shape[a]
         fixed.append(s if size > 0 and dim % size == 0 else None)
     return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def shard_hint_leaves(tree, *spec):
+    """Apply one shard_hint to every array leaf of a small pytree.
+
+    The main consumer is the compressed-operand pin in ``nm_matmul``:
+    an NMWeight's vals and idx (same shape, same layout role) must be
+    co-sharded so the FSDP gather moves the compressed pair together."""
+    return jax.tree.map(lambda l: shard_hint(l, *spec), tree)

@@ -22,12 +22,15 @@ Strategy (MaxText-style 2D param sharding):
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
+
+from repro.core.nmweight import MaskedNMWeight, NMWeight, is_weight_node
 
 # parameter leaves whose *last-but-one / last* axes are (in, out) of a GEMM,
 # keyed by leaf name: value = (spec for in-axis, spec for out-axis)
@@ -88,46 +91,67 @@ def _fit(spec: tuple, shape: tuple, mesh_shape: dict[str, int]) -> P:
     return P(*fixed)
 
 
+def _gemm_rule(owner: str) -> tuple:
+    rule = _GEMM_RULES.get(owner)
+    if rule is None:
+        rule = _COL if owner not in ("router",) else (None, None)
+    if owner == "router":
+        rule = (None, None)
+    if owner == "lm_head":
+        rule = _COL
+    return rule
+
+
+def _adjust_rule(rule: tuple, names: list, sharding_mode: str) -> tuple:
+    if "experts" in names:
+        # experts are stacked on a leading E axis -> expert parallelism
+        rule = ("model",) + tuple(None if r == "model" else r for r in rule)
+    elif "shared" in names:
+        # shared experts enter the MoE shard_map as pure TP blocks
+        rule = tuple(None if r == "data" else r for r in rule)
+    if sharding_mode == "tp_only":
+        rule = tuple(None if r == "data" else r for r in rule)
+    return rule
+
+
 def _leaf_spec(path: tuple, leaf, mesh_shape: dict[str, int],
-               sharding_mode: str) -> P:
+               sharding_mode: str):
     names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
     name = names[-1]
-    in_moe_experts = "experts" in names
-    in_moe_shared = "shared" in names
 
-    if name in ("w", "vals", "idx"):
+    if isinstance(leaf, NMWeight):
+        # typed dispatch: the GEMM rule comes from the weight's own slot
+        # name; idx is co-sharded with vals (same logical layout — both
+        # halves of the compressed operand the FSDP gather must move
+        # together).
+        rule = _adjust_rule(_gemm_rule(name), names, sharding_mode)
+        return dataclasses.replace(
+            leaf,
+            vals=_fit(rule, leaf.vals.shape, mesh_shape),
+            idx=_fit(rule, leaf.idx.shape, mesh_shape),
+        )
+    if isinstance(leaf, MaskedNMWeight):
+        rule = _adjust_rule(_gemm_rule(name), names, sharding_mode)
+        return dataclasses.replace(
+            leaf, w=_fit(rule, leaf.w.shape, mesh_shape))
+
+    if name == "w":
         owner = names[-2] if len(names) >= 2 else ""
-        rule = _GEMM_RULES.get(owner)
-        if rule is None:
-            rule = _COL if owner not in ("router",) else (None, None)
-        if owner == "router":
-            rule = (None, None)
-        if names[-2:] == ["lm_head", name] or (len(names) >= 2 and names[-2] == "lm_head"):
-            rule = _COL
+        rule = _gemm_rule(owner)
     elif name in _NAMED_RULES:
         rule = _NAMED_RULES[name]
-    elif name in ("scale", "bias", "dt_bias", "d_skip", "conv_b",
-                  "decay_base"):
-        rule = (None,) * leaf.ndim
     else:
         rule = (None,) * leaf.ndim
 
-    if in_moe_experts:
-        # experts are stacked on a leading E axis -> expert parallelism
-        rule = ("model",) + tuple(None if r == "model" else r for r in rule)
-    elif in_moe_shared:
-        # shared experts enter the MoE shard_map as pure TP blocks
-        rule = tuple(None if r == "data" else r for r in rule)
-
-    if sharding_mode == "tp_only":
-        rule = tuple(None if r == "data" else r for r in rule)
+    rule = _adjust_rule(rule, names, sharding_mode)
     return _fit(rule, leaf.shape, mesh_shape)
 
 
 def param_pspecs(params: Any, mesh: Mesh, sharding_mode: str = "fsdp"):
     mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
     return jax.tree_util.tree_map_with_path(
-        lambda p, l: _leaf_spec(p, l, mesh_shape, sharding_mode), params
+        lambda p, l: _leaf_spec(p, l, mesh_shape, sharding_mode), params,
+        is_leaf=is_weight_node,
     )
 
 

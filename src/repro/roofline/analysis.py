@@ -15,9 +15,8 @@ Hardware constants (task spec, TPU v5e-class): 197 bf16 TFLOP/s per chip,
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Any, Optional
+from typing import Optional
 
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s

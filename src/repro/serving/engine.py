@@ -108,31 +108,26 @@ class ServeEngine:
 
     def _autotune_sparse_blocks(self) -> None:
         """Warm the autotune cache for this engine's sparse-GEMM shapes:
-        decode steps run M = slots rows, prefill M = slots * prefill_len."""
-        sp = getattr(self.lm.cfg, "sparsity", None)
-        if sp is None or sp.mode != "compressed":
-            return
+        decode steps run M = slots rows, prefill M = slots * prefill_len.
+
+        Walks the typed NMWeight leaves of the param tree: each weight's
+        own NMConfig supplies the Kc -> K ratio, so a model mixing 2:4
+        and 1:4 layers tunes every shape at its true geometry (the old
+        dict walk hardcoded the global ratio). Dense and masked models
+        contribute no NMWeight leaves — the walk is the gate."""
+        from repro.core.nmweight import NMWeight
         from repro.kernels import autotune
         from repro.models.common import get_compute_dtype
 
-        shapes: set[tuple[int, int]] = set()
-
-        def visit(node: Any) -> None:
-            if isinstance(node, dict):
-                if "vals" in node and "idx" in node:
-                    kc, n = node["vals"].shape[-2:]  # scan-stacked leaves
-                    shapes.add((kc * sp.nm.m // sp.nm.n, n))
-                    return
-                for v in node.values():
-                    visit(v)
-            elif isinstance(node, (list, tuple)):
-                for v in node:
-                    visit(v)
-
-        visit(self.params)
-        for k, n in sorted(shapes):
+        shapes: set[tuple[int, int, Any]] = set()
+        for leaf in jax.tree.leaves(
+                self.params, is_leaf=lambda x: isinstance(x, NMWeight)):
+            if isinstance(leaf, NMWeight):
+                kc, n = leaf.vals.shape[-2:]  # scan-stacked leaves
+                shapes.add((kc * leaf.nm.m // leaf.nm.n, n, leaf.nm))
+        for k, n, nm in sorted(shapes, key=lambda t: (t[0], t[1], t[2].tag)):
             for m_rows in {self.slots, self.slots * self.prefill_len}:
-                autotune.ensure_tuned(m_rows, n, k, sp.nm,
+                autotune.ensure_tuned(m_rows, n, k, nm,
                                       dtype=get_compute_dtype())
 
     def _sample(self, logits: np.ndarray) -> int:

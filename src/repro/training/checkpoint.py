@@ -1,11 +1,25 @@
 """Sharded checkpointing with async save and elastic restore.
 
-Format: one .npz per pytree "shard group" + a JSON manifest holding the
-treedef, dtypes, shapes, step and data-pipeline cursor. Restore works onto
-a *different* mesh/sharding than the save used (elastic scaling): arrays
-are loaded host-side and re-placed with jax.device_put under the target
-sharding — the standard resize-on-restart flow for 1000+ node jobs where
-the replacement slice differs from the failed one.
+Format (v2): one .npz per pytree "shard group" + a JSON manifest holding
+the step, the data-pipeline cursor, per-leaf key paths, and the static
+metadata of every typed sparse weight node
+(:class:`repro.core.nmweight.NMWeight` / :class:`MaskedNMWeight`): the
+N:M pattern, compressed axis and kernel policy travel WITH the
+checkpoint, and restore verifies them against the template (a 1:4
+checkpoint cannot silently restore into a 2:4 model — the arrays would
+decompress into garbage long before any shape check fired). Restore
+works onto a *different* mesh/sharding than the save used (elastic
+scaling): arrays are loaded host-side and re-placed with jax.device_put
+under the target sharding — the standard resize-on-restart flow for
+1000+ node jobs where the replacement slice differs from the failed one.
+
+Legacy migration: checkpoints written before NMWeight existed stored
+compressed weights as ``{"vals", "idx"}`` dicts, whose sorted-key
+flatten order (idx, vals) is the reverse of NMWeight's (vals, idx) — a
+blind leaf-index restore would transpose the pair. A one-time shim
+detects the old manifest (no ``format`` field), rebuilds the legacy leaf
+order by dict-ifying the typed template, and remaps by key path. This
+module is the ONE place allowed to know the legacy dict layout.
 
 Async: `save_async` snapshots to host memory synchronously (cheap) and
 writes to disk on a background thread so the train loop is not blocked on
@@ -21,13 +35,57 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-_SEP = "|"
+from repro.core.nmweight import MaskedNMWeight, NMWeight, is_weight_node
+
+_FORMAT = 2
 
 
-def _flatten(tree: Any) -> tuple[dict[str, np.ndarray], Any]:
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    named = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
-    return named, treedef
+def _pathstr(path) -> str:
+    return "/".join(
+        str(getattr(k, "key", getattr(k, "name", k))) for k in path)
+
+
+def _flatten(tree: Any) -> tuple[dict[str, np.ndarray], list[str]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    named = {f"leaf_{i}": np.asarray(l) for i, (_, l) in enumerate(flat)}
+    return named, [_pathstr(p) for p, _ in flat]
+
+
+def _weight_meta(tree: Any) -> dict[str, dict]:
+    """Static metadata of every typed sparse weight node, keyed by path."""
+    out: dict[str, dict] = {}
+    flat = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=is_weight_node)[0]
+    for path, leaf in flat:
+        if isinstance(leaf, NMWeight):
+            pol = leaf.kernel_policy
+            out[_pathstr(path)] = {
+                "kind": "compressed", "n": leaf.nm.n, "m": leaf.nm.m,
+                "axis": leaf.axis,
+                "policy": {"mode": pol.mode,
+                           "block": list(pol.block) if pol.block else None},
+            }
+        elif isinstance(leaf, MaskedNMWeight):
+            out[_pathstr(path)] = {
+                "kind": "masked", "n": leaf.nm.n, "m": leaf.nm.m,
+                "axis": leaf.axis,
+            }
+    return out
+
+
+def _to_legacy(tree: Any) -> Any:
+    """Template as it looked before typed weights: NMWeight ->
+    {"vals", "idx"} dict, MaskedNMWeight -> {"w"} dict (migration shim
+    only — nothing else may reconstruct this layout)."""
+
+    def conv(x):
+        if isinstance(x, NMWeight):
+            return {"vals": x.vals, "idx": x.idx}
+        if isinstance(x, MaskedNMWeight):
+            return {"w": x.w}
+        return x
+
+    return jax.tree.map(conv, tree, is_leaf=is_weight_node)
 
 
 class Checkpointer:
@@ -66,8 +124,9 @@ class Checkpointer:
              async_: bool = False) -> None:
         self.wait()
         # snapshot to host memory (synchronous, releases devices)
-        named, _ = _flatten(state)
-        meta = {"step": step, "extra": extra or {}}
+        named, paths = _flatten(state)
+        meta = {"format": _FORMAT, "step": step, "extra": extra or {},
+                "leaves": paths, "weights": _weight_meta(state)}
         if async_:
             self._thread = threading.Thread(
                 target=self._write, args=(step, named, meta), daemon=True)
@@ -95,6 +154,51 @@ class Checkpointer:
         steps = self.list_steps()
         return steps[-1] if steps else None
 
+    def _leaf_order(self, meta: dict, template: Any) -> list[int]:
+        """Checkpoint leaf index for each template leaf, in template
+        order. v2 manifests restore by position (paths recorded for
+        diagnostics); legacy manifests go through the migration shim."""
+        tflat = jax.tree_util.tree_flatten_with_path(template)[0]
+        tpaths = [_pathstr(p) for p, _ in tflat]
+        if meta.get("format", 1) >= 2:
+            saved = meta.get("leaves")
+            if saved is not None and list(saved) != tpaths:
+                extra = set(saved) ^ set(tpaths)
+                raise ValueError(
+                    "checkpoint tree does not match restore template "
+                    f"(mismatched paths, e.g. {sorted(extra)[:3]})")
+            return list(range(len(tpaths)))
+        # legacy {vals, idx} dict checkpoints: rebuild the old flatten
+        # order from the dict-ified template and remap by key path.
+        lflat = jax.tree_util.tree_flatten_with_path(_to_legacy(template))[0]
+        index = {_pathstr(p): i for i, (p, _) in enumerate(lflat)}
+        try:
+            return [index[p] for p in tpaths]
+        except KeyError as e:
+            raise ValueError(
+                f"legacy checkpoint migration failed: no stored leaf for "
+                f"template path {e.args[0]!r}") from None
+
+    def _check_weight_meta(self, meta: dict, template: Any) -> None:
+        stored = meta.get("weights")
+        if stored is None:  # legacy manifest: nothing to verify against
+            return
+        want = _weight_meta(template)
+        for path, tw in want.items():
+            sw = stored.get(path)
+            if sw is None:
+                raise ValueError(
+                    f"checkpoint has no sparse-weight metadata for {path!r}"
+                    " (saved from a dense/differently-sparsified model?)")
+            for key in ("kind", "n", "m", "axis"):
+                if sw.get(key) != tw.get(key):
+                    raise ValueError(
+                        f"sparse-weight metadata mismatch at {path!r}: "
+                        f"checkpoint {sw.get(key)!r} != template "
+                        f"{tw.get(key)!r} for {key!r}")
+            # kernel_policy is an execution preference, not data: the
+            # template's policy wins on restore (no check).
+
     def restore(self, template: Any, step: Optional[int] = None,
                 shardings: Any = None) -> tuple[Any, dict]:
         """template: pytree with the target structure (e.g. from
@@ -107,11 +211,13 @@ class Checkpointer:
         path = os.path.join(self.dir, f"step_{step:08d}")
         with open(os.path.join(path, "manifest.json")) as f:
             meta = json.load(f)
+        self._check_weight_meta(meta, template)
         data = np.load(os.path.join(path, "arrays.npz"))
+        order = self._leaf_order(meta, template)
         leaves, treedef = jax.tree_util.tree_flatten(template)
         loaded = []
         for i, leaf in enumerate(leaves):
-            arr = data[f"leaf_{i}"]
+            arr = data[f"leaf_{order[i]}"]
             if tuple(arr.shape) != tuple(leaf.shape):
                 raise ValueError(
                     f"leaf {i}: checkpoint shape {arr.shape} != "

@@ -9,8 +9,6 @@ and launch/dryrun.py own the pjit wrapping).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

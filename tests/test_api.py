@@ -1,0 +1,338 @@
+"""Public facade (`repro.api`) + NMWeight pytree semantics + the
+mixed-per-layer-sparsity acceptance flow (init -> train -> serve ->
+checkpoint round-trip) + the API-freeze guard that keeps the typed
+representation from regressing into dict key-sniffing / sp= threading."""
+import ast
+import dataclasses
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.nmweight import KernelPolicy, MaskedNMWeight, NMWeight
+from repro.core.sparsity import NMConfig, check_nm_pattern, random_nm_matrix
+from repro.kernels import registry
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+# ---------------------------------------------------------------------------
+# sparsify / densify / nm_matmul / is_sparse
+# ---------------------------------------------------------------------------
+
+
+def test_sparsify_densify_roundtrip():
+    nm = NMConfig(2, 4)
+    w = random_nm_matrix(jax.random.PRNGKey(0), (32, 16), nm, axis=0)
+    sw = api.sparsify(w, nm)
+    assert isinstance(sw, NMWeight)
+    assert sw.vals.shape == (16, 16) and sw.idx.dtype == jnp.int8
+    assert sw.nm == nm and sw.axis == 0
+    np.testing.assert_array_equal(np.asarray(api.densify(sw)),
+                                  np.asarray(w))  # lossless on N:M input
+
+
+def test_sparsify_prunes_dense_input():
+    nm = NMConfig(2, 4)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 8))
+    sw = api.sparsify(w, nm)
+    assert check_nm_pattern(api.densify(sw), nm, axis=0)
+
+
+def test_sparsify_validates():
+    with pytest.raises(ValueError, match="divisible"):
+        api.sparsify(jnp.ones((10, 4)), NMConfig(2, 4))
+    with pytest.raises(ValueError, match="2D"):
+        api.sparsify(jnp.ones((8,)), NMConfig(2, 4))
+    with pytest.raises(TypeError, match="kernel_policy"):
+        api.sparsify(jnp.ones((8, 4)), NMConfig(2, 4), kernel_policy=42)
+    with pytest.raises(ValueError, match="mode"):
+        KernelPolicy(mode="sometimes")
+
+
+def test_is_sparse():
+    nm = NMConfig(2, 4)
+    sw = api.sparsify(jnp.ones((8, 4)), nm)
+    assert api.is_sparse(sw)
+    assert api.is_sparse(MaskedNMWeight(w=jnp.ones((8, 4)), nm=nm))
+    assert not api.is_sparse({"w": jnp.ones((8, 4))})
+    assert not api.is_sparse(jnp.ones((8, 4)))
+
+
+def test_densify_on_dense_nodes():
+    w = jnp.ones((8, 4))
+    np.testing.assert_array_equal(np.asarray(api.densify({"w": w})),
+                                  np.asarray(w))
+    np.testing.assert_array_equal(np.asarray(api.densify(w)), np.asarray(w))
+
+
+def test_nm_matmul_matches_dense():
+    nm = NMConfig(2, 4)
+    w = random_nm_matrix(jax.random.PRNGKey(2), (256, 128), nm, axis=0)
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 256))
+    sw = api.sparsify(w, nm)
+    y = api.nm_matmul(x, sw)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-3)
+    with pytest.raises(TypeError, match="NMWeight"):
+        api.nm_matmul(x, {"vals": sw.vals, "idx": sw.idx})
+
+
+def test_nm_matmul_rejects_wrong_axis():
+    nm = NMConfig(2, 4)
+    sw = api.sparsify(jax.random.normal(jax.random.PRNGKey(0), (16, 8)),
+                      nm, axis=1)
+    with pytest.raises(ValueError, match="axis"):
+        api.nm_matmul(jnp.ones((4, 16)), sw)
+
+
+# ---------------------------------------------------------------------------
+# kernel policy drives dispatch
+# ---------------------------------------------------------------------------
+
+
+def _policy_weight(mode, k=256, n=128):
+    nm = NMConfig(2, 4)
+    w = random_nm_matrix(jax.random.PRNGKey(4), (k, n), nm, axis=0)
+    return w, api.sparsify(w, nm, kernel_policy=mode)
+
+
+def test_policy_off_pins_reference():
+    w, sw = _policy_weight("off")
+    registry.clear_history()
+    api.nm_matmul(jnp.ones((64, 256)), sw)
+    rec = registry.last_dispatch("nm_matmul")
+    assert rec.impl == "reference" and "use_kernel=False" in rec.reason
+
+
+def test_policy_auto_takes_kernel_when_shape_allows():
+    w, sw = _policy_weight("auto")
+    registry.clear_history()
+    x = jax.random.normal(jax.random.PRNGKey(5), (64, 256))
+    y = api.nm_matmul(x, sw)
+    assert registry.last_dispatch("nm_matmul").impl == "pallas_padded"
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_policy_auto_respects_waste_limit_force_ignores_it():
+    # single-row decode: padding M 1 -> block_m exceeds the default cap
+    w, sw_auto = _policy_weight("auto")
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 256))
+    registry.clear_history()
+    api.nm_matmul(x, sw_auto)
+    assert registry.last_dispatch("nm_matmul").impl == "reference"
+
+    sw_force = dataclasses.replace(sw_auto,
+                                   kernel_policy=KernelPolicy("force"))
+    registry.clear_history()
+    y = api.nm_matmul(x, sw_force)
+    assert registry.last_dispatch("nm_matmul").impl == "pallas_padded"
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_policy_block_override_recorded():
+    w, _ = _policy_weight("auto")
+    sw = api.sparsify(w, NMConfig(2, 4),
+                      kernel_policy=KernelPolicy("auto", (128, 128, 256)))
+    registry.clear_history()
+    api.nm_matmul(jnp.ones((128, 256)), sw)
+    rec = registry.last_dispatch("nm_matmul")
+    assert rec.impl == "pallas_padded" and rec.block == (128, 128, 256)
+
+
+# ---------------------------------------------------------------------------
+# pytree semantics
+# ---------------------------------------------------------------------------
+
+
+def test_nmweight_is_a_pytree():
+    sw = api.sparsify(jax.random.normal(jax.random.PRNGKey(7), (16, 8)),
+                      NMConfig(2, 4))
+    leaves, treedef = jax.tree_util.tree_flatten(sw)
+    assert len(leaves) == 2  # vals, idx — metadata lives in the treedef
+    doubled = jax.tree.map(lambda x: x * 2, sw)
+    assert isinstance(doubled, NMWeight)
+    assert doubled.nm == sw.nm and doubled.kernel_policy == sw.kernel_policy
+    # different static metadata -> different treedef (mixed sparsity is
+    # structurally visible)
+    other = dataclasses.replace(sw, nm=NMConfig(1, 4))
+    assert jax.tree_util.tree_structure(other) != treedef
+
+
+def test_nmweight_paths_use_field_names():
+    flat = jax.tree_util.tree_flatten_with_path({"wq": api.sparsify(
+        jnp.ones((8, 4)), NMConfig(2, 4))})[0]
+    names = [getattr(p[-1], "name", None) for p, _ in flat]
+    assert names == ["vals", "idx"]
+
+
+def test_nmweight_under_jit_and_grad():
+    nm = NMConfig(2, 4)
+    w = random_nm_matrix(jax.random.PRNGKey(8), (32, 16), nm, axis=0)
+    sw = api.sparsify(w, nm, kernel_policy="off")
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 32))
+
+    @jax.jit
+    def f(x, sw):
+        return api.nm_matmul(x, sw).sum()
+
+    assert np.isfinite(float(f(x, sw)))
+    g = jax.grad(lambda sw: f(x, sw), allow_int=True)(sw)
+    assert isinstance(g, NMWeight)
+    assert g.vals.shape == sw.vals.shape
+    assert bool(jnp.isfinite(g.vals).all())
+
+
+def test_nmweight_under_vmap_stacks_leaves():
+    nm = NMConfig(2, 4)
+
+    def make(key):
+        return api.sparsify(jax.random.normal(key, (8, 4)), nm)
+
+    stacked = jax.vmap(make)(jax.random.split(jax.random.PRNGKey(10), 3))
+    assert isinstance(stacked, NMWeight)
+    assert stacked.vals.shape == (3, 4, 4) and stacked.idx.shape == (3, 4, 4)
+    assert stacked.nm == nm
+
+
+def test_masked_weight_projects():
+    nm = NMConfig(2, 4)
+    mw = MaskedNMWeight(w=jax.random.normal(jax.random.PRNGKey(11), (16, 8)),
+                        nm=nm)
+    assert check_nm_pattern(mw.project(), nm, axis=0)
+    # straight-through: grads wrt the dense w are defined everywhere
+    g = jax.grad(lambda m: jnp.sum(m.project() ** 2))(mw)
+    assert g.w.shape == (16, 8)
+
+
+# ---------------------------------------------------------------------------
+# mixed per-layer sparsity: the acceptance flow
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mixed_lm():
+    from repro.configs import get_reduced
+    from repro.configs.base import SparsityConfig
+    from repro.models import common
+    from repro.models.transformer import LM
+
+    common.set_compute_dtype(jnp.float32)
+    cfg = get_reduced("deepseek-v2-lite-16b")
+    cfg = dataclasses.replace(
+        cfg, sparsity=SparsityConfig(
+            nm=NMConfig(2, 4), mode="compressed",
+            targets=("ffn", "attn_proj", "expert"),
+            nm_overrides=(("expert", NMConfig(1, 4)),)))
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    yield cfg, lm, params
+    common.set_compute_dtype(jnp.bfloat16)
+
+
+def _nm_leaves(tree):
+    return [l for l in jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, NMWeight))
+        if isinstance(l, NMWeight)]
+
+
+def test_mixed_sparsity_init_carries_both_configs(mixed_lm):
+    _, _, params = mixed_lm
+    tags = {w.nm.tag for w in _nm_leaves(params)}
+    assert tags == {"2:4", "1:4"}  # 2:4 attn/ffn + 1:4 experts coexist
+
+
+def test_mixed_sparsity_trains_one_step(mixed_lm):
+    from repro.optim.optimizer import AdamWConfig, adamw_init
+    from repro.training.train_loop import TrainConfig, make_train_step
+
+    cfg, lm, params = mixed_lm
+    opt = adamw_init(params)
+    step = make_train_step(lm, TrainConfig(
+        opt=AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10),
+        microbatches=1, remat="none"))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                             cfg.vocab_size)
+    p2, _, metrics = step(params, opt, {"tokens": tok, "labels": tok})
+    assert np.isfinite(float(metrics["loss"]))
+    for w0, w1 in zip(_nm_leaves(params), _nm_leaves(p2)):
+        assert w0.nm == w1.nm
+        np.testing.assert_array_equal(np.asarray(w0.idx), np.asarray(w1.idx))
+
+
+def test_mixed_sparsity_serves_one_decode_step(mixed_lm):
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg, lm, params = mixed_lm
+    eng = ServeEngine(lm, params, slots=1, max_seq=32, prefill_len=8)
+    eng.submit(Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                       max_new=2))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out) == 2
+
+
+def test_mixed_sparsity_checkpoint_roundtrip(mixed_lm, tmp_path):
+    from repro.training.checkpoint import Checkpointer
+
+    _, _, params = mixed_lm
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, params)
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    got, _ = ck.restore(template)
+    for w0, w1 in zip(_nm_leaves(params), _nm_leaves(got)):
+        assert w0.nm == w1.nm and w0.axis == w1.axis
+        np.testing.assert_array_equal(np.asarray(w0.vals),
+                                      np.asarray(w1.vals))
+        np.testing.assert_array_equal(np.asarray(w0.idx),
+                                      np.asarray(w1.idx))
+
+
+# ---------------------------------------------------------------------------
+# API freeze: the typed representation must not regress
+# ---------------------------------------------------------------------------
+
+# the checkpoint migration shim is the ONE place allowed to know the
+# legacy {"vals", "idx"} dict layout
+_SHIM = SRC / "training" / "checkpoint.py"
+
+
+def test_no_vals_key_sniffing_outside_migration_shim():
+    banned = ('"vals" in', "'vals' in", '["vals"]', "['vals']",
+              '"idx" in', "'idx' in")
+    offenders = []
+    for py in sorted(SRC.rglob("*.py")):
+        if py == _SHIM:
+            continue
+        text = py.read_text()
+        for pat in banned:
+            if pat in text:
+                offenders.append((str(py.relative_to(SRC)), pat))
+    assert not offenders, (
+        f"dict key-sniffing of the compressed representation crept back "
+        f"in: {offenders}; dispatch on NMWeight instead")
+
+
+def test_no_sp_threading_in_apply_paths():
+    """No *_apply function (or the shared linear entry points) may take a
+    sparsity config — weights are self-describing typed nodes."""
+    offenders = []
+    for py in sorted(SRC.rglob("*.py")):
+        tree = ast.parse(py.read_text())
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not (node.name.endswith("_apply")
+                    or node.name in ("linear_weight_dense",)):
+                continue
+            args = node.args
+            names = [a.arg for a in
+                     args.posonlyargs + args.args + args.kwonlyargs]
+            if "sp" in names or "sparsity" in names:
+                offenders.append((str(py.relative_to(SRC)), node.name))
+    assert not offenders, f"sp= threading crept back into: {offenders}"

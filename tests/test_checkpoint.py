@@ -53,6 +53,97 @@ def test_shape_mismatch_rejected(tmp_path):
         ck.restore({"w": jnp.ones((5,))})
 
 
+def _nmweight_state():
+    """A small param tree mixing typed sparse nodes and plain leaves."""
+    from repro.api import KernelPolicy, NMConfig, sparsify
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    w24 = sparsify(jax.random.normal(k1, (16, 8)), NMConfig(2, 4),
+                   kernel_policy=KernelPolicy("auto", block=(8, 128, 128)))
+    w14 = sparsify(jax.random.normal(k2, (16, 4)), NMConfig(1, 4),
+                   kernel_policy="off")
+    return {"params": {"ffn": {"w_up": w24}, "attn": {"wq": w14},
+                       "norm": {"scale": jnp.ones((8,))}}}
+
+
+def test_nmweight_roundtrip_bit_exact(tmp_path):
+    """Save an NMWeight-bearing tree, restore into a fresh template:
+    vals/idx bit-exact, nm/axis metadata preserved."""
+    from repro.core.nmweight import NMWeight
+
+    ck = Checkpointer(str(tmp_path))
+    st = _nmweight_state()
+    ck.save(5, st)
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    got, meta = ck.restore(template)
+    for key in ("ffn", "attn"):
+        orig = list(st["params"][key].values())[0]
+        rest = list(got["params"][key].values())[0]
+        assert isinstance(rest, NMWeight)
+        np.testing.assert_array_equal(np.asarray(rest.vals),
+                                      np.asarray(orig.vals))
+        np.testing.assert_array_equal(np.asarray(rest.idx),
+                                      np.asarray(orig.idx))
+        assert rest.nm == orig.nm and rest.axis == orig.axis
+    # the manifest carries the weight metadata explicitly
+    tags = {w["n"] for w in meta["weights"].values()}
+    assert tags == {1, 2}
+
+
+def test_nm_metadata_mismatch_rejected(tmp_path):
+    """Restoring a 2:4 checkpoint into a 1:4 template of the same leaf
+    shapes must fail on metadata, not decompress garbage."""
+    import dataclasses
+
+    from repro.core.sparsity import NMConfig
+
+    ck = Checkpointer(str(tmp_path))
+    st = _nmweight_state()
+    ck.save(1, st)
+    bad = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    w = bad["params"]["ffn"]["w_up"]
+    bad["params"]["ffn"]["w_up"] = dataclasses.replace(w, nm=NMConfig(2, 8))
+    with pytest.raises(ValueError, match="metadata mismatch"):
+        ck.restore(bad)
+
+
+def test_legacy_dict_checkpoint_migrates(tmp_path):
+    """Pre-NMWeight checkpoints stored compressed weights as {vals, idx}
+    dicts whose flatten order (idx first — sorted keys) is the reverse of
+    NMWeight's. The migration shim must remap, not transpose."""
+    import json
+    import os
+
+    from repro.core.nmweight import NMWeight
+    from repro.training.checkpoint import _to_legacy
+
+    st = _nmweight_state()
+    legacy = _to_legacy(st)  # the exact tree an old Checkpointer saw
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, legacy)
+    # strip the v2 manifest fields -> byte-identical to an old checkpoint
+    mpath = os.path.join(str(tmp_path), "step_00000007", "manifest.json")
+    with open(mpath) as f:
+        meta = json.load(f)
+    for k in ("format", "leaves", "weights"):
+        meta.pop(k)
+    with open(mpath, "w") as f:
+        json.dump(meta, f)
+
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    got, _ = ck.restore(template)
+    for key in ("ffn", "attn"):
+        orig = list(st["params"][key].values())[0]
+        rest = list(got["params"][key].values())[0]
+        assert isinstance(rest, NMWeight)
+        np.testing.assert_array_equal(np.asarray(rest.vals),
+                                      np.asarray(orig.vals))
+        np.testing.assert_array_equal(np.asarray(rest.idx),
+                                      np.asarray(orig.idx))
+
+
 def test_elastic_replacement_onto_shardings(tmp_path):
     """Restore re-places arrays under explicit (single-device) shardings —
     the elastic-resize path; on multi-device meshes the same call re-shards

@@ -19,7 +19,7 @@ def test_all_shims_resolved():
     res = compat.resolved()
     assert set(res) == {
         "get_abstract_mesh", "set_mesh", "make_mesh", "tpu_compiler_params",
-        "shard_map", "cost_analysis",
+        "shard_map", "cost_analysis", "register_dataclass",
     }
     # pallas ships with every jax we support — params must have resolved
     assert res["tpu_compiler_params"] != "unavailable", res

@@ -21,3 +21,29 @@ def test_gather_kernel_matches_oracle(cfg, shape):
     y_k = indexmac_gather_spmm(vals, idx, b, cfg, block=(8, 128, 64))
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), rtol=1e-5, atol=1e-4)
     np.testing.assert_allclose(np.asarray(y_ref), np.asarray(a @ b), rtol=1e-5, atol=1e-4)
+
+
+def test_gather_typed_entry_uses_weight_metadata():
+    """indexmac_gather(w, b) derives nm / use-kernel from the NMWeight
+    itself (registry.weight_ctx) and rejects the wrong orientation."""
+    from repro import api
+    from repro.kernels import registry
+    from repro.kernels.indexmac_gather.ops import indexmac_gather
+
+    cfg = NMConfig(2, 4)
+    a = random_nm_matrix(jax.random.PRNGKey(2), (16, 128), cfg, axis=1)
+    w = api.sparsify(a, cfg, axis=1, kernel_policy="auto")
+    b = jax.random.normal(jax.random.PRNGKey(3), (128, 128))
+    registry.clear_history()
+    y = indexmac_gather(w, b)
+    assert registry.last_dispatch("indexmac_gather").impl == "pallas_gather"
+    np.testing.assert_allclose(np.asarray(y), np.asarray(a @ b),
+                               rtol=1e-5, atol=1e-4)
+
+    registry.clear_history()
+    w_off = api.sparsify(a, cfg, axis=1, kernel_policy="off")
+    indexmac_gather(w_off, b)
+    assert registry.last_dispatch("indexmac_gather").impl == "reference"
+
+    with pytest.raises(ValueError, match="axis"):
+        indexmac_gather(api.sparsify(a.T, cfg, axis=0), b)

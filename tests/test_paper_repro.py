@@ -13,7 +13,6 @@ second-order effect in the paper) is not captured by a counting model and
 is documented in EXPERIMENTS.md.
 """
 import numpy as np
-import pytest
 
 from benchmarks import fig5_cnn_totals, fig6_memory_traffic
 from benchmarks.cnn_specs import CNNS, resnet50_gemms

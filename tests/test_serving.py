@@ -7,7 +7,7 @@ import pytest
 from repro.models import common
 from repro.configs import get_reduced
 from repro.models.transformer import LM
-from repro.serving.engine import Request, ServeEngine, make_serve_steps
+from repro.serving.engine import Request, ServeEngine
 
 
 @pytest.fixture(scope="module")
@@ -83,10 +83,11 @@ def test_temperature_sampling_runs(yi):
 def test_autotune_blocks_warmup_covers_sparse_shapes(yi, monkeypatch):
     """autotune_blocks=True must request a sweep for every compressed GEMM
     shape at both the decode (M=slots) and prefill (M=slots*prefill_len)
-    row counts — pins the params-tree walk and the Kc -> K math."""
+    row counts — pins the NMWeight-tree walk and the Kc -> K math."""
     import dataclasses
 
     from repro.configs.base import SparsityConfig
+    from repro.core.nmweight import NMWeight
     from repro.core.sparsity import NMConfig
     from repro.kernels import autotune
 
@@ -104,12 +105,57 @@ def test_autotune_blocks_warmup_covers_sparse_shapes(yi, monkeypatch):
     ServeEngine(lm, params, slots=2, max_seq=64, prefill_len=8,
                 autotune_blocks=True)
 
-    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
     want = set()
-    for path, leaf in leaves:
-        if any(getattr(p, "key", None) == "vals" for p in path):
-            kc, n = leaf.shape[-2:]
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, NMWeight)):
+        if isinstance(leaf, NMWeight):
+            kc, n = leaf.vals.shape[-2:]
             for m_rows in (2, 16):  # slots, slots * prefill_len
-                want.add((m_rows, n, kc * 4 // 2))
+                want.add((m_rows, n, kc * leaf.nm.m // leaf.nm.n))
     assert want, "reduced config produced no compressed linears"
     assert set(asked) == want
+
+
+def test_autotune_warmup_uses_each_weights_own_ratio(yi, monkeypatch):
+    """A model mixing N:M ratios per target (2:4 ffn, 1:4 attn) must tune
+    each compressed GEMM at the K its own NMConfig implies — the old
+    shape-only walk assumed one global ratio and got 1:4 layers wrong."""
+    import dataclasses
+
+    from repro.configs.base import SparsityConfig
+    from repro.core.nmweight import NMWeight
+    from repro.core.sparsity import NMConfig
+    from repro.kernels import autotune
+
+    cfg, _, _ = yi
+    scfg = dataclasses.replace(
+        cfg, sparsity=SparsityConfig(
+            nm=NMConfig(2, 4), mode="compressed", use_kernel=True,
+            targets=("ffn", "attn_proj"),
+            nm_overrides=(("attn_proj", NMConfig(1, 4)),)))
+    lm = LM(scfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    tags = {l.nm.tag for l in jax.tree.leaves(
+        params, is_leaf=lambda x: isinstance(x, NMWeight))
+        if isinstance(l, NMWeight)}
+    assert tags == {"2:4", "1:4"}
+
+    asked = []
+    monkeypatch.setattr(
+        autotune, "ensure_tuned",
+        lambda m, n, k, nm, dtype=None:
+            asked.append((m, n, k, nm.tag)) or (8, 128, 128))
+    ServeEngine(lm, params, slots=2, max_seq=64, prefill_len=8,
+                autotune_blocks=True)
+
+    want = set()
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, NMWeight)):
+        if isinstance(leaf, NMWeight):
+            kc, n = leaf.vals.shape[-2:]
+            k = kc * leaf.nm.m // leaf.nm.n
+            for m_rows in (2, 16):
+                want.add((m_rows, n, k, leaf.nm.tag))
+    assert set(asked) == want
+    # every 1:4 weight was tuned at K = 4 * Kc, not the 2:4 ratio's 2 * Kc
+    assert any(tag == "1:4" for *_, tag in asked)

@@ -7,7 +7,6 @@ Validates the paper's §II/§III claims at the algorithm level:
     *relative* total reduction at 2:4 than 1:4 (paper Fig. 6 trend).
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st

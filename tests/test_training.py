@@ -48,6 +48,57 @@ def test_adamw_skips_int_leaves():
     assert not np.allclose(np.asarray(new["w"]), 1.0)  # w moved
 
 
+def test_adamw_excludes_nmweight_idx_structurally():
+    """No AdamW moments/updates may ever be allocated for the idx leaf
+    of an NMWeight — excluded by node type, not dtype — while an
+    unrelated integer leaf elsewhere keeps its historical pass-through
+    behavior (scalar moment placeholder, leaf untouched)."""
+    import dataclasses
+
+    from repro.api import NMConfig, sparsify
+    from repro.core.nmweight import NMWeight
+
+    w = sparsify(jax.random.normal(jax.random.PRNGKey(0), (8, 4)),
+                 NMConfig(2, 4), kernel_policy="off")
+    params = {"lin": w, "b": jnp.ones((4,)),
+              "counter": jnp.arange(3, dtype=jnp.int32)}  # unrelated int
+    st = adamw_init(params)
+    # structural exclusion: idx moment is a scalar placeholder, never
+    # an idx-shaped buffer
+    assert isinstance(st["m"]["lin"], NMWeight)
+    assert st["m"]["lin"].idx.shape == ()
+    assert st["m"]["lin"].vals.shape == w.vals.shape
+    assert st["m"]["counter"].shape == ()  # int leaf: unchanged behavior
+
+    def loss(p):
+        x = jnp.ones((2, 8))
+        y = x @ p["lin"].to_dense() + p["b"]
+        return jnp.sum(y ** 2)
+
+    grads = jax.grad(loss, allow_int=True)(params)
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=10,
+                      weight_decay=0.0)
+    new, st2, _ = adamw_update(cfg, params, grads, st)
+    np.testing.assert_array_equal(np.asarray(new["lin"].idx),
+                                  np.asarray(w.idx))  # idx bit-identical
+    assert new["lin"].idx.dtype == jnp.int8
+    assert st2["m"]["lin"].idx.shape == ()  # still no idx-shaped state
+    np.testing.assert_array_equal(np.asarray(new["counter"]),
+                                  np.asarray(params["counter"]))
+    assert not np.allclose(np.asarray(new["lin"].vals),
+                           np.asarray(w.vals))  # vals trained
+    assert not np.allclose(np.asarray(new["b"]), 1.0)
+
+    # a masked weight's dense w keeps training (recursed, not excluded)
+    from repro.core.nmweight import MaskedNMWeight
+    mp = {"lin": MaskedNMWeight(w=jnp.ones((8, 4)), nm=NMConfig(2, 4))}
+    mst = adamw_init(mp)
+    assert mst["m"]["lin"].w.shape == (8, 4)
+    mg = {"lin": dataclasses.replace(mp["lin"], w=jnp.ones((8, 4)))}
+    mnew, _, _ = adamw_update(cfg, mp, mg, mst)
+    assert not np.allclose(np.asarray(mnew["lin"].w), 1.0)
+
+
 def test_global_norm():
     g = {"a": jnp.ones((3,)) * 2.0, "b": jnp.ones((4,)) * 1.0,
          "i": jnp.zeros((2,), jnp.int8)}
