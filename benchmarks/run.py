@@ -1,9 +1,26 @@
 """Benchmark harness: one entry per paper table/figure + beyond-paper TPU
-kernel roofline. Prints ``name,us_per_call,derived`` CSV rows.
+kernel roofline. Prints ``name,us_per_call,derived`` CSV rows and writes
+a machine-readable ``BENCH_results.json`` next to the CSV stream:
+
+  {"schema": 1,
+   "rows":    [{"name", "us_per_call", "derived"}, ...],
+   "kernels": [{"nm", "family" (bf16|int8), "gemm", "m", "k", "n",
+                "hbm_bytes", "dense_hbm_bytes", "bytes_vs_dense",
+                "roofline_speedup_vs_dense", "bound"}, ...]}
+
+The ``kernels`` section carries the per-kernel byte/speedup accounting
+(both value families — the int8 QNMWeight path included), so the bench
+trajectory is diffable across commits; CI's bench-smoke job uploads the
+file as an artifact.
 """
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
+
+OUT_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_results.json")
 
 
 def main() -> None:
@@ -25,6 +42,18 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    payload = {
+        "schema": 1,
+        "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                 for n, us, d in rows],
+        "kernels": tpu_kernel_roofline.kernel_records(),
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+    # stderr: stdout from the CSV header down is machine-consumed
+    print(f"wrote {OUT_JSON} ({len(payload['rows'])} rows, "
+          f"{len(payload['kernels'])} kernel records)", file=sys.stderr)
 
 
 if __name__ == "__main__":

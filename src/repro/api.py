@@ -1,10 +1,13 @@
 """Public facade for the compressed N:M representation.
 
-The four verbs most users need:
+The verbs most users need:
 
   sparsify(w, nm)   dense (K, N) array -> NMWeight (prune + compress)
-  densify(w)        NMWeight / MaskedNMWeight / {"w": ...} -> dense array
+  quantize(w)       NMWeight / dense array -> int8 QNMWeight (+ scales)
+  dequantize(qw)    QNMWeight -> float NMWeight (fallback path)
+  densify(w)        any typed weight node / {"w": ...} -> dense array
   nm_matmul(x, w)   y = x @ densify(w), dispatched by w's own metadata
+                    and *type* (QNMWeight -> the int8 kernel family)
   is_sparse(obj)    True for typed sparse weight nodes
 
 An :class:`NMWeight` is a registered JAX pytree: ``vals``/``idx`` are
@@ -30,6 +33,7 @@ from __future__ import annotations
 from typing import Optional, Union
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.nmweight import (
     KernelPolicy,
@@ -45,15 +49,24 @@ from repro.core.sparsity import (
     prune_mask_nm,
 )
 from repro.kernels.indexmac.ops import nm_matmul as _nm_matmul_typed
+from repro.quant import QNMWeight
+from repro.quant import dequantize as _dequantize
+from repro.quant import quantize_nm as _quantize_nm
+from repro.quant import quantize_tree, dequantize_tree  # noqa: F401 (re-export)
 
 __all__ = [
     "KernelPolicy",
     "MaskedNMWeight",
     "NMConfig",
     "NMWeight",
+    "QNMWeight",
     "densify",
+    "dequantize",
+    "dequantize_tree",
     "is_sparse",
     "nm_matmul",
+    "quantize",
+    "quantize_tree",
     "sparsify",
 ]
 
@@ -93,10 +106,32 @@ def sparsify(
                     kernel_policy=_as_policy(kernel_policy))
 
 
+def quantize(w, nm=None, *, method="absmax", axis: int = 0,
+             kernel_policy=None) -> QNMWeight:
+    """int8-quantize a weight (symmetric, per output channel).
+
+    ``w`` is an :class:`NMWeight` (the common case — quantize after
+    sparsify) or a dense 2D array (``nm`` required; pruned + compressed
+    first). ``method`` is ``"absmax"`` | ``"percentile"`` or a
+    pre-populated observer from :mod:`repro.quant.calibrate`. For whole
+    param trees use :func:`quantize_tree`.
+    """
+    return _quantize_nm(w, nm, method=method, axis=axis,
+                        kernel_policy=kernel_policy)
+
+
+def dequantize(qw: QNMWeight, dtype=None) -> NMWeight:
+    """Float :class:`NMWeight` with the same pattern — the fallback for
+    consumers that cannot take the int8 path."""
+    return _dequantize(qw, dtype=dtype or jnp.float32)
+
+
 def densify(w) -> jax.Array:
     """Materialize the dense array behind any linear-weight node."""
     if isinstance(w, NMWeight):
         return decompress_nm(w.vals, w.idx, w.nm, axis=w.axis)
+    if isinstance(w, QNMWeight):
+        return w.to_dense()
     if isinstance(w, MaskedNMWeight):
         return w.project()
     if isinstance(w, dict) and "w" in w:
@@ -109,8 +144,10 @@ def is_sparse(obj) -> bool:
     return is_weight_node(obj)
 
 
-def nm_matmul(x: jax.Array, w: NMWeight, *,
+def nm_matmul(x: jax.Array, w, *,
               block: Optional[tuple[int, int, int]] = None) -> jax.Array:
-    """y = x @ densify(w); dispatch (reference vs Pallas, tile sizes)
-    is decided by ``w.kernel_policy`` — see the module docstring."""
+    """y = x @ densify(w) for an :class:`NMWeight` or int8
+    :class:`QNMWeight`; dispatch (reference vs Pallas, tile sizes, and
+    the float-vs-int8 kernel family) is decided by ``w.kernel_policy``
+    and the weight's type — see the module docstring."""
     return _nm_matmul_typed(x, w, block=block)

@@ -109,14 +109,33 @@ def tpu_dense_cost(m: int, k: int, n: int, dtype_bytes: int = 2,
 
 
 def tpu_indexmac_cost(m: int, k: int, n: int, cfg: NMConfig,
-                      dtype_bytes: int = 2) -> TPUKernelCost:
+                      dtype_bytes: int = 2,
+                      w_value_bytes: int | None = None,
+                      scale_bytes: float = 0.0) -> TPUKernelCost:
     """Pallas indexmac kernel: sparse operand streamed compressed
-    (values dtype_bytes + 1B idx per kept weight), dense operand streamed
+    (``w_value_bytes`` + 1B idx per kept weight), dense operand streamed
     once (VMEM-stationary across the n sweep), FLOPs unchanged (the MXU
-    multiplies re-materialized zeros — DESIGN.md §7)."""
+    multiplies re-materialized zeros — DESIGN.md §7).
+
+    ``dtype_bytes`` is the activation/output dtype; ``w_value_bytes``
+    the *stored* value dtype of the compressed weight (defaults to the
+    activation dtype for the float family; pass 1 for int8).
+    ``scale_bytes`` adds dequantization-scale traffic (4 * n for the
+    per-output-channel f32 scales of the int8 family)."""
+    if w_value_bytes is None:
+        w_value_bytes = dtype_bytes
     kept = k * n * cfg.n // cfg.m
-    w_bytes = kept * (dtype_bytes + 1)
+    w_bytes = kept * (w_value_bytes + 1) + scale_bytes
     return TPUKernelCost(
         hbm_bytes=m * k * dtype_bytes + w_bytes + m * n * dtype_bytes,
         mxu_flops=2.0 * m * k * n,
     )
+
+
+def tpu_indexmac_q_cost(m: int, k: int, n: int, cfg: NMConfig,
+                        dtype_bytes: int = 2) -> TPUKernelCost:
+    """int8 family: one byte per kept value + the f32 per-output-channel
+    scale row. Same FLOP count — dequantization is a cast on the way to
+    the MXU plus one multiply per output element at writeback."""
+    return tpu_indexmac_cost(m, k, n, cfg, dtype_bytes=dtype_bytes,
+                             w_value_bytes=1, scale_bytes=4.0 * n)

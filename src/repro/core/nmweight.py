@@ -36,7 +36,13 @@ from repro.core.sparsity import (
     prune_mask_nm,
 )
 
-__all__ = ["KernelPolicy", "NMWeight", "MaskedNMWeight", "is_weight_node"]
+__all__ = [
+    "KernelPolicy",
+    "NMWeight",
+    "MaskedNMWeight",
+    "is_weight_node",
+    "register_weight_type",
+]
 
 KernelMode = Literal["off", "auto", "force"]
 
@@ -136,9 +142,25 @@ compat.register_dataclass(
 )
 
 
+# Typed weight node classes. Sibling subsystems that add new weight
+# representations (e.g. repro.quant's QNMWeight) register them here at
+# import time so every tree walk built on is_weight_node sees them
+# without core depending on those subsystems.
+_WEIGHT_TYPES: tuple[type, ...] = (NMWeight, MaskedNMWeight)
+
+
+def register_weight_type(cls: type) -> type:
+    """Register an additional typed weight node class (idempotent)."""
+    global _WEIGHT_TYPES
+    if cls not in _WEIGHT_TYPES:
+        _WEIGHT_TYPES = _WEIGHT_TYPES + (cls,)
+    return cls
+
+
 def is_weight_node(x) -> bool:
-    """True for the typed sparse weight nodes (compressed or masked) —
-    the shared ``is_leaf`` predicate for tree walks that treat a weight
-    as one unit. (The optimizer deliberately uses a narrower
-    NMWeight-only test: masked weights train their dense storage.)"""
-    return isinstance(x, (NMWeight, MaskedNMWeight))
+    """True for the typed sparse weight nodes (compressed, masked, or a
+    registered sibling such as the quantized QNMWeight) — the shared
+    ``is_leaf`` predicate for tree walks that treat a weight as one
+    unit. (The optimizer deliberately uses a narrower test: masked
+    weights train their dense storage.)"""
+    return isinstance(x, _WEIGHT_TYPES)

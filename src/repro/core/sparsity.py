@@ -24,6 +24,7 @@ import numpy as np
 
 __all__ = [
     "NMConfig",
+    "value_bytes_of",
     "prune_mask_nm",
     "apply_mask",
     "compress_nm",
@@ -57,9 +58,25 @@ class NMConfig:
     def tag(self) -> str:
         return f"{self.n}:{self.m}"
 
-    # Compressed-bytes ratio vs dense, for a given value dtype (+1B int8 idx).
-    def byte_ratio(self, value_bytes: int = 2) -> float:
-        return (self.n * (value_bytes + 1)) / (self.m * value_bytes)
+    def byte_ratio(self, value_bytes: int, dense_value_bytes: int = 2) -> float:
+        """Compressed-bytes ratio vs a dense bf16 weight.
+
+        ``value_bytes`` is the *stored* dtype of the kept values (2 for
+        bf16, 1 for int8, 4 for f32) — explicit, because the old 2-byte
+        default silently mis-accounted quantized weights. Each kept
+        value also carries one int8 index byte; ``dense_value_bytes`` is
+        the dense baseline's dtype (bf16 by default). Per-output-channel
+        scale bytes are O(N) and amortize to ~0 per weight — use
+        :func:`repro.core.cost_model.tpu_indexmac_cost` when they
+        matter.
+        """
+        return (self.n * (value_bytes + 1)) / (self.m * dense_value_bytes)
+
+
+def value_bytes_of(dtype) -> int:
+    """Bytes per stored value for a weight dtype — the explicit argument
+    every byte-accounting caller threads instead of assuming bf16."""
+    return int(jnp.dtype(dtype).itemsize)
 
 
 def _move_axis_last(x: jax.Array, axis: int) -> jax.Array:

@@ -4,7 +4,11 @@ Structure:
   registry.py  — named implementations per op, priority dispatch, records
   padding.py   — shape normalization (pad-to-tileable, slice back)
   autotune.py  — per-shape block sweep with a persistent on-disk cache
-  indexmac/    — TPU adaptation: decompress-in-VMEM -> MXU (the fast path)
+                 (per value-dtype family: the int8 sweep never shares
+                 keys with bf16/f32)
+  indexmac/    — TPU adaptation: decompress-in-VMEM -> MXU (the fast
+                 path) + the int8 dequantizing variant (nm_matmul_q)
   indexmac_gather/ — literal vindexmac port (faithfulness artifact)
+                 + its int8 variant (indexmac_gather_q)
 """
 from repro.kernels import registry  # noqa: F401  (re-export for callers)

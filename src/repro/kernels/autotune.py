@@ -140,17 +140,40 @@ def tune(
     candidates: Optional[Sequence[tuple]] = None,
     repeats: int = 3,
 ) -> tuple:
-    """Time every candidate on real operands; persist and return the winner."""
+    """Time every candidate on real operands; persist and return the winner.
+
+    ``dtype`` is the *value* dtype of the compressed operand and selects
+    the kernel family: a float dtype sweeps the float kernel on float
+    operands; ``int8`` sweeps the dequantizing kernel
+    (``run_pallas_padded_q``) on int8 values + per-column scales — the
+    int8 family has its own cache keys (the dtype is part of the key),
+    so its winners never shadow the float sweep's.
+    """
     from repro.core.sparsity import compress_nm, random_nm_matrix
-    from repro.kernels.indexmac.ops import run_pallas_padded
+    from repro.kernels.indexmac.ops import (
+        run_pallas_padded,
+        run_pallas_padded_q,
+    )
 
     backend = jax.default_backend()
     interpret = backend == "cpu"
+    quantized = jnp.dtype(dtype) == jnp.dtype(jnp.int8)
     kk = -(-k // cfg.m) * cfg.m  # operand K must hold whole blocks
     w = random_nm_matrix(jax.random.PRNGKey(0), (kk, n), cfg, axis=0)
     vals, idx = compress_nm(w, cfg, axis=0)
-    x = jax.random.normal(jax.random.PRNGKey(1), (m, kk)).astype(dtype)
-    vals = vals.astype(dtype)
+    if quantized:
+        # representative int8 operands; activations stay float.
+        vals = jnp.clip(jnp.round(vals * 64.0), -127, 127).astype(jnp.int8)
+        scales = jnp.full((n,), 1.0 / 64.0, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (m, kk))
+
+        def run(x, vals, idx, *, cfg, plan, interpret):
+            return run_pallas_padded_q(
+                x, vals, idx, scales, cfg=cfg, plan=plan, interpret=interpret)
+    else:
+        x = jax.random.normal(jax.random.PRNGKey(1), (m, kk)).astype(dtype)
+        vals = vals.astype(dtype)
+        run = run_pallas_padded
 
     best, best_t = None, float("inf")
     for block in candidates or candidate_blocks(m, n, kk, cfg):
@@ -158,11 +181,11 @@ def tune(
         if plan is None:
             continue
         try:
-            run_pallas_padded(
+            run(
                 x, vals, idx, cfg=cfg, plan=plan, interpret=interpret
             ).block_until_ready()  # compile / warm up
             t = min(
-                _time_once(run_pallas_padded, x, vals, idx, cfg, plan, interpret)
+                _time_once(run, x, vals, idx, cfg, plan, interpret)
                 for _ in range(repeats)
             )
         except Exception:  # noqa: BLE001 — infeasible on this backend

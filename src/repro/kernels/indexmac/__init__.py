@@ -1,1 +1,1 @@
-from repro.kernels.indexmac.ops import nm_matmul  # noqa: F401
+from repro.kernels.indexmac.ops import nm_matmul, nm_matmul_q  # noqa: F401

@@ -73,6 +73,105 @@ def _nm_spmm_kernel(x_ref, vals_ref, idx_ref, o_ref, acc_ref, *, n, m, nk, out_d
         o_ref[...] = acc_ref[...].astype(out_dtype)
 
 
+def _nm_spmm_q_kernel(
+    x_ref, vals_ref, idx_ref, scales_ref, o_ref, acc_ref, *, n, m, nk, out_dtype
+):
+    """int8-value variant: the compressed tile streams as one byte per
+    kept value; dequantization happens in-register — the int8 block is
+    expanded to a dense f32 tile inside VMEM (the int8 -> f32 cast rides
+    the same iota-compare selects as the float path) and the per-output-
+    channel scales multiply the f32 accumulator once at writeback, so
+    the inner loop never touches a float weight operand."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # _decompress_block casts the int8 values to f32 in-register: exact
+    # (|q| <= 127 << 2^24), so the MXU sees the integer lattice scaled
+    # only at the end.
+    w = _decompress_block(vals_ref[...], idx_ref[...], n, m)  # (bk, bn) f32
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot(
+        x, w, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        # scales: (1, bn) f32, one per output column — constant over K,
+        # so one multiply per output element at writeback.
+        o_ref[...] = (acc_ref[...] * scales_ref[...]).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def nm_spmm_pallas_q(
+    x: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    scales: jax.Array,
+    *,
+    cfg: NMConfig,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 2048,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = (x @ decompress(int8 vals, idx)) * scales[col].
+
+    Same tiling contract as :func:`nm_spmm_pallas`; additionally
+    ``vals`` must be int8 and ``scales`` float32 of shape (N,).
+    """
+    mm, kk = x.shape
+    kc, nn = vals.shape
+    if kc * cfg.m != kk * cfg.n:
+        raise ValueError(f"vals rows {kc} inconsistent with K={kk} and {cfg.tag}")
+    if idx.shape != vals.shape:
+        raise ValueError("idx/vals shape mismatch")
+    if vals.dtype != jnp.int8:
+        raise ValueError(f"quantized kernel needs int8 vals, got {vals.dtype}")
+    if scales.shape != (nn,):
+        raise ValueError(
+            f"scales shape {scales.shape} != (N,) = ({nn},)")
+    block_k = min(block_k, kk)
+    block_m = min(block_m, mm)
+    block_n = min(block_n, nn)
+    if kk % block_k or block_k % cfg.m:
+        raise ValueError(f"K={kk} block_k={block_k} m={cfg.m} not tileable")
+    if mm % block_m or nn % block_n:
+        raise ValueError(f"M={mm}/N={nn} not divisible by blocks {block_m}/{block_n}")
+    out_dtype = out_dtype or x.dtype
+    nk = kk // block_k
+    bkc = block_k * cfg.n // cfg.m
+
+    grid = (mm // block_m, nn // block_n, nk)
+    kernel = functools.partial(
+        _nm_spmm_q_kernel, n=cfg.n, m=cfg.m, nk=nk, out_dtype=out_dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bkc, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bkc, block_n), lambda i, j, k: (k, j)),
+            # per-column scales: tiny, constant over the k sweep.
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x, vals, idx, scales.astype(jnp.float32).reshape(1, nn))
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "block_m", "block_n", "block_k", "out_dtype", "interpret"),

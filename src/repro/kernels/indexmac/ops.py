@@ -40,14 +40,15 @@ import jax.numpy as jnp
 from repro.core.nmweight import NMWeight
 from repro.core.sparsity import NMConfig, decompress_nm
 from repro.kernels import autotune, registry
-from repro.kernels.indexmac.kernel import nm_spmm_pallas
-from repro.kernels.indexmac.ref import nm_matmul_ref
+from repro.kernels.indexmac.kernel import nm_spmm_pallas, nm_spmm_pallas_q
+from repro.kernels.indexmac.ref import nm_matmul_q_ref, nm_matmul_ref
 from repro.kernels.padding import (
     PadPlan,
     pad_nm_operands,
     pad_waste_limit,
     plan_nm_matmul,
 )
+from repro.quant.qnmweight import QNMWeight
 
 
 def _on_cpu() -> bool:
@@ -100,19 +101,68 @@ def _run_ref_impl(x2, vals, idx, *, cfg, plan, interpret):
     return nm_matmul_ref(x2, vals, idx, cfg)
 
 
-def nm_matmul(x: jax.Array, w: NMWeight, *,
+# ---------------------------------------------------------------------------
+# quantized (int8-value) family — its own dispatch op and autotune keys
+# ---------------------------------------------------------------------------
+
+
+def run_pallas_padded_q(
+    x2: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    scales: jax.Array,
+    *,
+    cfg: NMConfig,
+    plan: PadPlan,
+    interpret: bool,
+) -> jax.Array:
+    """Quantized sibling of :func:`run_pallas_padded`: pads the int8
+    operands (appended columns get unit scales — they are sliced away)
+    and runs the dequantizing kernel."""
+    xp, vp, ip = pad_nm_operands(x2, vals, idx, plan, cfg)
+    sp = scales
+    if plan.pn > plan.n:
+        sp = jnp.pad(scales, (0, plan.pn - plan.n), constant_values=1.0)
+    bm, bn, bk = plan.block
+    y = nm_spmm_pallas_q(
+        xp, vp, ip, sp, cfg=cfg, block_m=bm, block_n=bn, block_k=bk,
+        interpret=interpret,
+    )
+    return y[: plan.m, : plan.n]
+
+
+@registry.register("nm_matmul_q", "pallas_padded_q", priority=100,
+                   supports=_pallas_supports, uses_plan=True)
+def _run_pallas_q_impl(x2, vals, idx, scales, *, cfg, plan, interpret):
+    return run_pallas_padded_q(
+        x2, vals, idx, scales, cfg=cfg, plan=plan, interpret=interpret
+    )
+
+
+@registry.register("nm_matmul_q", "reference_q", priority=0)
+def _run_ref_q_impl(x2, vals, idx, scales, *, cfg, plan, interpret):
+    return nm_matmul_q_ref(x2, vals, idx, scales, cfg)
+
+
+def nm_matmul(x: jax.Array, w, *,
               block: Optional[tuple[int, int, int]] = None) -> jax.Array:
-    """y = x @ densify(w); x: (..., K), w: an NMWeight compressed along
-    its axis 0 (the contraction dim).
+    """y = x @ densify(w); x: (..., K), w: an NMWeight or QNMWeight
+    compressed along its axis 0 (the contraction dim).
 
     The weight's own metadata drives dispatch: ``w.nm`` is the pattern,
-    ``w.kernel_policy`` picks reference/Pallas and the block triple.
-    ``block`` overrides the policy's block for this call (benchmarks).
+    ``w.kernel_policy`` picks reference/Pallas and the block triple, and
+    the weight's *type* picks the family — int8 weights route to the
+    dequantizing kernel (``nm_matmul_q``), which has its own autotune
+    keys. ``block`` overrides the policy's block for this call
+    (benchmarks).
     """
+    if isinstance(w, QNMWeight):
+        return nm_matmul_q(x, w, block=block)
     if not isinstance(w, NMWeight):
         raise TypeError(
-            f"nm_matmul expects an NMWeight, got {type(w).__name__}; wrap "
-            "compressed operands with repro.api.sparsify, or use "
+            f"nm_matmul expects an NMWeight or QNMWeight, got "
+            f"{type(w).__name__}; wrap compressed operands with "
+            "repro.api.sparsify / repro.api.quantize, or use "
             "nm_matmul_raw for positional (vals, idx, cfg) calls"
         )
     if w.axis != 0:
@@ -124,6 +174,71 @@ def nm_matmul(x: jax.Array, w: NMWeight, *,
     blk = block if block is not None else pol.block
     return nm_matmul_raw(x, w.vals, w.idx, w.nm, pol.mode != "off", blk,
                          pol.mode == "force")
+
+
+def nm_matmul_q(x: jax.Array, w: QNMWeight, *,
+                block: Optional[tuple[int, int, int]] = None) -> jax.Array:
+    """y = x @ densify(w) for an int8 :class:`QNMWeight` (inference
+    path; the optimizer never trains int8 leaves). Dispatch mirrors
+    :func:`nm_matmul` but through the ``nm_matmul_q`` registry family,
+    whose autotune cache keys carry the int8 value dtype."""
+    if not isinstance(w, QNMWeight):
+        raise TypeError(
+            f"nm_matmul_q expects a QNMWeight, got {type(w).__name__}; "
+            "produce one with repro.api.quantize"
+        )
+    if w.axis != 0:
+        raise ValueError(
+            f"nm_matmul_q needs the weight compressed along axis 0 (the "
+            f"contraction dim of y = x @ W); got axis={w.axis}"
+        )
+    pol = w.kernel_policy
+    blk = block if block is not None else pol.block
+    return nm_matmul_q_raw(x, w.vals, w.idx, w.scales, w.nm,
+                           pol.mode != "off", blk, pol.mode == "force")
+
+
+def nm_matmul_q_raw(
+    x: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    scales: jax.Array,
+    cfg: NMConfig,
+    use_kernel: bool = True,
+    block: Optional[tuple[int, int, int]] = None,
+    force: bool = False,
+) -> jax.Array:
+    """Positional quantized surface: y = (x @ decompress(vals, idx)) *
+    scales[col]; x: (..., K), vals/idx: int8 (Kc, N), scales: (N,).
+
+    ``block=None`` consults the autotune cache under the int8 family's
+    own keys (value dtype int8 — never shared with the float sweep).
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    mm = x2.shape[0]
+    nn = vals.shape[1]
+    if vals.shape[0] * cfg.m != k * cfg.n:
+        raise ValueError(
+            f"vals rows {vals.shape[0]} inconsistent with K={k} and {cfg.tag}"
+        )
+    if idx.shape != vals.shape:
+        raise ValueError("idx/vals shape mismatch")
+    plan = None
+    if use_kernel:
+        if block is None:
+            block = autotune.best_block(mm, nn, k, cfg, jnp.int8)
+        plan = plan_nm_matmul(mm, nn, k, cfg, tuple(block))
+    ctx = registry.make_ctx(
+        (mm, k, nn), nm=cfg, use_kernel=use_kernel, plan=plan,
+        dtype=jnp.int8, force=force,
+    )
+    y2 = registry.dispatch(
+        "nm_matmul_q", ctx, x2, vals, idx, scales,
+        cfg=cfg, plan=plan, interpret=_on_cpu(),
+    )
+    return y2.reshape(*lead, nn)
 
 
 @functools.partial(

@@ -26,3 +26,26 @@ def nm_matmul_ref(
     w = decompress_nm(vals, idx, cfg, axis=0)  # (K, N), vals dtype
     y = acc_dot(x, w)
     return y.astype(out_dtype or x.dtype)
+
+
+def nm_matmul_q_ref(
+    x: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    scales: jax.Array,
+    cfg: NMConfig,
+    out_dtype=None,
+) -> jax.Array:
+    """int8 oracle, mirroring the quantized kernel's exact arithmetic:
+    decompress the int8 values, cast to f32 (exact — |q| <= 127), f32
+    dot, then one per-output-column scale multiply at the end. On the
+    integer lattice (integer-valued x, |acc| < 2^24) this is bit-exact
+    against the blocked/padded kernel regardless of tiling, because
+    every partial sum is an exactly-representable integer."""
+    w8 = decompress_nm(vals, idx, cfg, axis=0)  # (K, N) int8
+    y32 = jnp.dot(
+        x.astype(jnp.float32), w8.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    y32 = y32 * scales.astype(jnp.float32)[None, :]
+    return y32.astype(out_dtype or x.dtype)

@@ -1,1 +1,4 @@
-from repro.kernels.indexmac_gather.ops import indexmac_gather_spmm  # noqa: F401
+from repro.kernels.indexmac_gather.ops import (  # noqa: F401
+    indexmac_gather,
+    indexmac_gather_spmm,
+)

@@ -21,8 +21,15 @@ import jax
 from repro.core.nmweight import NMWeight
 from repro.core.sparsity import NMConfig
 from repro.kernels import registry
-from repro.kernels.indexmac_gather.kernel import indexmac_gather_pallas
-from repro.kernels.indexmac_gather.ref import indexmac_gather_ref
+from repro.kernels.indexmac_gather.kernel import (
+    indexmac_gather_pallas,
+    indexmac_gather_pallas_q,
+)
+from repro.kernels.indexmac_gather.ref import (
+    indexmac_gather_q_ref,
+    indexmac_gather_ref,
+)
+from repro.quant.qnmweight import QNMWeight
 
 DEFAULT_BLOCK = (8, 128, 64)
 
@@ -50,6 +57,21 @@ def _run_ref(vals, idx, b, *, cfg, block):
     return indexmac_gather_ref(vals, idx, b, cfg)
 
 
+@registry.register("indexmac_gather_q", "pallas_gather_q", priority=100,
+                   supports=_pallas_supports)
+def _run_pallas_q(vals, idx, scales, b, *, cfg, block):
+    bm, bn, bk = block
+    return indexmac_gather_pallas_q(
+        vals, idx, scales, b, cfg=cfg, block_m=bm, block_n=bn, block_k=bk,
+        interpret=jax.default_backend() == "cpu",
+    )
+
+
+@registry.register("indexmac_gather_q", "reference_q", priority=0)
+def _run_ref_q(vals, idx, scales, b, *, cfg, block):
+    return indexmac_gather_q_ref(vals, idx, scales, b, cfg)
+
+
 def _tileable(mr: int, k: int, nc: int, cfg: NMConfig,
               block: tuple[int, int, int]) -> bool:
     bm, bn, bk = block
@@ -57,15 +79,20 @@ def _tileable(mr: int, k: int, nc: int, cfg: NMConfig,
 
 
 def indexmac_gather(
-    w: NMWeight,
+    w,
     b: jax.Array,
     *,
     block: Optional[tuple[int, int, int]] = None,
 ) -> jax.Array:
-    """C = densify(w) @ b for a row-compressed A (w.axis == 1)."""
-    if not isinstance(w, NMWeight):
+    """C = densify(w) @ b for a row-compressed A (w.axis == 1).
+
+    Accepts an :class:`NMWeight` or an int8 :class:`QNMWeight`; the
+    quantized type routes to the dequantizing gather variant (its own
+    ``indexmac_gather_q`` dispatch family)."""
+    if not isinstance(w, (NMWeight, QNMWeight)):
         raise TypeError(
-            f"indexmac_gather expects an NMWeight, got {type(w).__name__}"
+            f"indexmac_gather expects an NMWeight or QNMWeight, got "
+            f"{type(w).__name__}"
         )
     if w.axis != 1:
         raise ValueError(
@@ -79,6 +106,11 @@ def indexmac_gather(
         w, (mr, k, nc),
         dtype=b.dtype, tileable=_tileable(mr, k, nc, w.nm, block),
     )
+    if isinstance(w, QNMWeight):
+        return registry.dispatch(
+            "indexmac_gather_q", ctx, w.vals, w.idx, w.scales, b,
+            cfg=w.nm, block=block
+        )
     return registry.dispatch(
         "indexmac_gather", ctx, w.vals, w.idx, b, cfg=w.nm, block=block
     )

@@ -16,3 +16,19 @@ def indexmac_gather_ref(
         preferred_element_type=jnp.float32,
     )
     return y.astype(b.dtype)
+
+
+def indexmac_gather_q_ref(
+    vals: jax.Array, idx: jax.Array, scales: jax.Array, b: jax.Array,
+    cfg: NMConfig
+) -> jax.Array:
+    """int8 oracle mirroring the quantized gather kernel's arithmetic:
+    f32 dot on the exact int8 lattice, then one per-output-row scale
+    multiply at the end (C[i, :] *= scales[i])."""
+    a8 = decompress_nm(vals, idx, cfg, axis=1)  # (Mr, K) int8
+    y = jnp.dot(
+        a8.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    y = y * scales.astype(jnp.float32)[:, None]
+    return y.astype(b.dtype)

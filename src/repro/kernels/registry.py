@@ -21,8 +21,6 @@ import dataclasses
 import threading
 from typing import Any, Callable, Optional
 
-from repro.core.nmweight import NMWeight
-
 
 @dataclasses.dataclass(frozen=True)
 class DispatchRecord:
@@ -64,10 +62,12 @@ def make_ctx(shape, *, nm, use_kernel: bool, plan=None, dtype=None,
             "plan": plan, "dtype": dtype, "force": force, **extra}
 
 
-def weight_ctx(w: NMWeight, shape, *, plan=None, dtype=None,
+def weight_ctx(w, shape, *, plan=None, dtype=None,
                **extra) -> dict:
-    """Dispatch context derived from an :class:`NMWeight`'s own metadata
-    — the weight, not the call site, decides nm / kernel policy."""
+    """Dispatch context derived from a typed weight node's own metadata
+    (:class:`NMWeight` or its quantized sibling — anything carrying
+    ``nm`` and ``kernel_policy``) — the weight, not the call site,
+    decides nm / kernel policy."""
     pol = w.kernel_policy
     return make_ctx(shape, nm=w.nm, use_kernel=pol.mode != "off",
                     plan=plan, dtype=dtype, force=pol.mode == "force",

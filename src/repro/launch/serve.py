@@ -24,6 +24,9 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--quantize", choices=["int8"], default=None,
+                    help="int8-quantize compressed weights at load "
+                         "(per-channel absmax scales)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -31,7 +34,8 @@ def main() -> None:
     params = lm.init(jax.random.PRNGKey(0))
     eng = ServeEngine(lm, params, slots=args.slots, max_seq=args.max_seq,
                       prefill_len=args.prefill_len,
-                      temperature=args.temperature)
+                      temperature=args.temperature,
+                      quantize=args.quantize)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):

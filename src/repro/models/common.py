@@ -30,6 +30,7 @@ from repro.core.sparsity import (
     prune_mask_nm,
 )
 from repro.kernels.indexmac.ops import nm_matmul
+from repro.quant.qnmweight import QNMWeight
 
 DEFAULT_PARAM_DTYPE = jnp.float32
 DEFAULT_COMPUTE_DTYPE = jnp.bfloat16
@@ -102,11 +103,17 @@ def linear_apply(
     compute_dtype=None,
 ) -> jax.Array:
     """y = x @ W. Dispatches on the weight node's type: NMWeight goes to
-    the indexmac kernel path (its own nm/policy), MaskedNMWeight
-    re-projects onto the N:M constraint set (straight-through grads),
-    ``{"w": ...}`` is a plain dense GEMM."""
+    the indexmac kernel path (its own nm/policy), QNMWeight to the int8
+    dequantizing kernel family, MaskedNMWeight re-projects onto the N:M
+    constraint set (straight-through grads), ``{"w": ...}`` is a plain
+    dense GEMM."""
     compute_dtype = compute_dtype or get_compute_dtype()
     xc = x.astype(compute_dtype)
+    if isinstance(params, QNMWeight):
+        # int8 payload stays int8 — dequantization happens in-register
+        # inside the kernel (scales at accumulator writeback); only the
+        # activation follows the compute dtype.
+        return nm_matmul(xc, params)
     if isinstance(params, NMWeight):
         return nm_matmul(xc, params.astype(compute_dtype))
     if isinstance(params, MaskedNMWeight):
@@ -129,7 +136,7 @@ def linear_weight_dense(params) -> jax.Array:
     the forward pass multiplies by. For masked weights that is the N:M
     projection, matching ``repro.api.densify`` — the raw (unpruned)
     training storage is ``params.w``."""
-    if isinstance(params, NMWeight):
+    if isinstance(params, (NMWeight, QNMWeight)):
         return params.to_dense()
     if isinstance(params, MaskedNMWeight):
         return params.project()

@@ -4,9 +4,14 @@ Sparse weights are typed :class:`repro.core.nmweight.NMWeight` nodes and
 are handled *structurally*: the node is one unit (``is_leaf``), moments
 are allocated for its ``vals`` leaf only, and the ``idx`` leaf — pattern
 metadata, not a parameter — is passed through untouched with a scalar
-placeholder in the moment trees. No dtype sniffing is involved, so an
-unrelated integer leaf elsewhere in the params keeps its historical
-behavior (no state, passed through; its gradient arrives as float0 from
+placeholder in the moment trees. Quantized
+:class:`repro.quant.QNMWeight` nodes are excluded structurally as one
+unit: int8 values are a serving artifact, not trainable parameters (the
+gradient of a rounding lattice is meaningless) — the whole node (vals,
+idx, scales) passes through bit-identical with scalar moment
+placeholders. No dtype sniffing is involved, so an unrelated integer
+leaf elsewhere in the params keeps its historical behavior (no state,
+passed through; its gradient arrives as float0 from
 `jax.grad(..., allow_int=True)`).
 
 Optimizer-state sharding: moments mirror the parameter PartitionSpecs, so
@@ -22,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.nmweight import NMWeight
+from repro.quant import QNMWeight
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,7 +51,7 @@ def _is_trainable(leaf) -> bool:
 
 
 def _is_weight_node(x) -> bool:
-    return isinstance(x, NMWeight)
+    return isinstance(x, (NMWeight, QNMWeight))
 
 
 def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
@@ -61,6 +67,13 @@ def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 def adamw_init(params: Any) -> dict:
     def zeros(p):
+        if isinstance(p, QNMWeight):
+            # frozen as one unit: no trainable leaves, scalar
+            # placeholders keep the moment trees congruent.
+            return dataclasses.replace(
+                p, vals=jnp.zeros((), jnp.int8),
+                idx=jnp.zeros((), jnp.int8),
+                scales=jnp.zeros((), jnp.float32))
         if _is_weight_node(p):
             # moments for the trainable vals leaf only; the idx leaf is
             # structural metadata — a scalar placeholder keeps the tree
@@ -79,9 +92,19 @@ def adamw_init(params: Any) -> dict:
 
 
 def global_norm(grads: Any) -> jax.Array:
-    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
-              for g in jax.tree.leaves(grads)
-              if hasattr(g, "dtype") and jnp.issubdtype(g.dtype, jnp.floating)]
+    """L2 norm over the gradients that will actually be applied.
+
+    QNMWeight grad nodes are skipped as one unit: the node is
+    structurally frozen, so even a real (nonzero) scales gradient never
+    updates anything — letting it into the norm would shrink the clip
+    scale applied to every trainable leaf.
+    """
+    leaves = [
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(
+            grads, is_leaf=lambda x: isinstance(x, QNMWeight))
+        if not isinstance(g, QNMWeight)
+        and hasattr(g, "dtype") and jnp.issubdtype(g.dtype, jnp.floating)]
     return jnp.sqrt(sum(leaves))
 
 
@@ -107,6 +130,10 @@ def adamw_update(cfg: AdamWConfig, params: Any, grads: Any, state: dict):
         return pf.astype(p.dtype), m, v
 
     def upd(p, g, m, v):
+        if isinstance(p, QNMWeight):
+            # structurally frozen: params and placeholders pass through
+            # bit-identical (int8 leaves never see an update).
+            return p, m, v
         if _is_weight_node(p):
             # structural exclusion: only vals trains; idx (and its scalar
             # moment placeholders) pass through bit-identical.

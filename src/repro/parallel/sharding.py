@@ -31,6 +31,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.nmweight import MaskedNMWeight, NMWeight, is_weight_node
+from repro.quant import QNMWeight
 
 # parameter leaves whose *last-but-one / last* axes are (in, out) of a GEMM,
 # keyed by leaf name: value = (spec for in-axis, spec for out-axis)
@@ -129,6 +130,23 @@ def _leaf_spec(path: tuple, leaf, mesh_shape: dict[str, int],
             leaf,
             vals=_fit(rule, leaf.vals.shape, mesh_shape),
             idx=_fit(rule, leaf.idx.shape, mesh_shape),
+        )
+    if isinstance(leaf, QNMWeight):
+        # quantized triple: vals/idx shard like the float pair; the
+        # per-output-channel scales are co-sharded with vals' output
+        # axis (the channel a scale belongs to must live on the shard
+        # that holds its column — the writeback multiply is local).
+        # Explicit leading rule axes (expert stacking) carry over too:
+        # scales of an expert-sharded (E, ..., N) weight are (E, N) and
+        # must shard the E axis with vals, not replicate across it.
+        rule = _adjust_rule(_gemm_rule(name), names, sharding_mode)
+        out_rule = rule[-1] if leaf.axis == 0 else rule[-2]
+        scales_rule = tuple(rule[:-2]) + (out_rule,)
+        return dataclasses.replace(
+            leaf,
+            vals=_fit(rule, leaf.vals.shape, mesh_shape),
+            idx=_fit(rule, leaf.idx.shape, mesh_shape),
+            scales=_fit(scales_rule, leaf.scales.shape, mesh_shape),
         )
     if isinstance(leaf, MaskedNMWeight):
         rule = _adjust_rule(_gemm_rule(name), names, sharding_mode)

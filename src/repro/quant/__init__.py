@@ -1,0 +1,22 @@
+"""Quantized sparse execution: int8 compressed N:M weights.
+
+  qnmweight.py — QNMWeight registered pytree (int8 vals/idx + f32
+                 per-output-channel scales, NMConfig/axis/KernelPolicy
+                 static metadata)
+  calibrate.py — absmax / percentile observers, quantize_nm /
+                 dequantize, tree-level quantize_tree / dequantize_tree
+
+The quantized kernels live with their float siblings under
+``repro.kernels.indexmac`` / ``repro.kernels.indexmac_gather`` (ops
+``nm_matmul_q`` / ``indexmac_gather_q``); ``repro.api.quantize`` /
+``repro.api.nm_matmul`` are the user-facing entry points.
+"""
+from repro.quant.calibrate import (  # noqa: F401
+    AbsMaxObserver,
+    PercentileObserver,
+    dequantize,
+    dequantize_tree,
+    quantize_nm,
+    quantize_tree,
+)
+from repro.quant.qnmweight import QMAX, QNMWeight  # noqa: F401

@@ -1,0 +1,223 @@
+"""Calibration: per-output-channel int8 scales for compressed weights.
+
+Two observers cover the standard weight-quantization recipes:
+
+* :class:`AbsMaxObserver` — scale = max|w| / 127 per channel. Lossless
+  range coverage, sensitive to outliers.
+* :class:`PercentileObserver` — scale = percentile(|w|, p) / 127 per
+  channel. Clips the outlier tail (values beyond the percentile saturate
+  at ±127) in exchange for finer resolution of the bulk.
+
+Observers accumulate statistics over one or more ``observe`` calls (a
+weight is usually observed once; activation-style multi-batch
+calibration composes the same way) and produce ``scales()``.
+
+``quantize_nm`` is the validating producer of :class:`QNMWeight`: it
+accepts a dense 2D array (pruned + compressed via ``repro.api.sparsify``
+semantics) or an existing :class:`NMWeight`, calibrates per output
+channel, and quantizes the *compressed* vals — per-channel statistics
+over kept values equal those over the dense channel, because pruned
+entries are exact zeros. ``dequantize`` is the inverse (up to the
+quantization error bound: |w - deq(q(w))| <= scale/2 per element for
+absmax, tested by property in tests/test_quant.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nmweight import KernelPolicy, NMWeight
+from repro.core.sparsity import NMConfig
+from repro.quant.qnmweight import QMAX, QNMWeight
+
+__all__ = [
+    "AbsMaxObserver",
+    "PercentileObserver",
+    "quantize_nm",
+    "dequantize",
+    "quantize_tree",
+    "dequantize_tree",
+]
+
+_EPS = 1e-12  # all-zero channels quantize with a harmless unit-ish scale
+
+
+class AbsMaxObserver:
+    """Running per-channel absmax over observed tensors.
+
+    ``axis`` is the reduction (compressed) axis: statistics survive per
+    index of the *other* axis — the output channel.
+    """
+
+    def __init__(self):
+        self._max: Optional[jax.Array] = None
+
+    def observe(self, w: jax.Array, axis: int = 0) -> "AbsMaxObserver":
+        m = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis)
+        self._max = m if self._max is None else jnp.maximum(self._max, m)
+        return self
+
+    def scales(self, qmax: int = QMAX) -> jax.Array:
+        if self._max is None:
+            raise ValueError("observer has seen no data; call observe first")
+        return jnp.maximum(self._max, _EPS) / qmax
+
+
+class PercentileObserver:
+    """Per-channel |w| percentile over everything observed so far.
+
+    Keeps the observed tensors (weights are small relative to
+    activations; calibration is offline) and computes the percentile
+    over their concatenation along the reduction axis.
+    """
+
+    def __init__(self, pct: float = 99.9):
+        if not 0.0 < pct <= 100.0:
+            raise ValueError(f"pct must be in (0, 100], got {pct}")
+        self.pct = pct
+        self._seen: list[jax.Array] = []
+        self._axis: Optional[int] = None
+
+    def observe(self, w: jax.Array, axis: int = 0) -> "PercentileObserver":
+        if self._axis is not None and axis != self._axis:
+            raise ValueError(
+                f"observer reduction axis changed: {self._axis} -> {axis}")
+        self._axis = axis
+        self._seen.append(jnp.abs(w.astype(jnp.float32)))
+        return self
+
+    def scales(self, qmax: int = QMAX) -> jax.Array:
+        if not self._seen:
+            raise ValueError("observer has seen no data; call observe first")
+        stacked = jnp.concatenate(self._seen, axis=self._axis)
+        p = jnp.percentile(stacked, self.pct, axis=self._axis)
+        return jnp.maximum(p, _EPS) / qmax
+
+
+_OBSERVERS = {"absmax": AbsMaxObserver, "percentile": PercentileObserver}
+
+Observer = Union[AbsMaxObserver, PercentileObserver]
+
+
+def _as_observer(method) -> Observer:
+    if isinstance(method, (AbsMaxObserver, PercentileObserver)):
+        return method
+    if isinstance(method, str):
+        cls = _OBSERVERS.get(method)
+        if cls is None:
+            raise ValueError(
+                f"unknown calibration method {method!r}; expected one of "
+                f"{sorted(_OBSERVERS)} or an observer instance")
+        return cls()
+    raise TypeError(
+        f"method must be a string or observer, got {type(method).__name__}")
+
+
+def quantize_nm(
+    w: Union[jax.Array, NMWeight],
+    nm: Optional[NMConfig] = None,
+    *,
+    method: Union[str, Observer] = "absmax",
+    axis: int = 0,
+    kernel_policy: Optional[Union[KernelPolicy, str]] = None,
+) -> QNMWeight:
+    """Quantize a weight to the int8 compressed representation.
+
+    ``w`` is a dense 2D array (``nm`` required; pruned top-|w| N:M and
+    compressed first) or an existing :class:`NMWeight` (``nm`` must be
+    omitted or match). ``method`` picks the calibration observer; a
+    pre-populated observer instance may be passed to reuse statistics
+    gathered elsewhere. ``kernel_policy`` overrides the policy carried
+    over from the source weight (defaults: the NMWeight's own policy,
+    or "auto" for dense input).
+    """
+    if isinstance(w, QNMWeight):
+        raise TypeError("weight is already quantized")
+    if isinstance(w, NMWeight):
+        if nm is not None and nm != w.nm:
+            raise ValueError(
+                f"nm {nm.tag} conflicts with the weight's own {w.nm.tag}")
+        sw = w
+    else:
+        from repro.api import sparsify  # lazy: api imports this module
+
+        if nm is None:
+            raise ValueError("nm is required when quantizing a dense array")
+        sw = sparsify(jnp.asarray(w), nm, axis=axis,
+                      kernel_policy=kernel_policy or KernelPolicy("auto"))
+    if sw.vals.ndim != 2:
+        raise ValueError(
+            f"quantize_nm expects a 2D weight, got vals shape {sw.vals.shape}")
+
+    # Per-output-channel statistics over the compressed vals: kept values
+    # are exactly the dense channel's non-zeros, so absmax is identical
+    # to the dense channel's. Percentiles are over *kept* magnitudes
+    # (pruned zeros excluded) — the pct-th percentile of the values the
+    # int8 grid actually has to represent, which is the distribution
+    # that matters for clipping.
+    obs = _as_observer(method)
+    obs.observe(sw.vals, axis=sw.axis)
+    scales = obs.scales()
+
+    bcast = scales[None, :] if sw.axis == 0 else scales[:, None]
+    q = jnp.round(sw.vals.astype(jnp.float32) / bcast)
+    q = jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+    policy = sw.kernel_policy
+    if kernel_policy is not None:
+        policy = (kernel_policy if isinstance(kernel_policy, KernelPolicy)
+                  else KernelPolicy(mode=kernel_policy))
+    return QNMWeight(vals=q, idx=sw.idx, scales=scales.astype(jnp.float32),
+                     nm=sw.nm, axis=sw.axis, kernel_policy=policy)
+
+
+def dequantize(qw: QNMWeight, dtype=jnp.float32) -> NMWeight:
+    """Float :class:`NMWeight` with the same pattern (fallback path)."""
+    if not isinstance(qw, QNMWeight):
+        raise TypeError(
+            f"dequantize expects a QNMWeight, got {type(qw).__name__}")
+    return qw.dequantize(dtype=dtype)
+
+
+def quantize_tree(params, *, method: str = "absmax"):
+    """Quantize every :class:`NMWeight` leaf of a param tree to int8.
+
+    Dense leaves, masked weights and everything else pass through
+    unchanged — the walk is the gate, exactly like the serving autotune
+    warmup. Scan-stacked (3D+) NMWeight leaves are quantized per stacked
+    slice via vmap so each layer gets its own per-channel scales.
+
+    ``method`` must be a method *name* here, not an observer instance:
+    one observer accumulates statistics across observe calls, so reusing
+    it for every leaf would contaminate each leaf's scales with all
+    previous leaves' (per-weight observer instances belong with
+    per-weight :func:`quantize_nm` calls).
+    """
+    if not isinstance(method, str):
+        raise TypeError(
+            "quantize_tree needs a method name ('absmax' | 'percentile'); "
+            "an observer instance would accumulate statistics across "
+            "leaves — pass it to quantize_nm for the one weight it "
+            "calibrates")
+
+    def one(p):
+        if not isinstance(p, NMWeight):
+            return p
+        if p.vals.ndim == 2:
+            return quantize_nm(p, method=method)
+        f = lambda sw: quantize_nm(sw, method=method)  # noqa: E731
+        for _ in range(p.vals.ndim - 2):
+            f = jax.vmap(f)
+        return f(p)
+
+    return jax.tree.map(one, params,
+                        is_leaf=lambda x: isinstance(x, NMWeight))
+
+
+def dequantize_tree(params, dtype=jnp.float32):
+    """Inverse of :func:`quantize_tree` (up to quantization error)."""
+    return jax.tree.map(
+        lambda p: dequantize(p, dtype=dtype) if isinstance(p, QNMWeight)
+        else p,
+        params, is_leaf=lambda x: isinstance(x, QNMWeight))

@@ -1,0 +1,108 @@
+"""Quantized compressed N:M weight: int8 payload + per-channel scales.
+
+The paper's compressed pair already halves-or-better the sparse
+operand's bytes (values + bounded int8 indices); quantizing the kept
+values to int8 compounds the same lever — the kernel streams one byte
+per kept value instead of two (bf16) or four (f32), with a float32
+scale per *output channel* applied once at accumulator writeback. The
+follow-up RISC-V work (arXiv 2501.10189) and the sparse-DNN HW/SW
+co-design line (arXiv 2504.19659) both pull exactly this combination.
+
+:class:`QNMWeight` mirrors :class:`repro.core.nmweight.NMWeight`: the
+``vals`` (int8), ``idx`` (int8) and ``scales`` (float32) arrays are
+pytree leaves; the :class:`NMConfig`, compressed ``axis`` and
+:class:`KernelPolicy` ride as static treedef metadata. Every subsystem
+(api dispatch, kernel registry, sharding, optimizer, checkpointing,
+serving autotune) dispatches on the type.
+
+Scale layout: one scale per output channel, i.e. per index along the
+*non-compressed* axis of the logical 2D weight —
+
+* ``axis=0`` (``y = x @ W``, W compressed along K): ``vals`` is
+  ``(Kc, N)`` and ``scales`` is ``(N,)`` — one scale per output column,
+  constant over the contraction, so it factors out of the dot and is
+  applied once per output tile.
+* ``axis=1`` (the paper's A-orientation, ``C = A @ B``): ``vals`` is
+  ``(Mr, Kc)`` and ``scales`` is ``(Mr,)`` — one scale per output row.
+
+Symmetric quantization (no zero point): zero stays exactly zero, which
+the N:M representation requires — a quantized zero-padded slot must
+still kill its index's contribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.core.nmweight import (
+    KernelPolicy,
+    NMWeight,
+    register_weight_type,
+)
+from repro.core.sparsity import NMConfig, decompress_nm
+
+__all__ = ["QNMWeight", "QMAX"]
+
+QMAX = 127  # symmetric int8 range [-127, 127]; -128 never produced
+
+
+@dataclasses.dataclass(frozen=True)
+class QNMWeight:
+    """Quantized compressed N:M weight (int8 payload, f32 scales).
+
+    vals:   int8 quantized kept values, ``axis`` shrunk by n/m relative
+            to the dense weight.
+    idx:    int8 in-block positions in ``[0, m)``, same shape as vals.
+    scales: float32 per-output-channel dequantization scales, shape =
+            (vals.shape[1 - axis],) for 2D weights (leading stacked
+            axes from scan/vmap carry through).
+    nm:     the N:M pattern the pair encodes.
+    axis:   compressed axis of the logical 2D weight (see module doc).
+    kernel_policy: dispatch policy, same semantics as NMWeight's.
+
+    No shape/dtype validation happens here: instances flow through
+    jit / vmap / eval_shape where leaves are tracers or
+    ShapeDtypeStructs. ``repro.quant.calibrate.quantize_nm`` is the
+    validating producer.
+    """
+
+    vals: jax.Array
+    idx: jax.Array
+    scales: jax.Array
+    nm: NMConfig
+    axis: int = 0
+    kernel_policy: KernelPolicy = KernelPolicy()
+
+    @property
+    def dense_dim(self) -> int:
+        """Size of the compressed axis in the dense weight."""
+        return self.vals.shape[self.axis] * self.nm.m // self.nm.n
+
+    def _scale_bcast(self) -> jax.Array:
+        """Scales broadcast against the compressed (vals) layout."""
+        if self.axis == 0:
+            return self.scales[..., None, :]  # (..., 1, N)
+        return self.scales[..., :, None]      # (..., Mr, 1)
+
+    def dequantize(self, dtype=jnp.float32) -> NMWeight:
+        """Float NMWeight with the same pattern (the fallback path)."""
+        vals = (self.vals.astype(jnp.float32) * self._scale_bcast())
+        return NMWeight(vals=vals.astype(dtype), idx=self.idx, nm=self.nm,
+                        axis=self.axis, kernel_policy=self.kernel_policy)
+
+    def to_dense(self, dtype=jnp.float32) -> jax.Array:
+        """Materialize the dense float weight (tests / export)."""
+        d8 = decompress_nm(self.vals, self.idx, self.nm, axis=self.axis)
+        # the non-compressed axis sits in the same position in the dense
+        # and compressed layouts, so the same broadcast applies.
+        return (d8.astype(jnp.float32) * self._scale_bcast()).astype(dtype)
+
+
+compat.register_dataclass(
+    QNMWeight, data_fields=("vals", "idx", "scales"),
+    meta_fields=("nm", "axis", "kernel_policy"),
+)
+register_weight_type(QNMWeight)

@@ -83,7 +83,19 @@ class ServeEngine:
 
     def __init__(self, lm: LM, params: Any, *, slots: int, max_seq: int,
                  prefill_len: int, temperature: float = 0.0, seed: int = 0,
-                 autotune_blocks: bool = False):
+                 autotune_blocks: bool = False,
+                 quantize: Optional[str] = None):
+        if quantize not in (None, "int8"):
+            raise ValueError(
+                f"quantize must be None or 'int8', got {quantize!r}")
+        if quantize == "int8":
+            # load-time weight quantization: every compressed NMWeight
+            # leaf becomes an int8 QNMWeight (per-output-channel absmax
+            # scales); dense / masked leaves are untouched. Decode then
+            # streams one byte per kept value instead of two (bf16).
+            from repro.quant import quantize_tree
+
+            params = quantize_tree(params)
         self.lm = lm
         self.params = params
         self.slots = slots
@@ -110,25 +122,31 @@ class ServeEngine:
         """Warm the autotune cache for this engine's sparse-GEMM shapes:
         decode steps run M = slots rows, prefill M = slots * prefill_len.
 
-        Walks the typed NMWeight leaves of the param tree: each weight's
-        own NMConfig supplies the Kc -> K ratio, so a model mixing 2:4
-        and 1:4 layers tunes every shape at its true geometry (the old
-        dict walk hardcoded the global ratio). Dense and masked models
-        contribute no NMWeight leaves — the walk is the gate."""
+        Walks the typed NMWeight / QNMWeight leaves of the param tree:
+        each weight's own NMConfig supplies the Kc -> K ratio, so a
+        model mixing 2:4 and 1:4 layers tunes every shape at its true
+        geometry (the old dict walk hardcoded the global ratio), and
+        int8 leaves tune under the quantized family's own cache keys
+        (value dtype int8). Dense and masked models contribute no such
+        leaves — the walk is the gate."""
         from repro.core.nmweight import NMWeight
         from repro.kernels import autotune
         from repro.models.common import get_compute_dtype
+        from repro.quant import QNMWeight
 
-        shapes: set[tuple[int, int, Any]] = set()
+        typed = (NMWeight, QNMWeight)
+        shapes: set[tuple[int, int, Any, Any]] = set()
         for leaf in jax.tree.leaves(
-                self.params, is_leaf=lambda x: isinstance(x, NMWeight)):
-            if isinstance(leaf, NMWeight):
+                self.params, is_leaf=lambda x: isinstance(x, typed)):
+            if isinstance(leaf, typed):
                 kc, n = leaf.vals.shape[-2:]  # scan-stacked leaves
-                shapes.add((kc * leaf.nm.m // leaf.nm.n, n, leaf.nm))
-        for k, n, nm in sorted(shapes, key=lambda t: (t[0], t[1], t[2].tag)):
+                dt = (jnp.int8 if isinstance(leaf, QNMWeight)
+                      else get_compute_dtype())
+                shapes.add((kc * leaf.nm.m // leaf.nm.n, n, leaf.nm, dt))
+        for k, n, nm, dt in sorted(
+                shapes, key=lambda t: (t[0], t[1], t[2].tag, str(t[3]))):
             for m_rows in {self.slots, self.slots * self.prefill_len}:
-                autotune.ensure_tuned(m_rows, n, k, nm,
-                                      dtype=get_compute_dtype())
+                autotune.ensure_tuned(m_rows, n, k, nm, dtype=dt)
 
     def _sample(self, logits: np.ndarray) -> int:
         if self.temperature <= 0:

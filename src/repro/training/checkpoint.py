@@ -1,13 +1,18 @@
 """Sharded checkpointing with async save and elastic restore.
 
-Format (v2): one .npz per pytree "shard group" + a JSON manifest holding
+Format (v3): one .npz per pytree "shard group" + a JSON manifest holding
 the step, the data-pipeline cursor, per-leaf key paths, and the static
 metadata of every typed sparse weight node
-(:class:`repro.core.nmweight.NMWeight` / :class:`MaskedNMWeight`): the
-N:M pattern, compressed axis and kernel policy travel WITH the
-checkpoint, and restore verifies them against the template (a 1:4
-checkpoint cannot silently restore into a 2:4 model — the arrays would
-decompress into garbage long before any shape check fired). Restore
+(:class:`repro.core.nmweight.NMWeight` / :class:`MaskedNMWeight` /
+the quantized :class:`repro.quant.QNMWeight`): the N:M pattern,
+compressed axis, kernel policy and — for quantized weights — the
+quantization kind and scale dtype travel WITH the checkpoint, and
+restore verifies them against the template (a 1:4 checkpoint cannot
+silently restore into a 2:4 model, and a bf16 checkpoint cannot
+restore into an int8 template — the arrays would decompress into
+garbage long before any shape check fired). v3 only *adds* the
+quantized node kind: v2 checkpoints (no QNMWeight leaves) restore
+unchanged through the same positional path. Restore
 works onto a *different* mesh/sharding than the save used (elastic
 scaling): arrays are loaded host-side and re-placed with jax.device_put
 under the target sharding — the standard resize-on-restart flow for
@@ -36,8 +41,9 @@ import jax
 import numpy as np
 
 from repro.core.nmweight import MaskedNMWeight, NMWeight, is_weight_node
+from repro.quant import QNMWeight
 
-_FORMAT = 2
+_FORMAT = 3
 
 
 def _pathstr(path) -> str:
@@ -57,7 +63,19 @@ def _weight_meta(tree: Any) -> dict[str, dict]:
     flat = jax.tree_util.tree_flatten_with_path(
         tree, is_leaf=is_weight_node)[0]
     for path, leaf in flat:
-        if isinstance(leaf, NMWeight):
+        if isinstance(leaf, QNMWeight):
+            # checked before NMWeight branches: the quantized node must
+            # never be mistaken for (or restored as) the float kind.
+            pol = leaf.kernel_policy
+            out[_pathstr(path)] = {
+                "kind": "quantized", "n": leaf.nm.n, "m": leaf.nm.m,
+                "axis": leaf.axis,
+                "scale_dtype": str(np.dtype(
+                    getattr(leaf.scales, "dtype", np.float32))),
+                "policy": {"mode": pol.mode,
+                           "block": list(pol.block) if pol.block else None},
+            }
+        elif isinstance(leaf, NMWeight):
             pol = leaf.kernel_policy
             out[_pathstr(path)] = {
                 "kind": "compressed", "n": leaf.nm.n, "m": leaf.nm.m,

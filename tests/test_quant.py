@@ -1,0 +1,574 @@
+"""Quantized sparse execution: QNMWeight round-trips, the int8 kernel
+family (bit-exact vs its oracle on the integer lattice, odd/padded
+shapes included), decode top-1 parity vs bf16 (mirroring
+test_fp8_cache.py), and the end-to-end wiring — api, serving, autotune
+warmup, checkpoint v3, sharding, optimizer, cost accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import api
+from repro.core.nmweight import KernelPolicy, NMWeight
+from repro.core.sparsity import NMConfig, compress_nm, random_nm_matrix
+from repro.kernels import registry
+from repro.quant import (
+    AbsMaxObserver,
+    PercentileObserver,
+    QNMWeight,
+    quantize_nm,
+    quantize_tree,
+)
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize round-trip
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kblocks=st.integers(1, 6),
+    n=st.integers(1, 12),
+    pattern=st.sampled_from([(1, 2), (1, 4), (2, 4), (3, 8)]),
+    seed=st.integers(0, 2**16),
+)
+def test_dequantize_quantize_error_bound_per_channel(kblocks, n, pattern,
+                                                     seed):
+    """Absmax int8: |deq(q(w)) - w| <= scale/2 elementwise, with each
+    channel's own scale — the per-channel quantization error bound."""
+    nm = NMConfig(*pattern)
+    k = kblocks * nm.m
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n))
+    sw = api.sparsify(w, nm)
+    qw = api.quantize(sw)
+    assert isinstance(qw, QNMWeight)
+    assert qw.vals.dtype == jnp.int8 and qw.scales.shape == (n,)
+    np.testing.assert_array_equal(np.asarray(qw.idx), np.asarray(sw.idx))
+    dq = api.dequantize(qw)
+    err = np.abs(np.asarray(dq.vals) - np.asarray(sw.vals))
+    bound = np.asarray(qw.scales)[None, :] * 0.5 * (1 + 1e-5) + 1e-7
+    assert (err <= bound).all(), (err.max(), bound.min())
+
+
+def test_quantize_dense_input_and_validation():
+    nm = NMConfig(2, 4)
+    qw = api.quantize(jax.random.normal(jax.random.PRNGKey(0), (16, 8)), nm)
+    assert isinstance(qw, QNMWeight) and qw.vals.shape == (8, 8)
+    with pytest.raises(ValueError, match="nm is required"):
+        api.quantize(jnp.ones((8, 4)))
+    with pytest.raises(ValueError, match="conflicts"):
+        api.quantize(api.sparsify(jnp.ones((8, 4)), nm), NMConfig(1, 4))
+    with pytest.raises(TypeError, match="already quantized"):
+        api.quantize(qw)
+    with pytest.raises(TypeError, match="QNMWeight"):
+        api.dequantize(api.sparsify(jnp.ones((8, 4)), nm))
+
+
+def test_percentile_observer_clips_outliers():
+    """One huge outlier per channel: percentile calibration ignores it
+    (finer resolution for the bulk, outlier saturates at +-127), absmax
+    does not."""
+    nm = NMConfig(2, 4)
+    w = random_nm_matrix(jax.random.PRNGKey(1), (512, 4), nm, axis=0)
+    w = w.at[0, :].set(1e3)  # outlier in every channel
+    sw = api.sparsify(w, nm)
+    q_abs = api.quantize(sw, method="absmax")
+    q_pct = api.quantize(sw, method=PercentileObserver(pct=90.0))
+    assert float(q_pct.scales.max()) < float(q_abs.scales.min())
+    # the outlier saturated at the int8 rail under percentile calibration
+    assert int(np.asarray(q_pct.vals).max()) == 127
+
+
+def test_observer_api_validation():
+    with pytest.raises(ValueError, match="no data"):
+        AbsMaxObserver().scales()
+    with pytest.raises(ValueError, match="pct"):
+        PercentileObserver(pct=0.0)
+    with pytest.raises(ValueError, match="unknown calibration"):
+        quantize_nm(api.sparsify(jnp.ones((8, 4)), NMConfig(2, 4)),
+                    method="zen")
+    obs = AbsMaxObserver()
+    obs.observe(jnp.ones((8, 4)))
+    obs.observe(2 * jnp.ones((8, 4)))  # running max across observations
+    np.testing.assert_allclose(np.asarray(obs.scales()), 2.0 / 127)
+
+
+# ---------------------------------------------------------------------------
+# pytree semantics
+# ---------------------------------------------------------------------------
+
+
+def test_qnmweight_is_a_pytree():
+    qw = api.quantize(jax.random.normal(jax.random.PRNGKey(2), (16, 8)),
+                      NMConfig(2, 4))
+    leaves, treedef = jax.tree_util.tree_flatten(qw)
+    assert len(leaves) == 3  # vals, idx, scales — metadata in the treedef
+    mapped = jax.tree.map(lambda x: x, qw)
+    assert isinstance(mapped, QNMWeight) and mapped.nm == qw.nm
+    other = dataclasses.replace(qw, nm=NMConfig(1, 4))
+    assert jax.tree_util.tree_structure(other) != treedef
+    assert api.is_sparse(qw)
+
+    @jax.jit
+    def f(x, qw):
+        return api.nm_matmul(x, qw).sum()
+
+    assert np.isfinite(float(f(jnp.ones((4, 16)), qw)))
+
+
+def test_quantize_tree_walks_nmweight_leaves_only():
+    nm = NMConfig(2, 4)
+
+    def mk(key):
+        return api.sparsify(jax.random.normal(key, (32, 16)), nm)
+
+    stacked = jax.vmap(mk)(jax.random.split(jax.random.PRNGKey(3), 3))
+    tree = {"flat": mk(jax.random.PRNGKey(4)), "stack": stacked,
+            "dense": {"w": jnp.ones((4, 4))}, "scale": jnp.ones((4,))}
+    qt = quantize_tree(tree)
+    assert isinstance(qt["flat"], QNMWeight)
+    assert isinstance(qt["stack"], QNMWeight)
+    assert qt["stack"].vals.shape == (3, 16, 16)
+    assert qt["stack"].scales.shape == (3, 16)  # per-slice channels
+    assert qt["dense"]["w"].dtype == jnp.float32  # untouched
+    # per-slice scales really differ (each layer calibrated on its own)
+    assert len({float(s) for s in np.asarray(qt["stack"].scales[:, 0])}) > 1
+
+
+def test_quantize_tree_rejects_shared_observer_instances():
+    """An observer accumulates statistics across observe() calls, so one
+    instance walked over every leaf would contaminate each leaf's scales
+    with all previous leaves' — the tree walk must refuse it."""
+    nm = NMConfig(2, 4)
+    tree = {"a": api.sparsify(jax.random.normal(jax.random.PRNGKey(20),
+                                                (16, 8)), nm)}
+    with pytest.raises(TypeError, match="observer instance"):
+        quantize_tree(tree, method=AbsMaxObserver())
+    # per-leaf scales are independent: a huge first leaf must not
+    # inflate a small second leaf's scales
+    big = api.sparsify(1e3 * jax.random.normal(jax.random.PRNGKey(21),
+                                               (16, 8)), nm)
+    small = api.sparsify(1e-3 * jax.random.normal(jax.random.PRNGKey(22),
+                                                  (16, 8)), nm)
+    qt = quantize_tree({"big": big, "small": small})
+    assert float(qt["small"].scales.max()) < 1e-3
+    assert int(np.abs(np.asarray(qt["small"].vals)).max()) > 0
+
+
+# ---------------------------------------------------------------------------
+# int8 kernel family: dispatch + bit-exactness
+# ---------------------------------------------------------------------------
+
+
+def _int_lattice_problem(k, n, m_rows, nm, seed=0):
+    """Integer-valued operands: every f32 partial sum is an exactly
+    representable integer (|acc| << 2^24), so kernel-vs-oracle equality
+    is bitwise regardless of tiling/padding — real bit-exactness, not
+    allclose."""
+    rng = np.random.default_rng(seed)
+    w = random_nm_matrix(jax.random.PRNGKey(seed), (k, n), nm, axis=0)
+    sw = api.sparsify(w, nm)
+    qvals = rng.integers(-127, 128, size=sw.vals.shape).astype(np.int8)
+    # zero-padded slots must stay zero (the N:M invariant)
+    qvals = np.where(np.asarray(sw.vals) == 0, 0, qvals).astype(np.int8)
+    scales = rng.uniform(0.01, 0.1, size=(n,)).astype(np.float32)
+    qw = QNMWeight(vals=jnp.asarray(qvals), idx=sw.idx,
+                   scales=jnp.asarray(scales), nm=nm,
+                   kernel_policy=KernelPolicy("force"))
+    x = rng.integers(-8, 9, size=(m_rows, k)).astype(np.float32)
+    return jnp.asarray(x), qw
+
+
+@pytest.mark.parametrize("shape", [
+    (128, 128, 64),    # exactly tileable
+    (36, 20, 5),       # odd everything -> padded geometry
+    (132, 200, 7),     # odd, multi-padded
+], ids=lambda s: "K%dN%dM%d" % s)
+@pytest.mark.parametrize("pattern", [(1, 4), (2, 4)],
+                         ids=lambda p: "%d:%d" % p)
+def test_int8_kernel_bit_exact_vs_int8_ref(shape, pattern):
+    from repro.kernels.indexmac.ref import nm_matmul_q_ref
+
+    k, n, m_rows = shape
+    nm = NMConfig(*pattern)
+    x, qw = _int_lattice_problem(k, n, m_rows, nm)
+    registry.clear_history()
+    y_k = api.nm_matmul(x, qw)  # force policy -> padded Pallas kernel
+    rec = registry.last_dispatch("nm_matmul_q")
+    assert rec.impl == "pallas_padded_q", rec
+    y_ref = nm_matmul_q_ref(x, qw.vals, qw.idx, qw.scales, nm)
+    np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_ref))
+
+
+def test_int8_policy_off_pins_reference():
+    nm = NMConfig(2, 4)
+    x, qw = _int_lattice_problem(64, 16, 4, nm)
+    qw = dataclasses.replace(qw, kernel_policy=KernelPolicy("off"))
+    registry.clear_history()
+    api.nm_matmul(x, qw)
+    rec = registry.last_dispatch("nm_matmul_q")
+    assert rec.impl == "reference_q" and "use_kernel=False" in rec.reason
+
+
+def test_int8_matches_float_reference_within_quant_noise():
+    """End to end: the int8 path approximates the float sparse matmul
+    with error bounded by the per-channel scales."""
+    nm = NMConfig(2, 4)
+    w = random_nm_matrix(jax.random.PRNGKey(5), (256, 128), nm, axis=0)
+    x = jax.random.normal(jax.random.PRNGKey(6), (16, 256))
+    qw = api.quantize(api.sparsify(w, nm))
+    y_q = api.nm_matmul(x, qw)
+    y_f = x @ w
+    rel = float(jnp.abs(y_q - y_f).max() / jnp.abs(y_f).max())
+    assert rel < 0.05, rel
+
+
+def test_int8_gather_kernel_matches_its_ref():
+    from repro.kernels.indexmac_gather.ops import indexmac_gather
+    from repro.kernels.indexmac_gather.ref import indexmac_gather_q_ref
+
+    nm = NMConfig(2, 4)
+    a = random_nm_matrix(jax.random.PRNGKey(7), (16, 256), nm, axis=1)
+    vals, idx = compress_nm(a, nm, axis=1)
+    sw = NMWeight(vals=vals, idx=idx, nm=nm, axis=1,
+                  kernel_policy=KernelPolicy("auto"))
+    qw = quantize_nm(sw)
+    assert qw.scales.shape == (16,)  # per output ROW in A-orientation
+    b = jax.random.normal(jax.random.PRNGKey(8), (256, 128))
+    registry.clear_history()
+    c = indexmac_gather(qw, b)
+    assert registry.last_dispatch("indexmac_gather_q").impl == \
+        "pallas_gather_q"
+    c_ref = indexmac_gather_q_ref(qw.vals, qw.idx, qw.scales, b, nm)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_int8_autotune_keys_are_their_own_family(tmp_path, monkeypatch):
+    """best_block(dtype=int8) and the float lookup must never share a
+    cache entry — the int8 family sweeps its own kernel."""
+    from repro.kernels import autotune
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    autotune.clear_memory_cache()
+    nm = NMConfig(2, 4)
+    blk_q = autotune.tune(8, 128, 128, nm, dtype=jnp.int8,
+                          candidates=[(8, 128, 128)], repeats=1)
+    assert blk_q == (8, 128, 128)
+    # the int8 winner is cached under its own key...
+    assert autotune.cached_block(8, 128, 128, nm, jnp.int8) == blk_q
+    # ...and invisible to the float family
+    assert autotune.cached_block(8, 128, 128, nm, jnp.float32) is None
+    autotune.clear_memory_cache()
+
+
+# ---------------------------------------------------------------------------
+# decode parity vs bf16 (mirrors test_fp8_cache.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sparse_yi():
+    from repro.configs import get_reduced
+    from repro.configs.base import SparsityConfig
+    from repro.models import common
+    from repro.models.transformer import LM
+
+    common.set_compute_dtype(jnp.float32)
+    cfg = get_reduced("yi-9b")
+    cfg = dataclasses.replace(cfg, sparsity=SparsityConfig(
+        nm=NMConfig(2, 4), mode="compressed", use_kernel=False))
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    yield cfg, lm, params
+    common.set_compute_dtype(jnp.bfloat16)
+
+
+def test_int8_decode_top1_matches_float(sparse_yi):
+    cfg, lm, params = sparse_yi
+    qparams = quantize_tree(params)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    out = {}
+    for name, p in (("float", params), ("int8", qparams)):
+        caches = lm.init_cache(2, 32)
+        lp, caches, _ = lm.forward(p, tokens, mode="prefill",
+                                   caches=caches, cache_len=jnp.int32(0))
+        nxt = jnp.argmax(lp[:, -1:], -1)
+        ld, _, _ = lm.forward(p, nxt, mode="decode", caches=caches,
+                              cache_len=jnp.int32(16))
+        out[name] = np.asarray(ld, np.float32)
+    rel = (np.abs(out["float"] - out["int8"]).max()
+           / (np.abs(out["float"]).max() + 1e-9))
+    assert rel < 0.15, rel  # int8 noise stays bounded
+    # greedy decoding is unchanged
+    assert (out["float"].argmax(-1) == out["int8"].argmax(-1)).all()
+
+
+def test_serve_engine_quantize_int8_end_to_end(sparse_yi):
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg, lm, params = sparse_yi
+    eng_f = ServeEngine(lm, params, slots=1, max_seq=64, prefill_len=8)
+    eng_q = ServeEngine(lm, params, slots=1, max_seq=64, prefill_len=8,
+                        quantize="int8")
+    leaves = jax.tree.leaves(
+        eng_q.params, is_leaf=lambda x: isinstance(x, QNMWeight))
+    assert any(isinstance(l, QNMWeight) for l in leaves)
+    p = np.arange(8, dtype=np.int32)
+    for eng in (eng_f, eng_q):
+        eng.submit(Request(rid=0, prompt=p.copy(), max_new=6))
+    assert eng_q.run()[0].out == eng_f.run()[0].out  # greedy top-1 parity
+    with pytest.raises(ValueError, match="quantize"):
+        ServeEngine(lm, params, slots=1, max_seq=64, prefill_len=8,
+                    quantize="int4")
+
+
+def test_serve_with_kernels_routes_through_int8_family(sparse_yi):
+    """use_kernel=True + quantize="int8": every compressed GEMM the
+    engine issues dispatches through the nm_matmul_q family, and the
+    prefill shapes actually take the Pallas q-kernel (decode's tiny M
+    legitimately falls back on pad waste)."""
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg, lm, _ = sparse_yi
+    kcfg = dataclasses.replace(cfg, sparsity=dataclasses.replace(
+        cfg.sparsity, use_kernel=True))
+    klm = type(lm)(kcfg)
+    kparams = klm.init(jax.random.PRNGKey(0))
+    registry.clear_history()
+    eng = ServeEngine(klm, kparams, slots=2, max_seq=32, prefill_len=8,
+                      quantize="int8")
+    eng.submit(Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                       max_new=2))
+    assert len(eng.run()) == 1
+    recs = registry.dispatch_history("nm_matmul_q")
+    assert recs, "no quantized GEMM dispatches recorded"
+    assert any(r.impl == "pallas_padded_q" for r in recs)
+    assert not registry.dispatch_history("nm_matmul")  # nothing floats
+
+
+def test_autotune_warmup_walks_qnmweight_leaves(sparse_yi, monkeypatch):
+    """quantize="int8" + autotune_blocks=True must sweep every compressed
+    GEMM shape under the int8 family's keys (value dtype int8)."""
+    from repro.kernels import autotune
+    from repro.serving.engine import ServeEngine
+
+    cfg, lm, params = sparse_yi
+    kcfg = dataclasses.replace(cfg, sparsity=dataclasses.replace(
+        cfg.sparsity, use_kernel=True))
+    klm = type(lm)(kcfg)
+    kparams = klm.init(jax.random.PRNGKey(0))
+
+    asked = []
+    monkeypatch.setattr(
+        autotune, "ensure_tuned",
+        lambda m, n, k, nm, dtype=None:
+            asked.append((m, n, k, jnp.dtype(dtype).name)) or (8, 128, 128))
+    ServeEngine(klm, kparams, slots=2, max_seq=64, prefill_len=8,
+                autotune_blocks=True, quantize="int8")
+    assert asked and all(dt == "int8" for *_, dt in asked)
+    want = set()
+    for leaf in jax.tree.leaves(
+            kparams, is_leaf=lambda x: isinstance(x, NMWeight)):
+        if isinstance(leaf, NMWeight):
+            kc, n = leaf.vals.shape[-2:]
+            for m_rows in (2, 16):
+                want.add((m_rows, n, kc * leaf.nm.m // leaf.nm.n))
+    assert {(m, n, k) for m, n, k, _ in asked} == want
+
+
+# ---------------------------------------------------------------------------
+# checkpoint v3
+# ---------------------------------------------------------------------------
+
+
+def _quant_state():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    qw = api.quantize(jax.random.normal(k1, (16, 8)), NMConfig(2, 4))
+    sw = api.sparsify(jax.random.normal(k2, (16, 4)), NMConfig(1, 4))
+    return {"params": {"ffn": {"w_up": qw}, "attn": {"wq": sw},
+                       "norm": {"scale": jnp.ones((8,))}}}
+
+
+def test_checkpoint_v3_roundtrip_preserves_scales_and_metadata(tmp_path):
+    from repro.training.checkpoint import Checkpointer
+
+    ck = Checkpointer(str(tmp_path))
+    st = _quant_state()
+    ck.save(3, st)
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    got, meta = ck.restore(template)
+    assert meta["format"] == 3
+    rest = got["params"]["ffn"]["w_up"]
+    orig = st["params"]["ffn"]["w_up"]
+    assert isinstance(rest, QNMWeight)
+    for f in ("vals", "idx", "scales"):
+        np.testing.assert_array_equal(np.asarray(getattr(rest, f)),
+                                      np.asarray(getattr(orig, f)))
+    assert rest.nm == orig.nm and rest.axis == orig.axis
+    wm = meta["weights"]["params/ffn/w_up"]
+    assert wm["kind"] == "quantized" and wm["scale_dtype"] == "float32"
+    assert meta["weights"]["params/attn/wq"]["kind"] == "compressed"
+
+
+def test_checkpoint_quantized_vs_float_kind_mismatch_rejected(tmp_path):
+    """A float (v2-era) checkpoint must not silently restore into a
+    quantized template, nor vice versa — kind is part of the contract."""
+    from repro.training.checkpoint import Checkpointer
+
+    ck = Checkpointer(str(tmp_path))
+    st = _quant_state()
+    ck.save(1, st)
+    bad = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    qw = st["params"]["ffn"]["w_up"]
+    bad["params"]["ffn"]["w_up"] = api.dequantize(qw)  # float template
+    with pytest.raises(ValueError, match="metadata mismatch"):
+        ck.restore(bad)
+
+
+def test_checkpoint_v2_float_checkpoints_load_unchanged(tmp_path):
+    """A pre-quantization (format 2) checkpoint restores byte-identically
+    through the same positional path — v3 only added a node kind."""
+    import json
+    import os
+
+    from repro.training.checkpoint import Checkpointer
+
+    st = {"w_up": api.sparsify(
+        jax.random.normal(jax.random.PRNGKey(10), (16, 8)), NMConfig(2, 4)),
+        "scale": jnp.ones((8,))}
+    ck = Checkpointer(str(tmp_path))
+    ck.save(2, st)
+    mpath = os.path.join(str(tmp_path), "step_00000002", "manifest.json")
+    with open(mpath) as f:
+        meta = json.load(f)
+    meta["format"] = 2  # byte-identical to a pre-quant checkpoint
+    with open(mpath, "w") as f:
+        json.dump(meta, f)
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st)
+    got, meta = ck.restore(template)
+    assert meta["format"] == 2
+    np.testing.assert_array_equal(np.asarray(got["w_up"].vals),
+                                  np.asarray(st["w_up"].vals))
+
+
+# ---------------------------------------------------------------------------
+# sharding + optimizer + cost accounting
+# ---------------------------------------------------------------------------
+
+
+def test_sharding_co_shards_scales_with_vals_out_axis():
+    from jax.sharding import Mesh
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import param_pspecs
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    qw = api.quantize(jax.random.normal(jax.random.PRNGKey(11), (16, 8)),
+                      NMConfig(2, 4))
+    specs = param_pspecs({"ffn": {"w_up": qw}}, mesh)
+    got = specs["ffn"]["w_up"]
+    assert got.vals == P("data", "model")
+    assert got.idx == P("data", "model")
+    assert got.scales == P("model")  # rides with the vals output axis
+
+
+def test_sharding_expert_stacked_scales_keep_expert_axis():
+    """Expert-parallel quantized weights: the (E, N) scales must shard
+    the leading E axis WITH vals — a replicated scales array paired with
+    expert-sharded vals would mispair scale rows with expert slices."""
+    from jax.sharding import Mesh
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import param_pspecs
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    nm = NMConfig(2, 4)
+
+    def mk(key):
+        return api.quantize(jax.random.normal(key, (16, 8)), nm)
+
+    stacked = jax.vmap(mk)(jax.random.split(jax.random.PRNGKey(23), 4))
+    specs = param_pspecs({"experts": {"w_up": stacked}}, mesh)
+    got = specs["experts"]["w_up"]
+    assert got.vals == P("model", "data", None)  # EP on the E axis
+    assert got.scales == P("model", None)  # E co-sharded, channels local
+
+
+def test_optimizer_excludes_int8_leaves_structurally():
+    from repro.optim.optimizer import AdamWConfig, adamw_init, adamw_update
+
+    qw = api.quantize(jax.random.normal(jax.random.PRNGKey(12), (16, 8)),
+                      NMConfig(2, 4))
+    params = {"q": qw, "w": jnp.ones((4,))}
+    state = adamw_init(params)
+    # moment placeholders for the quantized node are scalars, not arrays
+    assert state["m"]["q"].vals.shape == ()
+    assert state["m"]["q"].scales.shape == ()
+    grads = {"q": jax.tree.map(jnp.zeros_like, qw),
+             "w": jnp.ones((4,))}
+    p2, _, _ = adamw_update(AdamWConfig(lr=0.1, warmup_steps=0,
+                                        total_steps=10),
+                            params, grads, state)
+    for f in ("vals", "idx", "scales"):
+        np.testing.assert_array_equal(np.asarray(getattr(p2["q"], f)),
+                                      np.asarray(getattr(qw, f)))
+    assert not np.allclose(np.asarray(p2["w"]), 1.0)  # dense still trains
+
+
+def test_global_norm_ignores_frozen_qnmweight_grads():
+    """A nonzero scales gradient on a frozen QNMWeight must not leak
+    into the clip norm applied to trainable parameters."""
+    import dataclasses as dc
+
+    from repro.optim.optimizer import global_norm
+
+    qw = api.quantize(jax.random.normal(jax.random.PRNGKey(13), (16, 8)),
+                      NMConfig(2, 4))
+    dense_g = {"w": jnp.ones((4,))}
+    with_q = {"w": jnp.ones((4,)),
+              "q": dc.replace(qw, scales=1e6 * jnp.ones_like(qw.scales))}
+    np.testing.assert_allclose(np.asarray(global_norm(dense_g)),
+                               np.asarray(global_norm(with_q)))
+
+
+def test_int8_path_moves_fewer_bytes_than_bf16_path():
+    """Acceptance: for the same GEMM, the int8 N:M kernel streams fewer
+    HBM bytes than the bf16 N:M kernel, which streams fewer than dense."""
+    from repro.core.cost_model import (
+        tpu_dense_cost,
+        tpu_indexmac_cost,
+        tpu_indexmac_q_cost,
+    )
+
+    m, k, n = 16, 4096, 11008
+    nm = NMConfig(2, 4)
+    dense = tpu_dense_cost(m, k, n).hbm_bytes
+    bf16 = tpu_indexmac_cost(m, k, n, nm).hbm_bytes
+    int8 = tpu_indexmac_q_cost(m, k, n, nm).hbm_bytes
+    assert int8 < bf16 < dense
+    # weight-only view: value bytes halve, the idx byte stays
+    kept = k * n * nm.n // nm.m
+    assert (bf16 - int8) == pytest.approx(kept - 4 * n)
+
+
+def test_byte_ratio_threads_explicit_value_bytes():
+    nm = NMConfig(2, 4)
+    assert nm.byte_ratio(value_bytes=2) == pytest.approx(0.75)   # bf16
+    assert nm.byte_ratio(value_bytes=1) == pytest.approx(0.5)    # int8
+    assert NMConfig(1, 4).byte_ratio(value_bytes=1) == pytest.approx(0.25)
+    from repro.core.sparsity import value_bytes_of
+
+    assert value_bytes_of(jnp.int8) == 1
+    assert value_bytes_of(jnp.bfloat16) == 2
+    assert value_bytes_of(jnp.float32) == 4
+    with pytest.raises(TypeError):
+        nm.byte_ratio()  # the 2-byte default is gone — be explicit
