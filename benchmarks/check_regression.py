@@ -1,0 +1,151 @@
+"""Bench regression gate: fail when a timed row regresses vs baseline.
+
+Compares ``BENCH_results.json`` (fresh run) against the checked-in
+``benchmarks/BENCH_baseline.json``. Every shared *timed* row — the
+``fig4/5/6_measured_*`` and ``tpu_kernel_*`` families — is gated at the
+1.5x threshold on its **share of the total gated time**:
+
+    ratio_i = (new_i / sum(new)) / (base_i / sum(base))
+
+Machine speed cancels exactly in that quotient (both runs are divided by
+their own totals), so the gate compares the *shape* of the timing
+profile — one kernel path getting slower relative to the rest — and is
+robust to CI runners of different speeds and to process-level noise that
+scales all timings together. A *uniform* slowdown is invisible to
+self-normalization, so the ``bench_calibration`` row (a fixed Pallas
+kernel call timed in the same process) additionally guards the total at
+a deliberately loose 3x (per-process timing variance on shared runners
+makes a tight absolute threshold flaky). Analytic rows (model-derived
+numbers, byte accounting, module wall times) are reported but never
+gate. Runs of different modes (smoke vs full) never compare.
+
+CI (bench-smoke) runs::
+
+    python benchmarks/run.py --measured --smoke
+    python benchmarks/check_regression.py
+
+Refresh the baseline after an intentional perf change (any machine —
+normalization absorbs machine speed; the cold REPRO_AUTOTUNE_CACHE
+matches CI, which also starts cold, so both sides pick blocks the same
+way)::
+
+    JAX_PLATFORMS=cpu PYTHONPATH=src:. \\
+        REPRO_AUTOTUNE_CACHE=$(mktemp -u) \\
+        REPRO_BENCH_JSON=benchmarks/BENCH_baseline.json \\
+        python benchmarks/run.py --measured --smoke
+
+and commit ``benchmarks/BENCH_baseline.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# row-name prefixes that represent steady-state kernel timings
+GATED_PREFIXES = ("fig4_measured", "fig5_measured", "fig6_measured",
+                  "tpu_kernel_")
+CALIBRATION_ROW = "bench_calibration"
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
+                                "BENCH_baseline.json")
+
+
+def _rows(payload: dict) -> dict[str, float]:
+    return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--results", default="BENCH_results.json")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when a row's share of total gated time "
+                         "exceeds its baseline share by this factor "
+                         "(default 1.5)")
+    ap.add_argument("--global-threshold", type=float, default=3.0,
+                    help="fail when the calibration-normalized total "
+                         "exceeds baseline by this factor (uniform-"
+                         "slowdown guard; loose on purpose)")
+    ap.add_argument("--min-us", type=float, default=100.0,
+                    help="ignore rows whose baseline time is below this "
+                         "(too noisy to gate)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base_payload = json.load(f)
+    with open(args.results) as f:
+        res_payload = json.load(f)
+    # measured-smoke and full-measured runs emit identically named rows
+    # at very different magnitudes — never compare across modes
+    base_mode = base_payload.get("mode")
+    res_mode = res_payload.get("mode")
+    if base_mode != res_mode:
+        print(f"error: run-mode mismatch — baseline {base_mode}, results "
+              f"{res_mode}; regenerate one side with matching run.py "
+              "flags (CI uses --measured --smoke)", file=sys.stderr)
+        return 1
+    base = _rows(base_payload)
+    res = _rows(res_payload)
+
+    shared = sorted(set(base) & set(res) - {CALIBRATION_ROW})
+    if not shared:
+        print("error: no shared rows between baseline and results — was "
+              "the baseline generated with the same run.py mode "
+              "(--measured --smoke)?", file=sys.stderr)
+        return 1
+    gated = [n for n in shared
+             if n.startswith(GATED_PREFIXES) and base[n] >= args.min_us
+             and res[n] > 0]
+    if not gated:
+        print("error: no gated (timed) rows shared with the baseline",
+              file=sys.stderr)
+        return 1
+    total_b = sum(base[n] for n in gated)
+    total_r = sum(res[n] for n in gated)
+
+    failures = []
+    print(f"gated rows: {len(gated)}; total {total_b / 1e3:.1f}ms "
+          f"(baseline) vs {total_r / 1e3:.1f}ms (new)")
+    print(f"{'row':48s} {'base':>10s} {'new':>10s} {'ratio':>6s}  gate")
+    for name in shared:
+        b, r = base[name], res[name]
+        if name in gated:
+            ratio = (r / total_r) / (b / total_b)
+            flag = "ok"
+            if ratio > args.threshold:
+                failures.append((name, ratio))
+                flag = "FAIL"
+        else:
+            ratio = r / b if b > 0 else float("nan")
+            flag = " "
+        print(f"{name:48s} {b:10.1f} {r:10.1f} {ratio:6.2f}  {flag}")
+
+    # uniform-slowdown guard: calibration-normalized total
+    cal_b, cal_r = base.get(CALIBRATION_ROW, 0.0), res.get(CALIBRATION_ROW,
+                                                           0.0)
+    if cal_b > 0 and cal_r > 0:
+        g = (total_r / cal_r) / (total_b / cal_b)
+        print(f"calibration-normalized total: {g:.2f}x "
+              f"(guard threshold {args.global_threshold:.1f}x)")
+        if g > args.global_threshold:
+            failures.append(("<calibration-normalized total>", g))
+    else:
+        print(f"warning: missing {CALIBRATION_ROW} row; uniform-slowdown "
+              "guard skipped", file=sys.stderr)
+
+    if failures:
+        print(f"\n{len(failures)} regression(s) beyond threshold:",
+              file=sys.stderr)
+        for name, ratio in failures:
+            print(f"  {name}: {ratio:.2f}x", file=sys.stderr)
+        print("If intentional, refresh benchmarks/BENCH_baseline.json "
+              "(see this script's docstring).", file=sys.stderr)
+        return 1
+    print(f"\nbench gate OK: {len(gated)} timed rows within "
+          f"{args.threshold:.2f}x of baseline (share-normalized)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,49 +5,25 @@ times dense im2col'd features B (K, N=H_out*W_out) — the mapping the paper
 uses (§IV: "convolutions of each layer ... mapped to sparse-dense matrix
 multiplications A x B").
 
-ResNet50 / DenseNet121 dims are generated from the exact published block
-structure; InceptionV3 uses the torchvision module table (representative
-branch convs per module).
+ResNet50 / DenseNet121 tables are derived from the CNNConfig entries in
+``repro.configs`` (the same configs the ``SparseCNN`` forward model and
+the measured fig benchmarks execute — one source of truth; parity with
+the published block structure is asserted in tests/test_conv.py).
+InceptionV3 uses the torchvision module table (representative branch
+convs per module).
 """
 from __future__ import annotations
 
+from repro.configs import get_cnn_config
+from repro.models.conv import cnn_layer_gemms
+
 
 def resnet50_gemms() -> list[tuple[str, int, int, int]]:
-    layers = [("conv1", 64, 3 * 49, 112 * 112)]
-    stages = [  # (mid, out, blocks, hw)
-        (64, 256, 3, 56), (128, 512, 4, 28), (256, 1024, 6, 14),
-        (512, 2048, 3, 7)]
-    in_ch = 64
-    for si, (mid, out, blocks, hw) in enumerate(stages):
-        n = hw * hw
-        for b in range(blocks):
-            tag = f"s{si+2}b{b+1}"
-            layers.append((f"{tag}_1x1a", mid, in_ch, n))
-            layers.append((f"{tag}_3x3", mid, mid * 9, n))
-            layers.append((f"{tag}_1x1b", out, mid, n))
-            if b == 0:
-                layers.append((f"{tag}_proj", out, in_ch, n))
-            in_ch = out
-    return layers
+    return cnn_layer_gemms(get_cnn_config("resnet50"))
 
 
 def densenet121_gemms() -> list[tuple[str, int, int, int]]:
-    growth = 32
-    layers = [("conv1", 64, 3 * 49, 112 * 112)]
-    ch = 64
-    hw = 56
-    for bi, nlayers in enumerate([6, 12, 24, 16]):
-        n = hw * hw
-        for li in range(nlayers):
-            tag = f"d{bi+1}l{li+1}"
-            layers.append((f"{tag}_1x1", 4 * growth, ch, n))
-            layers.append((f"{tag}_3x3", growth, 4 * growth * 9, n))
-            ch += growth
-        if bi < 3:  # transition: 1x1 halving channels, then 2x2 pool
-            layers.append((f"t{bi+1}_1x1", ch // 2, ch, n))
-            ch //= 2
-            hw //= 2
-    return layers
+    return cnn_layer_gemms(get_cnn_config("densenet121"))
 
 
 # torchvision InceptionV3 branch convs: (name, C_out, C_in*kh*kw, H*W)

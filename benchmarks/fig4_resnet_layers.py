@@ -3,6 +3,12 @@
 
 Paper bands: 1.60-2.15x (1:4), 1.63-1.99x (2:4); speedup decreases toward
 late layers; 2:4 slightly below 1:4.
+
+Two modes: ``main()`` reproduces the paper bands from the analytic
+``VectorCoreModel``; ``measured_main()`` times the real padded Pallas
+``nm_matmul`` dispatch against the row-wise / gather baselines on every
+(sub-sampled, in smoke mode) ResNet50 layer, keeping the analytic
+speedup as a cross-check column per row (``benchmarks.measured``).
 """
 from __future__ import annotations
 
@@ -43,6 +49,34 @@ def run(verbose: bool = True):
     err = float(jnp.abs(c2 - c3).max())
     assert err < 1e-3, err
     return rows, (t_alg2 * 1e6, t_alg3 * 1e6)
+
+
+def measured_main(smoke: bool = False):
+    """Per-layer kernel measurements -> (summary rows, per-layer records)."""
+    from benchmarks.measured import layer_subset, measure_layer
+
+    layers = layer_subset(resnet50_gemms(), smoke)
+    rows, layer_rows = [], []
+    for cfg in (NMConfig(1, 4), NMConfig(2, 4)):
+        recs = []
+        for name, m, k, n in layers:
+            r = measure_layer(f"resnet50_{name}", m, k, n, cfg, smoke=smoke)
+            r["fig"] = "fig4"
+            recs.append(r)
+            print(f"  fig4-measured {cfg.tag} {name:12s} "
+                  f"pallas {r['t_pallas_us']:9.1f}us "
+                  f"rowwise {r['t_rowwise_us']:9.1f}us "
+                  f"speedup {r['speedup_vs_rowwise']:.2f}x "
+                  f"(analytic {r['analytic_speedup']:.2f}x, "
+                  f"{r['pallas_impl']})")
+        layer_rows += recs
+        sp = [r["speedup_vs_rowwise"] for r in recs]
+        t_total = sum(r["t_pallas_us"] for r in recs)
+        rows.append((
+            f"fig4_measured_resnet50_{cfg.tag}", t_total,
+            f"speedup_vs_rowwise_avg={sum(sp) / len(sp):.3f};"
+            f"range={min(sp):.2f}-{max(sp):.2f};layers={len(recs)}"))
+    return rows, layer_rows
 
 
 def main():

@@ -2,12 +2,21 @@
 
 Paper: avg 1.95x @1:4 and 1.88x @2:4 across ResNet50 / DenseNet121 /
 InceptionV3 (each normalized to Row-Wise-SpMM of the same sparsity).
+
+``measured_main()`` sums real per-layer kernel timings (Pallas
+``nm_matmul`` vs Row-Wise-SpMM) into whole-CNN totals for the two
+config-backed CNNs (ResNet50 / DenseNet121 — the backbones the
+``SparseCNN`` forward model executes), in both value families: float and
+the int8 ``QNMWeight`` path. Layer measurements are shared with fig4
+through ``benchmarks.measured``'s cache.
 """
 from __future__ import annotations
 
 from benchmarks.cnn_specs import CNNS
 from repro.core.cost_model import VectorCoreModel
 from repro.core.sparsity import NMConfig
+
+MEASURED_CNNS = ("resnet50", "densenet121")
 
 
 def run():
@@ -22,6 +31,36 @@ def run():
                        for _, m, k, n in layers)
             results[(cnn, cfg.tag)] = base / prop
     return results
+
+
+def measured_main(smoke: bool = False):
+    """Whole-CNN totals from real kernel timings -> (rows, layer records)."""
+    from benchmarks.measured import layer_subset, measure_layer
+
+    rows, layer_rows = [], []
+    for cnn in MEASURED_CNNS:
+        layers = layer_subset(CNNS[cnn](), smoke)
+        for cfg in (NMConfig(1, 4), NMConfig(2, 4)):
+            for quantized in (False, True):
+                recs = []
+                for name, m, k, n in layers:
+                    r = measure_layer(f"{cnn}_{name}", m, k, n, cfg,
+                                      quantized=quantized, smoke=smoke)
+                    r["fig"] = "fig5"
+                    recs.append(r)
+                layer_rows += recs
+                total_p = sum(r["t_pallas_us"] for r in recs)
+                total_r = sum(r["t_rowwise_us"] for r in recs)
+                fam = recs[0]["family"]
+                print(f"fig5-measured {cnn:12s} {cfg.tag} {fam}: "
+                      f"total {total_p / 1e3:.1f}ms vs rowwise "
+                      f"{total_r / 1e3:.1f}ms "
+                      f"({total_r / total_p:.2f}x, {len(recs)} layers)")
+                rows.append((
+                    f"fig5_measured_{cnn}_{cfg.tag}_{fam}", total_p,
+                    f"total_speedup_vs_rowwise={total_r / total_p:.3f};"
+                    f"layers={len(recs)}"))
+    return rows, layer_rows
 
 
 def main():

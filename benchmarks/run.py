@@ -2,19 +2,34 @@
 kernel roofline. Prints ``name,us_per_call,derived`` CSV rows and writes
 a machine-readable ``BENCH_results.json`` next to the CSV stream:
 
-  {"schema": 1,
+  {"schema": 2,
+   "mode":    {"measured": bool, "smoke": bool},
    "rows":    [{"name", "us_per_call", "derived"}, ...],
+   "layers":  [{"layer", "fig", "nm", "family", "m", "k", "n",
+                "t_pallas_us", "t_rowwise_us", "t_gather_us",
+                "speedup_vs_rowwise", "analytic_speedup", ...}, ...],
    "kernels": [{"nm", "family" (bf16|int8), "gemm", "m", "k", "n",
                 "hbm_bytes", "dense_hbm_bytes", "bytes_vs_dense",
                 "roofline_speedup_vs_dense", "bound"}, ...]}
 
-The ``kernels`` section carries the per-kernel byte/speedup accounting
-(both value families — the int8 QNMWeight path included), so the bench
-trajectory is diffable across commits; CI's bench-smoke job uploads the
-file as an artifact.
+``--measured`` additionally runs the fig4/5/6 measured modes — the real
+padded Pallas ``nm_matmul`` dispatch timed against the row-wise / gather
+baselines on the paper's CNN layer shapes (``--smoke`` sub-samples the
+layers for CI), plus a ``bench_calibration`` row (a fixed Pallas kernel
+call) that ``benchmarks/check_regression.py`` uses as the uniform-
+slowdown guard when gating against ``benchmarks/BENCH_baseline.json``
+(per-row gating is share-normalized; see that script's docstring).
+
+Refresh the checked-in baseline after an intentional perf change (cold
+autotune cache — CI runs cold too, so block choices match):
+
+  JAX_PLATFORMS=cpu PYTHONPATH=src:. REPRO_AUTOTUNE_CACHE=$(mktemp -u) \\
+      REPRO_BENCH_JSON=benchmarks/BENCH_baseline.json \\
+      python benchmarks/run.py --measured --smoke
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -23,7 +38,29 @@ import time
 OUT_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_results.json")
 
 
-def main() -> None:
+def _dedupe_layers(layer_rows: list[dict]) -> list[dict]:
+    """fig4 and fig5 share cached measurements (same layer/nm/family ->
+    same numbers); keep the first record of each. fig6's records carry
+    no ``family`` key, so they never collide with the timed ones."""
+    seen, out = set(), []
+    for r in layer_rows:
+        key = (r["layer"], r["nm"], r.get("family"))
+        if key not in seen:
+            seen.add(key)
+            out.append(r)
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--measured", action="store_true",
+                    help="also time the real Pallas dispatch on the CNN "
+                         "layer GEMMs (fig4/5/6 measured modes)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="sub-sample layers / cap the pixel dim so the "
+                         "measured sweep fits the CI budget")
+    args = ap.parse_args(argv)
+
     from benchmarks import (  # noqa: PLC0415
         fig4_resnet_layers,
         fig5_cnn_totals,
@@ -39,20 +76,36 @@ def main() -> None:
         dt = (time.perf_counter() - t0) * 1e6
         for name, us, derived in out:
             rows.append((name, us if us else dt, derived))
+
+    layer_rows: list[dict] = []
+    if args.measured:
+        from benchmarks import measured  # noqa: PLC0415
+
+        rows.append(measured.calibration_row())
+        for mod in (fig4_resnet_layers, fig5_cnn_totals,
+                    fig6_memory_traffic):
+            mrows, mlayers = mod.measured_main(smoke=args.smoke)
+            rows += mrows
+            layer_rows += mlayers
+        layer_rows = _dedupe_layers(layer_rows)
+
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 
     payload = {
-        "schema": 1,
+        "schema": 2,
+        "mode": {"measured": args.measured, "smoke": args.smoke},
         "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
                  for n, us, d in rows],
+        "layers": layer_rows,
         "kernels": tpu_kernel_roofline.kernel_records(),
     }
     with open(OUT_JSON, "w") as f:
         json.dump(payload, f, indent=1)
     # stderr: stdout from the CSV header down is machine-consumed
     print(f"wrote {OUT_JSON} ({len(payload['rows'])} rows, "
+          f"{len(payload['layers'])} layer records, "
           f"{len(payload['kernels'])} kernel records)", file=sys.stderr)
 
 

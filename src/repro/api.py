@@ -60,6 +60,7 @@ __all__ = [
     "NMConfig",
     "NMWeight",
     "QNMWeight",
+    "conv2d",
     "densify",
     "dequantize",
     "dequantize_tree",
@@ -68,6 +69,7 @@ __all__ = [
     "quantize",
     "quantize_tree",
     "sparsify",
+    "sparsify_conv",
 ]
 
 
@@ -151,3 +153,37 @@ def nm_matmul(x: jax.Array, w, *,
     the float-vs-int8 kernel family) is decided by ``w.kernel_policy``
     and the weight's type — see the module docstring."""
     return _nm_matmul_typed(x, w, block=block)
+
+
+def sparsify_conv(
+    w: jax.Array,
+    nm: NMConfig,
+    *,
+    kernel_policy: Union[KernelPolicy, str] = KernelPolicy("auto"),
+) -> NMWeight:
+    """Prune + compress a conv kernel for the im2col GEMM path.
+
+    ``w`` is HWIO ``(kh, kw, C_in, C_out)``; the N:M pattern is applied
+    along the flattened contraction axis K = kh*kw*C_in (the axis
+    :func:`conv2d` contracts over), so the result is exactly the weight
+    node a :class:`repro.models.conv.SparseConv2D` holds.
+    """
+    if w.ndim != 4:
+        raise ValueError(
+            f"sparsify_conv expects an HWIO (kh, kw, C_in, C_out) kernel, "
+            f"got shape {w.shape}")
+    kh, kw, c_in, c_out = w.shape
+    return sparsify(w.reshape(kh * kw * c_in, c_out), nm, axis=0,
+                    kernel_policy=kernel_policy)
+
+
+def conv2d(x: jax.Array, w, *, kh: int, kw: int, stride=1,
+           padding: str = "SAME", compute_dtype=None) -> jax.Array:
+    """y = conv(x, densify(w)) through the im2col GEMM on the kernel
+    path; ``w`` is a node from :func:`sparsify_conv` (or its quantized /
+    dense sibling). See :mod:`repro.models.conv` for layers and whole
+    backbones."""
+    from repro.models.conv import conv2d as _conv2d  # lazy: api <-> models
+
+    return _conv2d(x, w, kh=kh, kw=kw, stride=stride, padding=padding,
+                   compute_dtype=compute_dtype)

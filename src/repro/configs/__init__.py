@@ -12,6 +12,10 @@ from repro.configs.base import (  # noqa: F401
     SHAPES,
     AttnConfig,
     Block,
+    BottleneckStage,
+    CNNConfig,
+    ConvSpec,
+    DenseStage,
     FFNConfig,
     MambaConfig,
     ModelConfig,
@@ -79,3 +83,32 @@ DEFAULT_SPARSITY = SparsityConfig()  # 2:4 compressed, targets ffn/attn_proj/exp
 
 def sparsity_or_none(sparse: bool) -> SparsityConfig | None:
     return DEFAULT_SPARSITY if sparse else None
+
+
+# ---------------------------------------------------------------------------
+# CNN registry (the paper's evaluation workload: conv layers -> im2col GEMMs)
+# ---------------------------------------------------------------------------
+
+CNN_ARCHS: tuple[str, ...] = ("resnet50", "densenet121")
+
+# every conv family is sparsified (the paper prunes all conv layers);
+# the stem stays dense — its K = 3*kh*kw contraction is not M-divisible.
+DEFAULT_CNN_SPARSITY = SparsityConfig(targets=("conv", "proj"))
+
+
+def cnn_sparsity_or_none(sparse: bool) -> SparsityConfig | None:
+    return DEFAULT_CNN_SPARSITY if sparse else None
+
+
+def _cnn_mod(name: str):
+    if name not in CNN_ARCHS:
+        raise KeyError(f"unknown CNN {name!r}; known: {CNN_ARCHS}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_cnn_config(name: str, sparse: bool = True) -> CNNConfig:
+    return _cnn_mod(name).config(sparse=sparse)
+
+
+def get_cnn_reduced(name: str, sparse: bool = True) -> CNNConfig:
+    return _cnn_mod(name).reduced(sparse=sparse)

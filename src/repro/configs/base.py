@@ -166,6 +166,90 @@ class ModelConfig:
 
 
 # ---------------------------------------------------------------------------
+# CNN configs (the paper's actual evaluation workload: conv layers mapped
+# to sparse-dense GEMMs via im2col — §IV)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One 2D convolution, NHWC activations / HWIO weights.
+
+    The GEMM the paper maps it to is A(M=c_out, K=c_in*kh*kw) x
+    B(K, N=h_out*w_out); the sparse weight is compressed along K, so the
+    float/int8 NMWeight families, autotune, padding and kernel-policy
+    dispatch all apply to convs unchanged.
+    """
+
+    name: str
+    c_in: int
+    c_out: int
+    kh: int = 1
+    kw: int = 1
+    stride: int = 1
+    padding: Literal["SAME", "VALID"] = "SAME"
+    target: str = "conv"  # sparsity target family (SparsityConfig.targets)
+
+    @property
+    def k_gemm(self) -> int:
+        """Contraction dim of the im2col GEMM (= C_in * kh * kw)."""
+        return self.c_in * self.kh * self.kw
+
+    def out_hw(self, h: int, w: int) -> tuple[int, int]:
+        """Output spatial dims for an (h, w) input."""
+        if self.padding == "SAME":
+            return -(-h // self.stride), -(-w // self.stride)
+        return ((h - self.kh) // self.stride + 1,
+                (w - self.kw) // self.stride + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class BottleneckStage:
+    """ResNet bottleneck stage: ``blocks`` x (1x1 mid, 3x3 mid, 1x1 out)
+    with a projection shortcut on the first block. ``stride`` downsamples
+    in the first block (on the leading 1x1 and the projection — the
+    placement that reproduces the paper's per-layer GEMM table, where
+    every conv of a stage runs at the stage's output resolution)."""
+
+    mid: int
+    out: int
+    blocks: int
+    stride: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseStage:
+    """DenseNet dense block: ``layers`` x (1x1 bottleneck to 4*growth,
+    3x3 to growth, concat). A transition (1x1 halving channels + 2x2
+    avg-pool) follows every stage except the last."""
+
+    layers: int
+    growth: int = 32
+
+
+CNNStage = BottleneckStage | DenseStage
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    """A CNN backbone as a stem + stage stack (resnet or densenet kind).
+
+    ``kind`` picks the block topology in ``repro.models.conv.SparseCNN``;
+    the per-layer conv list (and the paper's im2col GEMM table) is derived
+    by ``repro.models.conv.cnn_layer_specs`` / ``cnn_layer_gemms``.
+    """
+
+    name: str
+    kind: Literal["resnet", "densenet"]
+    stem: ConvSpec
+    stages: tuple[CNNStage, ...]
+    input_hw: int = 224
+    stem_pool: int = 2  # 3x3 max-pool stride after the stem (1 = none)
+    num_classes: int = 1000
+    sparsity: Optional[SparsityConfig] = None
+
+
+# ---------------------------------------------------------------------------
 # input shapes (assigned shape set)
 # ---------------------------------------------------------------------------
 

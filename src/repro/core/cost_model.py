@@ -139,3 +139,37 @@ def tpu_indexmac_q_cost(m: int, k: int, n: int, cfg: NMConfig,
     the MXU plus one multiply per output element at writeback."""
     return tpu_indexmac_cost(m, k, n, cfg, dtype_bytes=dtype_bytes,
                              w_value_bytes=1, scale_bytes=4.0 * n)
+
+
+# ---------------------------------------------------------------------------
+# conv workload accounting (im2col lowering — the paper's §IV mapping)
+# ---------------------------------------------------------------------------
+
+
+def conv_gemm_dims(c_out: int, c_in: int, kh: int, kw: int,
+                   h_out: int, w_out: int) -> tuple[int, int, int]:
+    """(M, K, N) of the im2col GEMM: M=C_out, K=C_in*kh*kw, N=H_out*W_out."""
+    return c_out, c_in * kh * kw, h_out * w_out
+
+
+def tpu_conv_cost(c_out: int, c_in: int, kh: int, kw: int,
+                  h_out: int, w_out: int, cfg: NMConfig, *,
+                  dtype_bytes: int = 2, quantized: bool = False,
+                  fused_im2col: bool = False) -> TPUKernelCost:
+    """Pallas-kernel cost of one conv executed as the im2col GEMM.
+
+    The kernel consumes the GEMM in the forward orientation the
+    :class:`repro.models.conv.SparseConv2D` layer runs — patches
+    ``(N_pix, K)`` x sparse weight ``(K, C_out)`` — so the sparse operand
+    bytes are the compressed weight. ``fused_im2col=True`` charges the
+    activation once (``N_pix * C_in``, a fused-gather lower bound)
+    instead of the materialized ``N_pix * K`` patch bytes, bounding the
+    kh*kw activation-reread factor of the explicit lowering.
+    """
+    m, k, n_pix = c_out, c_in * kh * kw, h_out * w_out
+    fn = tpu_indexmac_q_cost if quantized else tpu_indexmac_cost
+    cost = fn(n_pix, k, m, cfg, dtype_bytes=dtype_bytes)
+    if fused_im2col and kh * kw > 1:
+        saved = (n_pix * k - n_pix * c_in) * dtype_bytes
+        cost = dataclasses.replace(cost, hbm_bytes=cost.hbm_bytes - saved)
+    return cost

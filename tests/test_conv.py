@@ -1,0 +1,307 @@
+"""Sparse convolution subsystem: im2col lowering on the indexmac path.
+
+Parity is against ``lax.conv_general_dilated`` (NHWC/HWIO) — the dense
+reference the paper's §IV mapping lowers from: float within 1e-4, int8
+bit-exact on the integer lattice. Also: odd spatial shapes through the
+shape-padding Pallas path, the SparseConv2D VJP vs the dense conv VJP,
+the config-derived GEMM tables vs the published block structure, and the
+SparseCNN forward models (float + quantized).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs import (
+    DEFAULT_CNN_SPARSITY,
+    get_cnn_config,
+    get_cnn_reduced,
+)
+from repro.configs.base import ConvSpec, SparsityConfig
+from repro.core.nmweight import KernelPolicy, NMWeight
+from repro.core.sparsity import NMConfig
+from repro.kernels import registry
+from repro.models.conv import (
+    SparseCNN,
+    SparseConv2D,
+    cnn_layer_gemms,
+    cnn_layer_specs,
+    im2col,
+)
+from repro.quant.qnmweight import QNMWeight
+
+SP = dataclasses.replace(DEFAULT_CNN_SPARSITY, use_kernel=False)
+
+
+def _dense_conv(x, w2d, spec: ConvSpec):
+    w_hwio = w2d.reshape(spec.kh, spec.kw, spec.c_in, spec.c_out)
+    return jax.lax.conv_general_dilated(
+        x, w_hwio, (spec.stride, spec.stride), spec.padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+# ---------------------------------------------------------------------------
+# float parity vs lax.conv_general_dilated
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "kh,kw,stride,pad,cin,cout,h,w",
+    [
+        (3, 3, 1, "SAME", 8, 16, 10, 10),
+        (3, 3, 2, "SAME", 8, 16, 11, 13),   # odd spatial, stride
+        (1, 1, 2, "SAME", 8, 12, 7, 9),
+        (7, 7, 2, "SAME", 4, 8, 23, 23),    # resnet-stem-like window
+        (3, 3, 2, "VALID", 8, 16, 11, 13),
+        (5, 3, 1, "VALID", 4, 8, 9, 12),    # non-square window
+    ],
+)
+def test_sparse_conv_matches_dense_reference(kh, kw, stride, pad, cin,
+                                             cout, h, w):
+    spec = ConvSpec("c", cin, cout, kh, kw, stride, padding=pad)
+    conv = SparseConv2D(spec)
+    params = conv.init(jax.random.PRNGKey(0), sp=SP)
+    assert isinstance(params, NMWeight)  # K divisible by 4 in all cases
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, h, w, cin))
+    y = conv.apply(params, x, compute_dtype=jnp.float32)
+    y_ref = _dense_conv(x, api.densify(params), spec)
+    assert y.shape == y_ref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_layout_matches_hwio_reshape():
+    """patches @ w_hwio.reshape(K, C_out) IS the conv — the layout
+    contract every sparse weight in this subsystem relies on."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 9, 11, 4))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 8))
+    patches = im2col(x, 3, 3, stride=2, padding="SAME")
+    y = jnp.einsum("bhwk,kn->bhwn", patches, w.reshape(-1, 8))
+    y_ref = jax.lax.conv_general_dilated(
+        x, w, (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_api_sparsify_conv_round_trip():
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 3, 8, 16))
+    sw = api.sparsify_conv(w, NMConfig(2, 4))
+    assert isinstance(sw, NMWeight) and sw.vals.shape[1] == 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 7, 7, 8))
+    y = api.conv2d(x, sw, kh=3, kw=3, stride=1, compute_dtype=jnp.float32)
+    y_ref = _dense_conv(x, api.densify(sw), ConvSpec("c", 8, 16, 3, 3, 1))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError):
+        api.sparsify_conv(jnp.zeros((8, 16)), NMConfig(2, 4))
+
+
+# ---------------------------------------------------------------------------
+# int8 lattice: bit-exact vs the dense conv on the dequantized weight
+# ---------------------------------------------------------------------------
+
+
+def _int_lattice_conv(spec: ConvSpec, sp=SP, seed=0):
+    """Integer activations/values with power-of-two scales: every float
+    op on both the kernel path and the dense-conv reference is exact, so
+    the comparison is bitwise (same idiom as test_quant)."""
+    rng = np.random.default_rng(seed)
+    conv = SparseConv2D(spec)
+    params = conv.init(jax.random.PRNGKey(seed), sp=sp)
+    qvals = rng.integers(-127, 128, size=params.vals.shape).astype(np.int8)
+    qvals = np.where(np.asarray(params.vals) == 0, 0, qvals).astype(np.int8)
+    scales = 2.0 ** rng.integers(-6, 1, size=(spec.c_out,))
+    qw = QNMWeight(
+        vals=jnp.asarray(qvals), idx=params.idx,
+        scales=jnp.asarray(scales, dtype=jnp.float32), nm=params.nm,
+        kernel_policy=KernelPolicy("force"))
+    x = rng.integers(-8, 9, size=(2, 9, 9, spec.c_in)).astype(np.float32)
+    return conv, qw, jnp.asarray(x)
+
+
+@pytest.mark.parametrize("pattern", [(1, 4), (2, 4)],
+                         ids=lambda p: "%d:%d" % p)
+def test_int8_conv_bit_exact_on_lattice(pattern):
+    sp = dataclasses.replace(SP, nm=NMConfig(*pattern))
+    spec = ConvSpec("c", 8, 16, 3, 3, 1)
+    conv, qw, x = _int_lattice_conv(spec, sp=sp)
+    assert qw.nm == NMConfig(*pattern)
+    registry.clear_history()
+    y = conv.apply(qw, x, compute_dtype=jnp.float32)
+    rec = registry.last_dispatch("nm_matmul_q")
+    assert rec is not None and rec.impl == "pallas_padded_q", rec
+    y_ref = _dense_conv(x, qw.to_dense(), spec)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+# ---------------------------------------------------------------------------
+# odd spatial shapes through the shape-padding Pallas path
+# ---------------------------------------------------------------------------
+
+
+def test_odd_spatial_shape_hits_padded_pallas_kernel():
+    """7x9 input, stride 2 — a GEMM no tile divides; the force policy
+    must route it through pallas_padded, and the result must still match
+    the dense conv exactly (zero-padding is exact)."""
+    spec = ConvSpec("c", 8, 20, 3, 3, 2)  # C_out=20: pads N too
+    conv = SparseConv2D(spec)
+    params = conv.init(jax.random.PRNGKey(0), sp=SP)
+    params = dataclasses.replace(params, kernel_policy=KernelPolicy("force"))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 7, 9, 8))
+    registry.clear_history()
+    y = conv.apply(params, x, compute_dtype=jnp.float32)
+    rec = registry.last_dispatch("nm_matmul")
+    assert rec is not None and rec.impl == "pallas_padded", rec
+    assert rec.padded is not None and rec.padded != rec.shape
+    y_ref = _dense_conv(x, api.densify(params), spec)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# gradients: SparseConv2D VJP vs the dense conv VJP
+# ---------------------------------------------------------------------------
+
+
+def test_conv_grad_matches_dense_vjp():
+    spec = ConvSpec("c", 8, 16, 3, 3, 2)
+    conv = SparseConv2D(spec)
+    params = conv.init(jax.random.PRNGKey(0), sp=SP)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 9, 8))
+
+    def loss_sparse(vals, x):
+        p = dataclasses.replace(params, vals=vals)
+        return jnp.sum(conv.apply(p, x, compute_dtype=jnp.float32) ** 2)
+
+    def loss_dense(w2d, x):
+        return jnp.sum(_dense_conv(x, w2d, spec) ** 2)
+
+    g_vals, g_x = jax.grad(loss_sparse, argnums=(0, 1))(params.vals, x)
+    g_w2d, g_x_ref = jax.grad(loss_dense, argnums=(0, 1))(
+        api.densify(params), x)
+    np.testing.assert_allclose(np.asarray(g_x), np.asarray(g_x_ref),
+                               rtol=1e-4, atol=1e-4)
+    # dense dW gathered at the kept positions == compressed dvals
+    kc = params.vals.shape[0]
+    block_id = jnp.arange(kc, dtype=jnp.int32) // params.nm.n
+    grow = block_id[:, None] * params.nm.m + params.idx.astype(jnp.int32)
+    g_vals_ref = jnp.take_along_axis(g_w2d, grow, axis=0)
+    np.testing.assert_allclose(np.asarray(g_vals), np.asarray(g_vals_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# config-derived GEMM tables vs the published block structure
+# ---------------------------------------------------------------------------
+
+
+def test_resnet50_gemm_table_matches_published_structure():
+    table = dict()
+    for name, m, k, n in cnn_layer_gemms(get_cnn_config("resnet50")):
+        table[name] = (m, k, n)
+    assert len(table) == 53
+    assert table["conv1"] == (64, 3 * 49, 112 * 112)
+    assert table["s2b1_1x1a"] == (64, 64, 56 * 56)
+    assert table["s2b1_3x3"] == (64, 64 * 9, 56 * 56)
+    assert table["s3b1_proj"] == (512, 256, 28 * 28)
+    assert table["s4b6_3x3"] == (256, 256 * 9, 14 * 14)
+    assert table["s5b3_1x1b"] == (2048, 512, 7 * 7)
+
+
+def test_densenet121_gemm_table_matches_published_structure():
+    table = dict()
+    for name, m, k, n in cnn_layer_gemms(get_cnn_config("densenet121")):
+        table[name] = (m, k, n)
+    assert len(table) == 120
+    assert table["conv1"] == (64, 3 * 49, 112 * 112)
+    assert table["d1l1_1x1"] == (128, 64, 56 * 56)
+    assert table["t1_1x1"] == (128, 64 + 6 * 32, 56 * 56)
+    assert table["d4l16_3x3"] == (32, 128 * 9, 7 * 7)
+
+
+def test_conv_cost_model_accounting():
+    """tpu_conv_cost: the fused-im2col bound saves exactly the activation
+    re-read factor, is a no-op for 1x1 convs, and the int8 family
+    streams fewer weight bytes."""
+    from repro.core.cost_model import conv_gemm_dims, tpu_conv_cost
+
+    nm = NMConfig(2, 4)
+    assert conv_gemm_dims(64, 64, 3, 3, 56, 56) == (64, 576, 3136)
+    explicit = tpu_conv_cost(64, 64, 3, 3, 56, 56, nm)
+    fused = tpu_conv_cost(64, 64, 3, 3, 56, 56, nm, fused_im2col=True)
+    assert fused.mxu_flops == explicit.mxu_flops
+    assert explicit.hbm_bytes - fused.hbm_bytes == 3136 * (576 - 64) * 2
+    one = tpu_conv_cost(64, 256, 1, 1, 56, 56, nm)
+    one_f = tpu_conv_cost(64, 256, 1, 1, 56, 56, nm, fused_im2col=True)
+    assert one.hbm_bytes == one_f.hbm_bytes
+    q = tpu_conv_cost(64, 64, 3, 3, 56, 56, nm, quantized=True)
+    assert q.hbm_bytes < explicit.hbm_bytes
+
+
+def test_layer_specs_gemm_mapping_invariant():
+    """Every derived layer satisfies the paper's mapping M=C_out,
+    K=C_in*kh*kw, N=H_out*W_out."""
+    for cnn in ("resnet50", "densenet121"):
+        for layer in cnn_layer_specs(get_cnn_config(cnn)):
+            name, m, k, n = layer.gemm
+            s = layer.spec
+            assert m == s.c_out
+            assert k == s.c_in * s.kh * s.kw
+            assert n == layer.h_out * layer.w_out
+
+
+# ---------------------------------------------------------------------------
+# SparseCNN forward models
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cnn", ["resnet50", "densenet121"])
+def test_sparse_cnn_forward_float_and_int8(cnn):
+    cfg = get_cnn_reduced(cnn)
+    model = SparseCNN(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_sparse = sum(api.is_sparse(l) for l in jax.tree.leaves(
+        params, is_leaf=api.is_sparse))
+    assert n_sparse > 0  # the backbone really carries NMWeight convs
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (2, cfg.input_hw, cfg.input_hw, 3))
+    logits = model.apply(params, x, compute_dtype=jnp.float32)
+    assert logits.shape == (2, cfg.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # int8: quantize_tree swaps NMWeight -> QNMWeight; apply dispatches
+    # on the type unchanged and stays close to the float forward.
+    qlogits = model.apply(api.quantize_tree(params), x,
+                          compute_dtype=jnp.float32)
+    assert float(jnp.max(jnp.abs(logits - qlogits))) < 0.5
+
+
+def test_sparse_cnn_respects_sparsity_targets():
+    """The stem (K=27, not 4-divisible) falls back to dense; conv/proj
+    families are compressed; the head stays dense."""
+    cfg = get_cnn_reduced("resnet50")
+    params = SparseCNN(cfg).init(jax.random.PRNGKey(0))
+    assert isinstance(params["convs"]["conv1"], dict)  # stem dense
+    assert isinstance(params["convs"]["s2b1_1x1a"], NMWeight)
+    assert isinstance(params["convs"]["s3b1_proj"], NMWeight)
+    assert isinstance(params["head"], dict)
+
+
+def test_sparse_cnn_dense_config_has_no_sparse_nodes():
+    cfg = get_cnn_reduced("resnet50", sparse=False)
+    params = SparseCNN(cfg).init(jax.random.PRNGKey(0))
+    assert not any(api.is_sparse(l) for l in jax.tree.leaves(
+        params, is_leaf=api.is_sparse))
+
+
+def test_sparse_cnn_mixed_nm_override():
+    """Per-target overrides work for conv families too (mixed per-layer
+    sparsity, e.g. 1:4 projections next to 2:4 convs)."""
+    sp = SparsityConfig(targets=("conv", "proj"),
+                        nm_overrides=(("proj", NMConfig(1, 4)),))
+    cfg = dataclasses.replace(get_cnn_reduced("resnet50"), sparsity=sp)
+    params = SparseCNN(cfg).init(jax.random.PRNGKey(0))
+    assert params["convs"]["s2b1_1x1a"].nm == NMConfig(2, 4)
+    assert params["convs"]["s3b1_proj"].nm == NMConfig(1, 4)

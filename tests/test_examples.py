@@ -1,0 +1,49 @@
+"""The examples directory is part of the suite: each example runs as a
+subprocess (the same way a user invokes it), so an API change that
+breaks the documented entry points fails CI instead of rotting silently.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run_example(name: str, *args: str, timeout: int = 900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, str(REPO / "examples" / name), *args],
+        capture_output=True, text=True, timeout=timeout, env=env,
+        cwd=str(REPO),
+    )
+
+
+def _assert_ok(out, name):
+    assert out.returncode == 0, (
+        f"{name} failed\n--- stdout ---\n{out.stdout[-2000:]}\n"
+        f"--- stderr ---\n{out.stderr[-2000:]}")
+
+
+def test_quickstart_runs_end_to_end():
+    out = _run_example("quickstart.py")
+    _assert_ok(out, "quickstart.py")
+    assert "quickstart OK" in out.stdout
+    assert "kernel vs dense max err" in out.stdout
+
+
+@pytest.mark.slow
+def test_serve_decode_example_runs():
+    out = _run_example("serve_decode.py")
+    _assert_ok(out, "serve_decode.py")
+
+
+@pytest.mark.slow
+def test_train_sparse_lm_example_runs():
+    out = _run_example("train_sparse_lm.py", "--steps", "3")
+    _assert_ok(out, "train_sparse_lm.py")
