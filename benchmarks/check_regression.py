@@ -2,8 +2,10 @@
 
 Compares ``BENCH_results.json`` (fresh run) against the checked-in
 ``benchmarks/BENCH_baseline.json``. Every shared *timed* row — the
-``fig4/5/6_measured_*`` and ``tpu_kernel_*`` families — is gated at the
-1.5x threshold on its **share of the total gated time**:
+``fig4/5/6_measured_*`` / ``tpu_kernel_*`` families and the serving
+throughput family ``serve_decode_*`` (us per generated token = inverse
+tokens/sec) — is gated at the 1.5x threshold on its **share of the
+total gated time**:
 
     ratio_i = (new_i / sum(new)) / (base_i / sum(base))
 
@@ -17,22 +19,26 @@ kernel call timed in the same process) additionally guards the total at
 a deliberately loose 3x (per-process timing variance on shared runners
 makes a tight absolute threshold flaky). Analytic rows (model-derived
 numbers, byte accounting, module wall times) are reported but never
-gate. Runs of different modes (smoke vs full) never compare.
+gate. Runs of different *smoke* settings never compare (identically
+named rows at very different magnitudes); the ``--measured`` /
+``--serve`` flags only decide which row families exist, so a results
+file produced with a subset of the baseline's flags simply gates the
+intersection — that is what lets the bench-smoke lane (fig/tpu rows)
+and the serve lane (serve rows) share one baseline superset.
 
-CI (bench-smoke) runs::
-
-    python benchmarks/run.py --measured --smoke
-    python benchmarks/check_regression.py
+CI runs ``python benchmarks/run.py --measured --smoke`` (bench-smoke)
+or ``... --serve --smoke`` (serve lane), then
+``python benchmarks/check_regression.py``.
 
 Refresh the baseline after an intentional perf change (any machine —
 normalization absorbs machine speed; the cold REPRO_AUTOTUNE_CACHE
 matches CI, which also starts cold, so both sides pick blocks the same
-way)::
+way; keep ALL flags so the baseline covers every lane)::
 
     JAX_PLATFORMS=cpu PYTHONPATH=src:. \\
         REPRO_AUTOTUNE_CACHE=$(mktemp -u) \\
         REPRO_BENCH_JSON=benchmarks/BENCH_baseline.json \\
-        python benchmarks/run.py --measured --smoke
+        python benchmarks/run.py --measured --smoke --serve
 
 and commit ``benchmarks/BENCH_baseline.json``.
 """
@@ -43,9 +49,9 @@ import json
 import os
 import sys
 
-# row-name prefixes that represent steady-state kernel timings
+# row-name prefixes that represent steady-state kernel/serving timings
 GATED_PREFIXES = ("fig4_measured", "fig5_measured", "fig6_measured",
-                  "tpu_kernel_")
+                  "tpu_kernel_", "serve_decode_")
 CALIBRATION_ROW = "bench_calibration"
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
                                 "BENCH_baseline.json")
@@ -76,14 +82,17 @@ def main(argv=None) -> int:
         base_payload = json.load(f)
     with open(args.results) as f:
         res_payload = json.load(f)
-    # measured-smoke and full-measured runs emit identically named rows
-    # at very different magnitudes — never compare across modes
-    base_mode = base_payload.get("mode")
-    res_mode = res_payload.get("mode")
-    if base_mode != res_mode:
-        print(f"error: run-mode mismatch — baseline {base_mode}, results "
+    # smoke and full runs emit identically named rows at very different
+    # magnitudes — never compare across smoke settings. The measured /
+    # serve flags need no such check: they gate which row families
+    # *exist*, so a lane running a subset of the baseline's flags just
+    # compares the intersection of rows.
+    base_mode = base_payload.get("mode") or {}
+    res_mode = res_payload.get("mode") or {}
+    if base_mode.get("smoke") != res_mode.get("smoke"):
+        print(f"error: smoke-mode mismatch — baseline {base_mode}, results "
               f"{res_mode}; regenerate one side with matching run.py "
-              "flags (CI uses --measured --smoke)", file=sys.stderr)
+              "flags (CI always passes --smoke)", file=sys.stderr)
         return 1
     base = _rows(base_payload)
     res = _rows(res_payload)

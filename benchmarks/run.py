@@ -15,17 +15,21 @@ a machine-readable ``BENCH_results.json`` next to the CSV stream:
 ``--measured`` additionally runs the fig4/5/6 measured modes — the real
 padded Pallas ``nm_matmul`` dispatch timed against the row-wise / gather
 baselines on the paper's CNN layer shapes (``--smoke`` sub-samples the
-layers for CI), plus a ``bench_calibration`` row (a fixed Pallas kernel
-call) that ``benchmarks/check_regression.py`` uses as the uniform-
-slowdown guard when gating against ``benchmarks/BENCH_baseline.json``
-(per-row gating is share-normalized; see that script's docstring).
+layers for CI). ``--serve`` runs ``benchmarks/serve_bench.py`` — serving
+throughput / TTFT / inter-token latency for dense vs 2:4 vs int8-2:4
+engines on one device and a forced-8-device host mesh. Either flag also
+emits a ``bench_calibration`` row (a fixed Pallas kernel call) that
+``benchmarks/check_regression.py`` uses as the uniform-slowdown guard
+when gating against ``benchmarks/BENCH_baseline.json`` (per-row gating
+is share-normalized; see that script's docstring).
 
 Refresh the checked-in baseline after an intentional perf change (cold
-autotune cache — CI runs cold too, so block choices match):
+autotune cache — CI runs cold too, so block choices match; keep all
+flags so the baseline is a superset of every CI lane's rows):
 
   JAX_PLATFORMS=cpu PYTHONPATH=src:. REPRO_AUTOTUNE_CACHE=$(mktemp -u) \\
       REPRO_BENCH_JSON=benchmarks/BENCH_baseline.json \\
-      python benchmarks/run.py --measured --smoke
+      python benchmarks/run.py --measured --smoke --serve
 """
 from __future__ import annotations
 
@@ -59,6 +63,10 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="sub-sample layers / cap the pixel dim so the "
                          "measured sweep fits the CI budget")
+    ap.add_argument("--serve", action="store_true",
+                    help="also run the serving throughput bench "
+                         "(benchmarks/serve_bench.py; spawns 1-device and "
+                         "forced-8-device subprocesses)")
     args = ap.parse_args(argv)
 
     from benchmarks import (  # noqa: PLC0415
@@ -78,16 +86,21 @@ def main(argv=None) -> None:
             rows.append((name, us if us else dt, derived))
 
     layer_rows: list[dict] = []
-    if args.measured:
+    if args.measured or args.serve:
         from benchmarks import measured  # noqa: PLC0415
 
         rows.append(measured.calibration_row())
+    if args.measured:
         for mod in (fig4_resnet_layers, fig5_cnn_totals,
                     fig6_memory_traffic):
             mrows, mlayers = mod.measured_main(smoke=args.smoke)
             rows += mrows
             layer_rows += mlayers
         layer_rows = _dedupe_layers(layer_rows)
+    if args.serve:
+        from benchmarks import serve_bench  # noqa: PLC0415
+
+        rows += serve_bench.bench_rows(smoke=args.smoke)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
@@ -95,7 +108,8 @@ def main(argv=None) -> None:
 
     payload = {
         "schema": 2,
-        "mode": {"measured": args.measured, "smoke": args.smoke},
+        "mode": {"measured": args.measured, "smoke": args.smoke,
+                 "serve": args.serve},
         "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
                  for n, us, d in rows],
         "layers": layer_rows,

@@ -18,3 +18,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1x1 mesh on the local device — smoke tests / examples."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_serve_mesh(data: int = 1, model: int = 1):
+    """Serving mesh for ``ShardedServeEngine``: batch slots shard over
+    "data", tensor parallelism over "model". Works against real devices
+    or a forced host platform (XLA_FLAGS=--xla_force_host_platform_
+    device_count=N set before jax initializes)."""
+    from repro import compat
+
+    return compat.make_mesh((data, model), ("data", "model"))

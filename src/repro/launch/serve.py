@@ -1,6 +1,14 @@
 """Serving driver: batched requests through the continuous-batching engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 8
+
+Multi-device (tensor-parallel x data-parallel) serving:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m repro.launch.serve --mesh 2x4 --requests 8
+
+(on real accelerators drop the XLA_FLAGS override — the mesh axes map
+onto the attached devices; slots must divide the data axis).
 """
 from __future__ import annotations
 
@@ -12,7 +20,7 @@ import numpy as np
 
 from repro.configs import ARCHS, get_reduced
 from repro.models.transformer import LM
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, ServeEngine, ShardedServeEngine
 
 
 def main() -> None:
@@ -21,21 +29,41 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prefill-len", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split prompts into chunks of this many tokens "
+                         "(bounded TTFT); must divide prefill-len")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--quantize", choices=["int8"], default=None,
                     help="int8-quantize compressed weights at load "
                          "(per-channel absmax scales)")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="serve sharded on a (data, model) mesh, e.g. 2x4 "
+                         "(slots shard over data, tensor parallel over "
+                         "model)")
+    ap.add_argument("--strict", action="store_true",
+                    help="reject prompts longer than prefill-len instead "
+                         "of silently truncating to the tail")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
     lm = LM(cfg)
     params = lm.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(lm, params, slots=args.slots, max_seq=args.max_seq,
-                      prefill_len=args.prefill_len,
-                      temperature=args.temperature,
-                      quantize=args.quantize)
+    kw = dict(slots=args.slots, max_seq=args.max_seq,
+              prefill_len=args.prefill_len,
+              prefill_chunk=args.prefill_chunk,
+              temperature=args.temperature,
+              quantize=args.quantize, strict=args.strict)
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh
+
+        data, model = (int(x) for x in args.mesh.lower().split("x"))
+        mesh = make_serve_mesh(data, model)
+        eng = ShardedServeEngine(lm, params, mesh=mesh, **kw)
+        print(f"mesh data={data} model={model}: {eng.tp_plan}")
+    else:
+        eng = ServeEngine(lm, params, **kw)
     rng = np.random.default_rng(0)
     t0 = time.time()
     for i in range(args.requests):
@@ -46,12 +74,19 @@ def main() -> None:
             max_new=args.max_new))
     done = eng.run()
     dt = time.time() - t0
-    toks = sum(len(r.out) for r in done)
+    stats = eng.throughput_stats()
+    toks = stats["tokens"]
     print(f"served {len(done)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks/dt:.1f} tok/s, slots={args.slots})")
+          f"({toks/dt:.1f} tok/s, slots={args.slots}, "
+          f"ttft={stats['ttft_s']*1e3:.0f}ms, "
+          f"itl p50={stats['itl_p50_s']*1e3:.0f}ms "
+          f"p99={stats['itl_p99_s']*1e3:.0f}ms)")
     for r in done[:3]:
         print(f"  rid={r.rid} out[:8]={r.out[:8]}")
     assert len(done) == args.requests
+    assert eng.compiled_cache_sizes() in \
+        ({"prefill": 1, "decode": 1}, {"prefill": -1, "decode": -1}), \
+        eng.compiled_cache_sizes()
 
 
 if __name__ == "__main__":

@@ -34,25 +34,31 @@ from repro.models.common import (
 )
 
 from repro.core.dots import acc_einsum  # noqa: E402  (shared dot policy)
+from repro.parallel.hints import tp_reduce
 
 NEG_INF = -1e30
 
 
 def _write_cache(cache_arr: jax.Array, new: jax.Array,
                  cache_len: jax.Array) -> jax.Array:
-    """Write a 1-token update at position cache_len.
+    """Write an s-token update starting at position cache_len.
 
     cache_len scalar: same position for the whole batch (dry-run shapes).
-    cache_len (B,): per-slot positions (continuous batching).
-    new: (B, 1, ...) slice to write into cache (B, S, ...).
+    cache_len (B,): per-slot positions (continuous batching / chunked
+    prefill — each slot's chunk lands at its own offset).
+    new: (B, s, ...) slice to write into cache (B, S, ...).
     """
     if cache_len.ndim == 0:
         start = (0, cache_len) + (0,) * (cache_arr.ndim - 2)
         return jax.lax.dynamic_update_slice(cache_arr,
                                             new.astype(cache_arr.dtype), start)
-    b = cache_arr.shape[0]
-    return cache_arr.at[jnp.arange(b), cache_len].set(
-        new[:, 0].astype(cache_arr.dtype))
+    b, s = new.shape[:2]
+    if s == 1:
+        return cache_arr.at[jnp.arange(b), cache_len].set(
+            new[:, 0].astype(cache_arr.dtype))
+    rows = jnp.arange(b)[:, None]
+    cols = cache_len[:, None] + jnp.arange(s)[None, :]
+    return cache_arr.at[rows, cols].set(new.astype(cache_arr.dtype))
 
 
 def _len_mask(length: jax.Array, s: int) -> jax.Array:
@@ -140,15 +146,22 @@ def chunked_attention(
 
 
 def decode_attention(
-    q: jax.Array,  # (B, 1, Hq, Dk)
+    q: jax.Array,  # (B, sq, Hq, Dk) — sq > 1 only with q_positions
     k: jax.Array,  # (B, S, Hkv, Dk) — S may be sharded over 'model'
     v: jax.Array,  # (B, S, Hkv, Dv)
     *,
     length: jax.Array,  # valid cache length (scalar int32)
     window: Optional[int],
     scale: Optional[float] = None,
+    q_positions: Optional[jax.Array] = None,  # (sq,) or (B, sq)
 ) -> jax.Array:
-    """One-token attention as plain (SPMD-friendly) reductions over S."""
+    """One-token attention as plain (SPMD-friendly) reductions over S.
+
+    With ``q_positions`` (absolute position of every query token) the same
+    math serves chunked prefill: each query attends causally — cache slot
+    ``j`` is visible iff ``j <= q_pos`` — so a multi-token chunk against
+    an already-partially-filled cache reproduces full-prefill masking.
+    """
     b, sq, hq, dk = q.shape
     _, s, hkv, _ = k.shape
     g = hq // hkv
@@ -158,13 +171,21 @@ def decode_attention(
     qf = (q * jnp.asarray(scale, q.dtype)).reshape(b, sq, hkv, g, dk)
     logits = acc_einsum("bqhgd,bshd->bqhgs", qf, k.astype(q.dtype))
     pos = jnp.arange(s)
-    valid = _len_mask(length, s)
-    if window is not None:
-        if length.ndim == 0:
-            valid &= pos >= length - window
-        else:
-            valid &= pos[None, :] >= (length - window)[:, None]
-    logits = _apply_len_mask(logits, valid)
+    if q_positions is not None:
+        qp = (q_positions if q_positions.ndim == 2
+              else q_positions[None, :])  # (B|1, sq)
+        valid = pos[None, None, :] <= qp[..., None]  # causal vs cache slots
+        if window is not None:
+            valid &= pos[None, None, :] > qp[..., None] - window
+        logits = jnp.where(valid[:, :, None, None, :], logits, NEG_INF)
+    else:
+        valid = _len_mask(length, s)
+        if window is not None:
+            if length.ndim == 0:
+                valid &= pos >= length - window
+            else:
+                valid &= pos[None, :] >= (length - window)[:, None]
+        logits = _apply_len_mask(logits, valid)
     m = logits.max(-1, keepdims=True)
     p = jnp.exp(logits - m)
     p = p / p.sum(-1, keepdims=True)
@@ -242,13 +263,16 @@ def gqa_apply(
         k = apply_rope(k, positions, rope_theta)
 
     new_cache = cache
-    if mode == "decode" and cross_kv is None:
+    if mode in ("decode", "chunk") and cross_kv is None:
         assert cache is not None and cache_len is not None
         k_cache = _write_cache(cache["k"], k, cache_len)
         v_cache = _write_cache(cache["v"], v, cache_len)
         new_cache = {"k": k_cache, "v": v_cache}
+        # chunk (multi-token prefill piece): causal masking via absolute
+        # query positions; decode (s=1) keeps the plain length mask
         out = decode_attention(
-            q, k_cache, v_cache, length=cache_len + s, window=cfg.window
+            q, k_cache, v_cache, length=cache_len + s, window=cfg.window,
+            q_positions=positions if mode == "chunk" else None,
         )
     elif mode == "decode":  # cross-attention decode: static KV, full attend
         out = decode_attention(
@@ -268,7 +292,11 @@ def gqa_apply(
                 cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
             )
             new_cache = {"k": k_cache, "v": v_cache}
-    y = linear_apply(params["wo"], out.reshape(b, s, -1))
+    # wo is row-parallel under TP serving (local heads in, full d_model
+    # out): per-shard output is a partial sum — reduced here only when the
+    # serving engine declared the in-axis sharded, identity elsewhere
+    y = tp_reduce(linear_apply(params["wo"], out.reshape(b, s, -1)),
+                  "attn_out")
     return y, new_cache
 
 
@@ -367,7 +395,7 @@ def mla_apply(
     scale = (cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5
 
     new_cache = cache
-    if mode == "decode":
+    if mode in ("decode", "chunk"):
         assert cache is not None and cache_len is not None
         ckv_c = _write_cache(cache["ckv"], ckv, cache_len)
         kr_c = _write_cache(cache["kr"], kr, cache_len)
@@ -381,8 +409,16 @@ def mla_apply(
         logits = acc_einsum("bqhc,bsc->bqhs", q_abs, ckv_c.astype(dt))
         logits += acc_einsum("bqhr,bsr->bqhs", q_rope, kr_c.astype(dt))
         logits *= scale
-        valid = _len_mask(cache_len + s, ckv_c.shape[1])
-        logits = _apply_len_mask(logits, valid)
+        if mode == "chunk":
+            # multi-token prefill piece: cache slot j visible to query
+            # token i iff j <= position(i) — logits are (b, sq, h, S)
+            qp = positions if positions.ndim == 2 else positions[None, :]
+            cvalid = (jnp.arange(ckv_c.shape[1])[None, None, :]
+                      <= qp[..., None])  # (B|1, sq, S)
+            logits = jnp.where(cvalid[:, :, None, :], logits, NEG_INF)
+        else:
+            valid = _len_mask(cache_len + s, ckv_c.shape[1])
+            logits = _apply_len_mask(logits, valid)
         m = logits.max(-1, keepdims=True)
         p = jnp.exp(logits - m)
         p = p / p.sum(-1, keepdims=True)
@@ -410,7 +446,9 @@ def mla_apply(
                 cache["kr"], kr.astype(cache["kr"].dtype), (0, 0, 0)
             )
             new_cache = {"ckv": ckv_c, "kr": kr_c}
-    y = linear_apply(params["wo"], out.reshape(b, s, h * cfg.v_head_dim))
+    y = tp_reduce(
+        linear_apply(params["wo"], out.reshape(b, s, h * cfg.v_head_dim)),
+        "attn_out")
     return y, new_cache
 
 

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import FFNConfig, SparsityConfig
 from repro.models.common import linear_apply, linear_init
+from repro.parallel.hints import tp_reduce
 
 
 def ffn_init(
@@ -51,4 +52,6 @@ def ffn_apply(
         h = jnp.square(jax.nn.relu(up))
     else:
         raise ValueError(cfg.act)
-    return linear_apply(params["w_down"], h)
+    # w_down is row-parallel under TP serving: per-shard output is a
+    # partial sum over the sharded d_ff — reduced here, identity elsewhere
+    return tp_reduce(linear_apply(params["w_down"], h), "ffn_down")

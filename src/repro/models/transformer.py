@@ -341,18 +341,24 @@ class LM:
             assert enc_input is not None
             enc_out = self.encode(params, enc_input, remat=remat)
         x = embedding_apply(params["embed"], tokens)
-        vec_len = (mode == "decode" and cache_len is not None
+        # "chunk" = one prefill_chunk-sized piece of a prompt against a
+        # partially-filled cache: positions/cache writes offset by cache_len
+        # exactly like decode, but s > 1 tokens at a time (causal masking
+        # within the chunk happens in the attention mixers)
+        offset_mode = mode in ("decode", "chunk")
+        vec_len = (offset_mode and cache_len is not None
                    and getattr(cache_len, "ndim", 0) == 1)
         if cfg.pos_embed == "learned":
             pos_table = params["pos"].astype(x.dtype)
-            if mode != "decode":
+            if not offset_mode:
                 x = x + pos_table[:s]
             elif vec_len:
-                x = x + pos_table[cache_len][:, None, :]
+                x = x + pos_table[cache_len[:, None]
+                                  + jnp.arange(s)[None, :]]
             else:
                 x = x + jax.lax.dynamic_slice(
                     pos_table, (cache_len, 0), (s, cfg.d_model))
-        if mode == "decode":
+        if offset_mode:
             if vec_len:
                 positions = cache_len[:, None] + jnp.arange(s)[None, :]
             else:

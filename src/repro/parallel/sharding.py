@@ -30,6 +30,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.configs.base import AttnConfig, MoEConfig, ModelConfig
 from repro.core.nmweight import MaskedNMWeight, NMWeight, is_weight_node
 from repro.quant import QNMWeight
 
@@ -232,6 +233,228 @@ def cache_pspecs(caches: Any, mesh: Mesh, batch_axes=("data",)):
 # ---------------------------------------------------------------------------
 # batches
 # ---------------------------------------------------------------------------
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel serving (shard_map) specs
+#
+# The sharded serving engine runs the model *manually* partitioned under
+# shard_map: column-parallel q/k/v/up/gate projections (out axis over
+# "model"), row-parallel wo/w_down (in axis over "model", partial sums
+# psum'd via hints.tp_reduce), KV caches sharded on the head axis, batch
+# slots over "data". These rules are head-aware — a projection only
+# shards when the *head count* divides the TP degree, not merely the flat
+# axis (splitting head_dim would scramble the (B,S,H,D) reshapes) — so
+# they live apart from the GSPMD training rules above. NMWeight /
+# QNMWeight nodes keep vals+idx(+scales) co-sharded, and row-parallel
+# compressed weights additionally require the per-shard slice to land on
+# an N:M group boundary (validated here, loudly).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeTPPlan:
+    """Which projection families shard over "model" for a given config.
+
+    Uniform across the whole plan by construction (`serve_tp_plan`
+    raises otherwise): the psum placement in the model (`tp_reduce`
+    tags) is global, so a half-sharded plan would double-count."""
+
+    tp: int
+    shard_attn: bool  # wq(+wq_b/w_uk/w_uv) out axis, wo in axis
+    shard_kv: bool    # wk/wv out axis + cache head axis (GQA only)
+    shard_ffn: bool   # w_up/w_gate out axis, w_down in axis
+
+    @property
+    def reduce_tags(self) -> frozenset:
+        tags = set()
+        if self.shard_attn:
+            tags.add("attn_out")
+        if self.shard_ffn:
+            tags.add("ffn_down")
+        return frozenset(tags)
+
+
+def serve_tp_plan(cfg: ModelConfig, tp: int) -> ServeTPPlan:
+    """Decide (and validate) the TP sharding for serving ``cfg``.
+
+    Supported plans: attention mixers (GQA / MLA) with dense-FFN or no
+    MLP, no cross-attention. MoE would nest its own shard_map, and
+    mamba/rwkv state caches have no head axis — both raise."""
+    attn_f: set = set()
+    kv_f: set = set()
+    ffn_f: set = set()
+    for entry, _rep in cfg.plan:
+        blocks = entry if isinstance(entry, tuple) else (entry,)
+        for blk in blocks:
+            mx = blk.mixer
+            if not isinstance(mx, AttnConfig) or blk.cross_attn:
+                raise NotImplementedError(
+                    f"TP serving supports attention-mixer decoder plans; "
+                    f"{cfg.name} has {type(mx).__name__}"
+                    f"{' + cross_attn' if blk.cross_attn else ''}")
+            if isinstance(blk.mlp, MoEConfig):
+                raise NotImplementedError(
+                    f"TP serving does not support MoE blocks ({cfg.name}):"
+                    " moe_apply opens its own shard_map")
+            if tp == 1:
+                continue
+            q_ok = mx.q_heads % tp == 0
+            if mx.kind == "mla":
+                attn_f.add(q_ok)
+                kv_f.add(False)  # latent ckv/kr cache is head-free
+            else:
+                kv_ok = q_ok and mx.kv_heads % tp == 0
+                if q_ok and not kv_ok and mx.kv_heads != 1:
+                    # q-sharding over replicated KV is only sound for
+                    # MQA (kv_heads == 1): with kv_heads > 1 a shard's
+                    # contiguous q-head slice spans one *global* KV
+                    # group, but the local (hkv, g) reshape would pair
+                    # it round-robin across all KV heads — wrong tokens,
+                    # silently. Fall back to replicated attention.
+                    q_ok = False
+                attn_f.add(q_ok)
+                kv_f.add(kv_ok and q_ok)
+            if blk.mlp is not None:
+                ffn_f.add(blk.mlp.d_ff % tp == 0)
+    if tp == 1:
+        return ServeTPPlan(1, False, False, False)
+    if len(attn_f) > 1 or len(kv_f) > 1 or len(ffn_f) > 1:
+        raise ValueError(
+            f"{cfg.name}: plan is not uniformly TP-shardable at tp={tp} "
+            "(blocks disagree on head/d_ff divisibility); the global psum "
+            "tags cannot represent a mixed plan")
+    return ServeTPPlan(tp,
+                       attn_f.pop() if attn_f else False,
+                       kv_f.pop() if kv_f else False,
+                       ffn_f.pop() if ffn_f else False)
+
+
+def serve_local_cfg(cfg: ModelConfig, plan: ServeTPPlan) -> ModelConfig:
+    """The per-shard view of ``cfg``: head counts divided by tp so the
+    (B, S, H, D) reshapes inside the mixers match the local projections.
+    d_ff needs no scaling — ffn_apply derives shapes from the weights."""
+    if plan.tp == 1 or not (plan.shard_attn or plan.shard_kv):
+        return cfg
+    new_plan = []
+    for entry, rep in cfg.plan:
+        blocks = entry if isinstance(entry, tuple) else (entry,)
+        nb = []
+        for blk in blocks:
+            mx = blk.mixer
+            q = mx.q_heads // plan.tp if plan.shard_attn else mx.q_heads
+            kv = (mx.kv_heads // plan.tp
+                  if plan.shard_kv and mx.kind != "mla" else mx.kv_heads)
+            nb.append(dataclasses.replace(
+                blk, mixer=dataclasses.replace(mx, q_heads=q, kv_heads=kv)))
+        new_plan.append(
+            (tuple(nb) if isinstance(entry, tuple) else nb[0], rep))
+    return dataclasses.replace(cfg, plan=tuple(new_plan))
+
+
+_COL_TP = (None, "model")
+_ROW_TP = ("model", None)
+
+
+def _serve_rule(owner: str, ndim: int, plan: ServeTPPlan):
+    if plan.shard_attn and owner in ("wq", "wq_b"):
+        return _COL_TP
+    if plan.shard_attn and owner == "wo":
+        return _ROW_TP
+    if plan.shard_attn and owner in ("w_uk", "w_uv"):
+        return ("model", None, None)  # (heads, lora, hd): heads = TP
+    if plan.shard_kv and owner in ("wk", "wv"):
+        return _COL_TP
+    if plan.shard_ffn and owner in ("w_up", "w_gate"):
+        return _COL_TP
+    if plan.shard_ffn and owner == "w_down":
+        return _ROW_TP
+    return (None,) * max(ndim, 2)  # replicated (embed/norms/lm_head/...)
+
+
+def _check_nm_row_split(leaf, owner: str, tp: int) -> None:
+    """Row-parallel compressed weight: the per-shard slice of vals/idx
+    must land on an N:M group boundary (idx entries are positions *within*
+    a group, so any other cut would orphan half a group)."""
+    kc = leaf.vals.shape[-2]
+    n = leaf.nm.n
+    if kc % tp or (kc // tp) % n:
+        raise ValueError(
+            f"{owner}: compressed in-axis Kc={kc} ({leaf.nm.tag}) does not "
+            f"split into tp={tp} shards on group boundaries")
+
+
+def _serve_leaf_spec(path, leaf, mesh_shape: dict, plan: ServeTPPlan):
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1]
+    owner = names[-2] if name == "w" and len(names) >= 2 else name
+
+    if isinstance(leaf, (NMWeight, QNMWeight)):
+        rule = _serve_rule(owner, 2, plan)
+        if leaf.axis != 0:
+            rule = (None, None)  # out-axis compression: keep replicated
+        elif rule == _ROW_TP:
+            _check_nm_row_split(leaf, owner, plan.tp)
+        if isinstance(leaf, QNMWeight):
+            out_rule = rule[-1] if leaf.axis == 0 else rule[-2]
+            scales_rule = tuple(rule[:-2]) + (out_rule,)
+            return dataclasses.replace(
+                leaf,
+                vals=_fit(rule, leaf.vals.shape, mesh_shape),
+                idx=_fit(rule, leaf.idx.shape, mesh_shape),
+                scales=_fit(scales_rule, leaf.scales.shape, mesh_shape),
+            )
+        return dataclasses.replace(
+            leaf,
+            vals=_fit(rule, leaf.vals.shape, mesh_shape),
+            idx=_fit(rule, leaf.idx.shape, mesh_shape),
+        )
+    if isinstance(leaf, MaskedNMWeight):
+        rule = _serve_rule(owner, leaf.w.ndim, plan)
+        return dataclasses.replace(
+            leaf, w=_fit(rule, leaf.w.shape, mesh_shape))
+    rule = _serve_rule(owner, leaf.ndim, plan)
+    return _fit(rule, leaf.shape, mesh_shape)
+
+
+def serve_param_pspecs(params: Any, mesh: Mesh, plan: ServeTPPlan):
+    """TP-serving PartitionSpecs (shard_map in_specs for the param tree)."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _serve_leaf_spec(p, l, mesh_shape, plan), params,
+        is_leaf=is_weight_node,
+    )
+
+
+def serve_cache_pspecs(caches: Any, mesh: Mesh, plan: ServeTPPlan,
+                       batch_axes=("data",)):
+    """Decode-cache specs for TP serving: batch slots over "data", GQA
+    K/V head axis over "model" when the plan shards KV; everything else
+    (MLA latents, positions) replicated beyond the batch axis."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", str(k)))
+                 for k in path]
+        name = names[-1]
+        base_rank = {"k": 4, "v": 4, "ckv": 3, "kr": 3}.get(name, leaf.ndim)
+        lead = leaf.ndim - base_rank
+        spec = [None] * leaf.ndim
+        if _axis_ok(leaf.shape[lead], batch_axes, mesh_shape):
+            spec[lead] = (batch_axes[0]
+                          if isinstance(batch_axes, tuple)
+                          and len(batch_axes) == 1 else batch_axes)
+        if plan.shard_kv and name in ("k", "v") \
+                and _axis_ok(leaf.shape[lead + 2], "model", mesh_shape):
+            spec[lead + 2] = "model"
+        # drop trailing Nones: jit outputs come back with the normalized
+        # spec, and a device_put'd P(..., None, None) vs an output's
+        # P(...) would register as two compiled-step signatures
+        while spec and spec[-1] is None:
+            spec.pop()
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, caches)
 
 
 def batch_pspec(batch_size: int, mesh: Mesh, rank: int = 2) -> P:

@@ -1,25 +1,46 @@
-"""Serving engine: prefill + decode with a continuous-batching scheduler.
+"""Serving engines: continuous batching over fixed-shape compiled steps.
 
-`ServeEngine` owns compiled prefill/decode steps (fixed shapes, compiled
-once) and a slot-based KV cache: requests are admitted into free batch
-slots as others finish (continuous batching), greedy or temperature
-sampling per slot. Per-request bookkeeping is host-side; all device steps
-are fixed-shape so the engine never recompiles mid-flight — the property
-that matters at fleet scale.
+``ServeEngine`` (single device) owns compiled prefill/decode steps and a
+slot-based KV cache. The host loop is thin: all per-request decisions
+live in ``repro.serving.scheduler`` and sampling happens on device
+(``repro.serving.sampling``) with a threaded PRNG key — per-token logits
+never round-trip to the host, only sampled ``(slots,)`` token ids do.
+Admissions are batched: every engine step runs at most ONE prefill call
+covering all admitted slots (the original engine ran one full
+``slots x prefill_len`` forward per request and kept a single slot's
+rows), and ``prefill_chunk`` splits long prompts into fixed-shape pieces
+so time-to-first-token is bounded by one chunk's compute.
 
-The decode step is the artifact the `decode_*` / `long_*` dry-run shapes
-lower: one new token against a (B, S, ...) cache.
+``ShardedServeEngine`` runs the same host loop with the steps wrapped in
+``shard_map`` over a ("data", "model") device mesh: batch slots shard
+over "data"; attention/FFN projections run tensor-parallel over "model"
+with the head-aware specs from ``repro.parallel.sharding`` (NMWeight /
+QNMWeight vals+idx+scales co-sharded, KV caches sharded on the head
+axis), so the sparse Pallas kernels execute on their local shard of the
+compressed operand with no mid-flight resharding; the row-parallel
+partial sums are psum'd inside the model via ``hints.tp_reduce``.
+
+Every device step is fixed-shape, so after the first prefill + decode
+compile the engines never recompile — ``compiled_cache_sizes()`` exposes
+the underlying jit cache sizes so tests (and fleet monitoring) can
+assert exactly that.
 """
 from __future__ import annotations
 
-import dataclasses
+import time
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import AttnConfig
 from repro.models.transformer import LM
+from repro.serving.sampling import make_sampler
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = ["Request", "ServeEngine", "ShardedServeEngine",
+           "make_serve_steps", "merge_cache_slot", "merge_cache_slots"]
 
 # cache-leaf base ranks (without scan-stacking); leading extra axes are
 # layer stacking, the batch axis sits right after them
@@ -37,16 +58,28 @@ def merge_cache_slot(new: Any, old: Any, slot: int) -> Any:
 
     def one(path, n, o):
         ax = _batch_axis(path, n)
-        idx = [slice(None)] * n.ndim
-        idx[ax] = slice(slot, slot + 1)
         return jax.lax.dynamic_update_slice_in_dim(
             o, jax.lax.slice_in_dim(n, slot, slot + 1, axis=ax), slot, axis=ax)
 
     return jax.tree_util.tree_map_with_path(one, new, old)
 
 
+def merge_cache_slots(new: Any, old: Any, keep: jax.Array) -> Any:
+    """Batched ``merge_cache_slot``: keep the batch rows of `new` where
+    ``keep`` (bool, length = batch) is set, `old` everywhere else.
+    Element-select semantics make this bit-exact with per-slot merges."""
+
+    def one(path, n, o):
+        ax = _batch_axis(path, n)
+        shape = [1] * n.ndim
+        shape[ax] = n.shape[ax]
+        return jnp.where(keep.reshape(shape), n, o)
+
+    return jax.tree_util.tree_map_with_path(one, new, old)
+
+
 def make_serve_steps(lm: LM, *, jit: bool = True):
-    """Returns (prefill_step, decode_step) pure fns.
+    """Returns (prefill_step, decode_step) pure fns (dry-run cells).
 
     prefill_step(params, tokens, caches)            -> (last_logits, caches)
     decode_step(params, token, caches, cache_len)   -> (logits, caches)
@@ -69,13 +102,12 @@ def make_serve_steps(lm: LM, *, jit: bool = True):
     return prefill_step, decode_step
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # (plen,) int32
-    max_new: int
-    out: list = dataclasses.field(default_factory=list)
-    done: bool = False
+def _jit_cache_size(fn) -> int:
+    """Compiled-signature count of a jitted fn (-1 when unavailable)."""
+    try:
+        return int(fn._cache_size())
+    except (AttributeError, TypeError):
+        return -1
 
 
 class ServeEngine:
@@ -84,7 +116,9 @@ class ServeEngine:
     def __init__(self, lm: LM, params: Any, *, slots: int, max_seq: int,
                  prefill_len: int, temperature: float = 0.0, seed: int = 0,
                  autotune_blocks: bool = False,
-                 quantize: Optional[str] = None):
+                 quantize: Optional[str] = None,
+                 prefill_chunk: Optional[int] = None,
+                 strict: bool = False):
         if quantize not in (None, "int8"):
             raise ValueError(
                 f"quantize must be None or 'int8', got {quantize!r}")
@@ -97,26 +131,142 @@ class ServeEngine:
 
             params = quantize_tree(params)
         self.lm = lm
-        self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.prefill_len = prefill_len
         self.temperature = temperature
-        self.rng = np.random.default_rng(seed)
+        self.strict = strict
+        self.scheduler = Scheduler(
+            slots=slots, max_seq=max_seq, prefill_len=prefill_len,
+            prefill_chunk=prefill_chunk, strict=strict)
+        self.prefill_chunk = self.scheduler.prefill_chunk
+        if self.prefill_chunk != prefill_len:
+            _validate_chunkable(lm.cfg)
+        self.params = params
         if autotune_blocks:
             # pre-pay the per-shape block sweep for every compressed GEMM
             # this engine will issue, so the first real request never eats
             # an inline autotune (results persist in the on-disk cache).
             self._autotune_sparse_blocks()
-        self.prefill_step, self.decode_step = make_serve_steps(lm)
-        self.caches = lm.init_cache(slots, max_seq)
-        self.lengths = np.zeros(slots, np.int32)
-        self.active: list[Optional[Request]] = [None] * slots
-        self.queue: list[Request] = []
-        self.finished: list[Request] = []
+        self.params = self._place_params(self.params)
+        self._sampler = make_sampler(temperature)
+        self._key = jax.random.PRNGKey(seed)
+        self._build_steps()
+        self.caches = self._place_caches(lm.init_cache(slots, max_seq))
+        self.decode_times: list[float] = []  # wall clock after each decode
+        self.steps = 0
+
+    # ---- engine-flavour hooks (overridden by ShardedServeEngine) ---------
+
+    def _place_params(self, params: Any) -> Any:
+        return params
+
+    def _place_caches(self, caches: Any) -> Any:
+        return caches
+
+    def _build_steps(self) -> None:
+        lm, sampler = self.lm, self._sampler
+        full = self.prefill_chunk == self.prefill_len
+
+        def prefill_step(params, tokens, caches, cache_len, mask, key):
+            if full:
+                logits, new_caches, _ = lm.forward(
+                    params, tokens, mode="prefill", caches=caches,
+                    cache_len=jnp.int32(0))
+            else:
+                logits, new_caches, _ = lm.forward(
+                    params, tokens, mode="chunk", caches=caches,
+                    cache_len=cache_len)
+            new_caches = merge_cache_slots(new_caches, caches, mask)
+            toks, key = sampler(logits[:, -1], key)
+            return toks, new_caches, key
+
+        def decode_step(params, token, caches, cache_len, mask, key):
+            logits, new_caches, _ = lm.forward(
+                params, token, mode="decode", caches=caches,
+                cache_len=cache_len)
+            new_caches = merge_cache_slots(new_caches, caches, mask)
+            toks, key = sampler(logits[:, 0], key)
+            return toks, new_caches, key
+
+        self._prefill = jax.jit(prefill_step, donate_argnums=(2,))
+        self._decode = jax.jit(decode_step, donate_argnums=(2,))
+
+    # ---- public API -------------------------------------------------------
 
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self.scheduler.submit(req, now=time.perf_counter())
+
+    @property
+    def queue(self) -> list:
+        return self.scheduler.queue
+
+    @property
+    def finished(self) -> list:
+        return self.scheduler.finished
+
+    def compiled_cache_sizes(self) -> dict:
+        """jit-cache entry counts for the two steps; after warmup these
+        must stay at 1 each (fixed shapes => zero recompiles)."""
+        return {"prefill": _jit_cache_size(self._prefill),
+                "decode": _jit_cache_size(self._decode)}
+
+    def step(self) -> None:
+        """One engine step: (batched, possibly chunked) prefill for every
+        slot with pending prompt pieces, then one decode for every slot
+        whose prefill completed."""
+        sched = self.scheduler
+        pf = sched.plan_prefill()
+        if pf is not None:
+            toks, self.caches, self._key = self._prefill(
+                self.params, jnp.asarray(pf.tokens), self.caches,
+                jnp.asarray(pf.cache_len),
+                jnp.asarray(pf.mask), self._key)
+            sched.finish_prefill(pf, np.asarray(toks),
+                                 now=time.perf_counter())
+        dc = sched.plan_decode()
+        if dc is not None:
+            toks, self.caches, self._key = self._decode(
+                self.params, jnp.asarray(dc.tokens), self.caches,
+                jnp.asarray(dc.lengths), jnp.asarray(dc.mask), self._key)
+            toks_np = np.asarray(toks)  # device sync: timestamps are real
+            now = time.perf_counter()
+            self.decode_times.append(now)
+            if len(self.decode_times) > 8192:  # bounded history: a
+                # long-running server must not grow a float per token
+                del self.decode_times[:4096]
+            sched.finish_decode(dc, toks_np, now=now)
+        self.steps += 1
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while self.scheduler.has_work and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.scheduler.finished
+
+    def throughput_stats(self) -> dict:
+        """Serving metrics over everything finished so far (the serve
+        bench's source of truth): generated tokens, mean TTFT, and
+        p50/p99 inter-token latency from the decode-step wall clock."""
+        reqs = list(self.scheduler.finished)
+        toks = sum(len(r.out) for r in reqs)
+        ttfts = [r.t_first - r.t_submit for r in reqs
+                 if r.t_first is not None and r.t_submit is not None]
+        itl = np.diff(np.asarray(self.decode_times)) \
+            if len(self.decode_times) > 1 else np.asarray([])
+        return {
+            "requests": len(reqs),
+            "tokens": toks,
+            "decode_steps": len(self.decode_times),
+            "ttft_s": float(np.mean(ttfts)) if ttfts else float("nan"),
+            "itl_p50_s": float(np.percentile(itl, 50)) if itl.size else
+            float("nan"),
+            "itl_p99_s": float(np.percentile(itl, 99)) if itl.size else
+            float("nan"),
+        }
+
+    # ---- warmup -----------------------------------------------------------
 
     def _autotune_sparse_blocks(self) -> None:
         """Warm the autotune cache for this engine's sparse-GEMM shapes:
@@ -148,59 +298,154 @@ class ServeEngine:
             for m_rows in {self.slots, self.slots * self.prefill_len}:
                 autotune.ensure_tuned(m_rows, n, k, nm, dtype=dt)
 
-    def _sample(self, logits: np.ndarray) -> int:
-        if self.temperature <= 0:
-            return int(np.argmax(logits))
-        p = np.exp((logits - logits.max()) / self.temperature)
-        p /= p.sum()
-        return int(self.rng.choice(len(p), p=p))
 
-    def _admit(self) -> None:
-        for slot in range(self.slots):
-            if self.active[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            prompt = req.prompt[-self.prefill_len:]
-            pad = self.prefill_len - len(prompt)
-            tokens = np.zeros((self.slots, self.prefill_len), np.int32)
-            tokens[slot, pad:] = prompt
-            logits, new_caches = self.prefill_step(
-                self.params, jnp.asarray(tokens), self.caches)
-            # keep only this slot's freshly prefetched cache rows
-            self.caches = merge_cache_slot(new_caches, self.caches, slot)
-            req.out.append(self._sample(np.asarray(logits)[slot]))
-            self.active[slot] = req
-            self.lengths[slot] = self.prefill_len
+def _validate_chunkable(cfg) -> None:
+    """Chunked prefill needs the mixers' mode="chunk" path (multi-token
+    write at a cache offset + causal masking vs absolute positions) —
+    implemented for attention (GQA/MLA); state-space / rwkv caches would
+    need a resume-from-state prefill instead."""
+    for entry, _rep in cfg.plan:
+        blocks = entry if isinstance(entry, tuple) else (entry,)
+        for blk in blocks:
+            if not isinstance(blk.mixer, AttnConfig) or blk.cross_attn:
+                raise NotImplementedError(
+                    f"prefill_chunk < prefill_len needs attention-mixer "
+                    f"decoder blocks; {cfg.name} has "
+                    f"{type(blk.mixer).__name__}"
+                    f"{' + cross_attn' if blk.cross_attn else ''}")
 
-    def _step_decode(self) -> None:
-        tok = np.zeros((self.slots, 1), np.int32)
-        for s, req in enumerate(self.active):
-            if req is not None:
-                tok[s, 0] = req.out[-1]
-        # per-slot cache lengths: slots admitted at different times decode
-        # against their own positions (vector cache_len)
-        logits, self.caches = self.decode_step(
-            self.params, jnp.asarray(tok),
-            self.caches, jnp.asarray(self.lengths, jnp.int32))
-        logits = np.asarray(logits)
-        for s, req in enumerate(self.active):
-            if req is None:
-                continue
-            req.out.append(self._sample(logits[s]))
-            self.lengths[s] += 1
-            if len(req.out) >= req.max_new or \
-                    self.lengths[s] >= self.max_seq - 1:
-                req.done = True
-                self.finished.append(req)
-                self.active[s] = None
-                self.lengths[s] = 0
 
-    def run(self, max_steps: int = 10_000) -> list[Request]:
-        steps = 0
-        while (self.queue or any(a is not None for a in self.active)) \
-                and steps < max_steps:
-            self._admit()
-            if any(a is not None for a in self.active):
-                self._step_decode()
-            steps += 1
-        return self.finished
+class ShardedServeEngine(ServeEngine):
+    """The same engine with prefill/decode under ``shard_map`` on a
+    ("data", "model") mesh: slots data-parallel, projections
+    tensor-parallel with head-aware specs, KV caches sharded on heads,
+    compressed vals+idx+scales co-sharded so each shard's Pallas kernel
+    reads only its local slice. Token streams are identical to the
+    single-device engine (same scheduler, same sampler key stream)."""
+
+    def __init__(self, lm: LM, params: Any, *, mesh, **kw):
+        from repro.parallel.sharding import serve_tp_plan
+
+        names = getattr(mesh, "axis_names", ())
+        if "data" not in names or "model" not in names:
+            raise ValueError(
+                f"ShardedServeEngine needs a ('data', 'model') mesh, got "
+                f"axes {names}")
+        self.mesh = mesh
+        self._mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+        slots = kw.get("slots")
+        if slots is None or slots % self._mesh_shape["data"]:
+            raise ValueError(
+                f"slots={slots} must divide over the data axis "
+                f"({self._mesh_shape['data']})")
+        self.tp_plan = serve_tp_plan(lm.cfg, self._mesh_shape["model"])
+        super().__init__(lm, params, **kw)
+        # commit the sampler key to the mesh (replicated) up front: the
+        # first step's key would otherwise be single-device while every
+        # later key is a mesh-committed jit output — two compiled
+        # signatures for one step function (breaks the zero-recompile
+        # invariant the fleet monitors)
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        self._key = jax.device_put(
+            self._key, NamedSharding(self.mesh, P()))
+
+    def _place_params(self, params: Any) -> Any:
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.parallel.sharding import serve_param_pspecs
+
+        specs = serve_param_pspecs(params, self.mesh, self.tp_plan)
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P))
+        return jax.device_put(params, shardings)
+
+    def _place_caches(self, caches: Any) -> Any:
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.parallel.sharding import serve_cache_pspecs
+
+        specs = serve_cache_pspecs(caches, self.mesh, self.tp_plan)
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P))
+        return jax.device_put(caches, shardings)
+
+    def _build_steps(self) -> None:
+        from jax.sharding import PartitionSpec as P
+
+        from repro import compat
+        from repro.parallel import hints
+        from repro.parallel.sharding import (
+            serve_cache_pspecs,
+            serve_local_cfg,
+            serve_param_pspecs,
+        )
+
+        mesh, plan, sampler = self.mesh, self.tp_plan, self._sampler
+        full = self.prefill_chunk == self.prefill_len
+        # per-shard view of the model: head counts divided by tp so the
+        # (B, S, H, D) reshapes match the local projection slices
+        lm_local = LM(serve_local_cfg(self.lm.cfg, plan))
+        p_specs = serve_param_pspecs(self.params, mesh, plan)
+        c_specs = serve_cache_pspecs(
+            jax.eval_shape(
+                lambda: self.lm.init_cache(self.slots, self.max_seq)),
+            mesh, plan)
+        tags = plan.reduce_tags
+        p_tok = P("data", None)
+        p_vec = P("data")
+
+        def prefill_body(params, tokens, caches, cache_len, mask):
+            with hints.tp_serving("model", tags):
+                if full:
+                    logits, new_caches, _ = lm_local.forward(
+                        params, tokens, mode="prefill", caches=caches,
+                        cache_len=jnp.int32(0))
+                else:
+                    logits, new_caches, _ = lm_local.forward(
+                        params, tokens, mode="chunk", caches=caches,
+                        cache_len=cache_len)
+            new_caches = merge_cache_slots(new_caches, caches, mask)
+            return logits[:, -1], new_caches
+
+        sh_prefill = compat.shard_map(
+            prefill_body, mesh=mesh,
+            in_specs=(p_specs, p_tok, c_specs, p_vec, p_vec),
+            out_specs=(p_tok, c_specs), check_vma=False)
+
+        def decode_body(params, token, caches, cache_len, mask):
+            with hints.tp_serving("model", tags):
+                logits, new_caches, _ = lm_local.forward(
+                    params, token, mode="decode", caches=caches,
+                    cache_len=cache_len)
+            new_caches = merge_cache_slots(new_caches, caches, mask)
+            return logits[:, 0], new_caches
+
+        sh_decode = compat.shard_map(
+            decode_body, mesh=mesh,
+            in_specs=(p_specs, p_tok, c_specs, p_vec, p_vec),
+            out_specs=(p_tok, c_specs), check_vma=False)
+
+        # sampling sits outside the shard_map (logits are tiny) but inside
+        # the jit: one categorical over the *global* (slots, V) block, so
+        # the gumbel noise — hence the sampled stream — is independent of
+        # the device mesh and matches the single-device engine bit-for-bit
+        def prefill_step(params, tokens, caches, cache_len, mask, key):
+            logits, new_caches = sh_prefill(
+                params, tokens, caches, cache_len, mask)
+            toks, key = sampler(logits, key)
+            return toks, new_caches, key
+
+        def decode_step(params, token, caches, cache_len, mask, key):
+            logits, new_caches = sh_decode(
+                params, token, caches, cache_len, mask)
+            toks, key = sampler(logits, key)
+            return toks, new_caches, key
+
+        self._prefill = jax.jit(prefill_step, donate_argnums=(2,))
+        self._decode = jax.jit(decode_step, donate_argnums=(2,))

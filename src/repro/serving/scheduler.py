@@ -1,0 +1,196 @@
+"""Host-side continuous-batching scheduler (no device work here).
+
+The scheduler owns every per-request decision the engines make —
+admission into free slots, chunked-prefill progress, decode membership,
+termination — and hands the engines *fixed-shape* numpy plans to feed
+the compiled device steps:
+
+  * ``plan_prefill`` admits queued requests into free slots and returns
+    ONE ``(slots, prefill_chunk)`` token block covering every slot that
+    still has prompt pieces to prefill — admissions are batched into a
+    single prefill call per engine step (the original engine ran one
+    full ``slots x prefill_len`` forward *per request* and discarded all
+    but one slot's rows), and long prompts advance one ``prefill_chunk``
+    piece per step so time-to-first-token stays bounded by the chunk
+    compute, not the longest prompt.
+  * ``plan_decode`` covers every slot whose prefill completed.
+
+Admission semantics match the original engine exactly (the batched-admit
+regression test pins this): prompts are truncated to their *last*
+``prefill_len`` tokens, left-padded with zeros, and a slot's cache
+length starts at ``prefill_len`` regardless of the true prompt length.
+A truncated prompt is now recorded (``Request.truncated``) and rejected
+loudly when the scheduler runs in strict mode.
+
+Because both the single-device and the sharded engines drive this same
+scheduler, their step sequences — and therefore their sampler key
+streams — are identical, which is what makes cross-engine token-parity
+testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (plen,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    truncated: bool = False  # prompt exceeded prefill_len (tail kept)
+    # serving timestamps (perf_counter seconds; engines fill these in)
+    t_submit: Optional[float] = None
+    t_first: Optional[float] = None   # first token available (TTFT end)
+    t_done: Optional[float] = None
+
+
+@dataclasses.dataclass
+class PrefillPlan:
+    tokens: np.ndarray     # (slots, prefill_chunk) int32
+    cache_len: np.ndarray  # (slots,) int32 — per-slot write offset
+    mask: np.ndarray       # (slots,) bool — slots whose cache rows to keep
+    active: list           # slot ids prefilling this step
+    finishing: list        # subset completing their final chunk
+
+
+@dataclasses.dataclass
+class DecodePlan:
+    tokens: np.ndarray   # (slots, 1) int32 — last sampled token per slot
+    lengths: np.ndarray  # (slots,) int32 — current cache lengths
+    mask: np.ndarray     # (slots,) bool — slots whose cache rows to keep
+    active: list         # slot ids decoding this step
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    tokens: Optional[np.ndarray] = None  # padded (prefill_len,) prompt
+    pos: int = 0      # prefill progress (tokens written to cache)
+    length: int = 0   # decode-time cache length
+
+
+class Scheduler:
+    def __init__(self, *, slots: int, max_seq: int, prefill_len: int,
+                 prefill_chunk: Optional[int] = None, strict: bool = False):
+        self.prefill_chunk = prefill_chunk or prefill_len
+        if prefill_len % self.prefill_chunk:
+            raise ValueError(
+                f"prefill_len={prefill_len} must be a multiple of "
+                f"prefill_chunk={self.prefill_chunk} (fixed-shape chunks)")
+        self.n_slots = slots
+        self.max_seq = max_seq
+        self.prefill_len = prefill_len
+        self.strict = strict
+        self.slots = [_Slot() for _ in range(slots)]
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+    # ---- admission --------------------------------------------------------
+
+    def submit(self, req: Request, now: Optional[float] = None) -> None:
+        if len(req.prompt) > self.prefill_len:
+            req.truncated = True
+            if self.strict:
+                raise ValueError(
+                    f"request {req.rid}: prompt length {len(req.prompt)} "
+                    f"exceeds prefill_len={self.prefill_len} and the "
+                    "engine is strict (tail truncation refused)")
+        req.t_submit = now
+        self.queue.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s.req is not None for s in self.slots)
+
+    def _padded(self, prompt: np.ndarray) -> np.ndarray:
+        p = np.asarray(prompt, np.int32)[-self.prefill_len:]
+        tok = np.zeros(self.prefill_len, np.int32)
+        tok[self.prefill_len - len(p):] = p
+        return tok
+
+    # ---- prefill ----------------------------------------------------------
+
+    def plan_prefill(self) -> Optional[PrefillPlan]:
+        for slot in self.slots:
+            if slot.req is None and self.queue:
+                slot.req = self.queue.pop(0)
+                slot.tokens = self._padded(slot.req.prompt)
+                slot.pos = 0
+                slot.length = 0
+        chunk = self.prefill_chunk
+        active, finishing = [], []
+        tokens = np.zeros((self.n_slots, chunk), np.int32)
+        cache_len = np.zeros(self.n_slots, np.int32)
+        mask = np.zeros(self.n_slots, bool)
+        for i, slot in enumerate(self.slots):
+            if slot.req is None or slot.pos >= self.prefill_len:
+                continue
+            tokens[i] = slot.tokens[slot.pos:slot.pos + chunk]
+            cache_len[i] = slot.pos
+            mask[i] = True
+            active.append(i)
+            if slot.pos + chunk >= self.prefill_len:
+                finishing.append(i)
+        if not active:
+            return None
+        return PrefillPlan(tokens, cache_len, mask, active, finishing)
+
+    def finish_prefill(self, plan: PrefillPlan, sampled: np.ndarray,
+                       now: Optional[float] = None) -> None:
+        """Advance chunk progress; record the first sampled token for
+        slots whose prompt is now fully prefilled."""
+        for i in plan.active:
+            self.slots[i].pos += self.prefill_chunk
+        for i in plan.finishing:
+            slot = self.slots[i]
+            req = slot.req
+            req.out.append(int(sampled[i]))
+            if req.t_first is None:
+                req.t_first = now
+            slot.length = self.prefill_len
+            if len(req.out) >= req.max_new:
+                self._finish(i, now)
+
+    # ---- decode -----------------------------------------------------------
+
+    def plan_decode(self) -> Optional[DecodePlan]:
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        lengths = np.zeros(self.n_slots, np.int32)
+        mask = np.zeros(self.n_slots, bool)
+        active = []
+        for i, slot in enumerate(self.slots):
+            if slot.req is None or slot.pos < self.prefill_len:
+                continue
+            tokens[i, 0] = slot.req.out[-1]
+            lengths[i] = slot.length
+            mask[i] = True
+            active.append(i)
+        if not active:
+            return None
+        # mask gates the cache merge: a decode call must not write its
+        # placeholder token-0 K/V into slots that are mid-chunked-prefill
+        # (or empty) — their rows keep the pre-step cache
+        return DecodePlan(tokens, lengths, mask, active)
+
+    def finish_decode(self, plan: DecodePlan, sampled: np.ndarray,
+                      now: Optional[float] = None) -> None:
+        for i in plan.active:
+            slot = self.slots[i]
+            req = slot.req
+            req.out.append(int(sampled[i]))
+            slot.length += 1
+            if len(req.out) >= req.max_new or \
+                    slot.length >= self.max_seq - 1:
+                self._finish(i, now)
+
+    def _finish(self, i: int, now: Optional[float]) -> None:
+        slot = self.slots[i]
+        slot.req.done = True
+        slot.req.t_done = now
+        self.finished.append(slot.req)
+        self.slots[i] = _Slot()

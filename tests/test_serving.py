@@ -103,6 +103,126 @@ def test_temperature_sampling_is_seed_deterministic(yi):
     assert c != a  # the seed actually reaches the sampler
 
 
+def test_batched_admit_matches_full_forward_reference(yi):
+    """Admission is now ONE fixed-shape prefill call per engine step (the
+    seed engine ran a full slots x prefill_len forward per request and
+    discarded all but one slot's rows). Output token ids must be exactly
+    what the seed semantics produce: prompt truncated to the *tail*
+    prefill_len tokens, left-padded with zeros, then a greedy argmax
+    chain — verified against a per-request full forward."""
+    cfg, lm, params = yi
+    rng = np.random.default_rng(7)
+    # mixed lengths: shorter than, equal to, and longer than prefill_len
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 8, 8, 11, 3)]
+    eng = ServeEngine(lm, params, slots=2, max_seq=64, prefill_len=8)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=4))
+    got = {r.rid: r.out for r in eng.run()}
+
+    for i, p in enumerate(prompts):
+        tail = list(p[-8:])
+        seq = [0] * (8 - len(tail)) + tail
+        ref = []
+        for _ in range(4):
+            logits, _, _ = lm.forward(params, jnp.asarray([seq]),
+                                      mode="train")
+            nxt = int(jnp.argmax(logits[0, -1]))
+            ref.append(nxt)
+            seq.append(nxt)
+        assert got[i] == ref, i
+
+
+def test_chunked_prefill_matches_full(yi):
+    """prefill_chunk splits prompts into fixed-shape pieces (bounded
+    TTFT); the served token streams must be identical to full-prompt
+    prefill, including for requests admitted mid-flight into reused
+    slots while other slots keep decoding."""
+    cfg, lm, params = yi
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+               for _ in range(5)]
+
+    def serve(chunk):
+        eng = ServeEngine(lm, params, slots=2, max_seq=64, prefill_len=8,
+                          prefill_chunk=chunk)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new=4 + i))
+        return {r.rid: r.out for r in eng.run()}
+
+    full = serve(None)
+    assert serve(4) == full
+    assert serve(2) == full
+
+
+def test_chunk_must_divide_prefill_len(yi):
+    cfg, lm, params = yi
+    with pytest.raises(ValueError, match="multiple"):
+        ServeEngine(lm, params, slots=1, max_seq=64, prefill_len=8,
+                    prefill_chunk=3)
+
+
+def test_long_prompt_truncation_recorded_and_strict_raises(yi):
+    """A prompt longer than prefill_len keeps the seed behavior (tail
+    kept, silently) but is now *recorded* on the request; a strict
+    engine refuses it loudly."""
+    cfg, lm, params = yi
+    eng = ServeEngine(lm, params, slots=1, max_seq=64, prefill_len=8)
+    long_req = Request(rid=0, prompt=np.arange(12, dtype=np.int32),
+                       max_new=2)
+    short_req = Request(rid=1, prompt=np.arange(8, dtype=np.int32),
+                        max_new=2)
+    eng.submit(long_req)
+    eng.submit(short_req)
+    assert long_req.truncated and not short_req.truncated
+    done = eng.run()
+    assert sorted(r.rid for r in done) == [0, 1]
+
+    strict = ServeEngine(lm, params, slots=1, max_seq=64, prefill_len=8,
+                         strict=True)
+    with pytest.raises(ValueError, match="strict"):
+        strict.submit(Request(rid=2, prompt=np.arange(9, dtype=np.int32),
+                              max_new=2))
+    strict.submit(Request(rid=3, prompt=np.arange(8, dtype=np.int32),
+                          max_new=2))  # exactly prefill_len is fine
+    assert len(strict.run()) == 1
+
+
+def test_zero_recompiles_after_warmup(yi):
+    """Every device step is fixed-shape: after the first prefill+decode
+    compile the jit caches must not grow, no matter how admissions and
+    completions interleave."""
+    cfg, lm, params = yi
+    eng = ServeEngine(lm, params, slots=2, max_seq=64, prefill_len=8,
+                      prefill_chunk=4)
+    rng = np.random.default_rng(9)
+    eng.submit(Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, size=8).astype(np.int32), max_new=3))
+    eng.run()
+    warm = eng.compiled_cache_sizes()
+    if warm["prefill"] < 0:
+        pytest.skip("jit cache size introspection unavailable")
+    assert warm == {"prefill": 1, "decode": 1}
+    for i in range(1, 6):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=8).astype(np.int32), max_new=2 + i))
+    eng.run()
+    assert eng.compiled_cache_sizes() == warm
+
+
+def test_chunked_prefill_rejects_stateful_mixers(yi):
+    """mode="chunk" needs the attention cache-offset path; ssm/rwkv
+    engines must refuse chunking loudly instead of mis-serving."""
+    from repro.configs import get_reduced as _gr
+
+    cfg = _gr("rwkv6-3b")
+    lm = LM(cfg)
+    with pytest.raises(NotImplementedError, match="attention"):
+        ServeEngine(lm, jax.eval_shape(
+            lambda: lm.init(jax.random.PRNGKey(0))),
+            slots=1, max_seq=64, prefill_len=8, prefill_chunk=4)
+
+
 def test_autotune_blocks_warmup_covers_sparse_shapes(yi, monkeypatch):
     """autotune_blocks=True must request a sweep for every compressed GEMM
     shape at both the decode (M=slots) and prefill (M=slots*prefill_len)
