@@ -51,7 +51,7 @@ import sys
 
 # row-name prefixes that represent steady-state kernel/serving timings
 GATED_PREFIXES = ("fig4_measured", "fig5_measured", "fig6_measured",
-                  "tpu_kernel_", "serve_decode_")
+                  "tpu_kernel_", "serve_decode_", "serve_itl_")
 CALIBRATION_ROW = "bench_calibration"
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
                                 "BENCH_baseline.json")

@@ -7,9 +7,10 @@ is run in the conv-forward orientation ``SparseConv2D`` executes —
 patches ``(N_pix, K)`` @ sparse weight ``(K, C_out)`` — through:
 
 * the padded Pallas ``nm_matmul`` dispatch (``KernelPolicy "force"``;
-  interpret mode on CPU, compiled Mosaic on real TPUs) — the dispatch
-  record is checked so a silent fallback to the dense reference fails
-  loudly rather than producing a bogus "measurement";
+  interpret mode on CPU, compiled Mosaic on real TPUs) — the routing is
+  preflighted with ``api.explain_dispatch`` so a silent fallback to the
+  dense reference fails loudly rather than producing a bogus
+  "measurement";
 * the Row-Wise-SpMM baseline (Alg. 2 semantic model, XLA);
 * the gather-port baseline (``indexmac_gather`` dispatch family).
 
@@ -31,8 +32,6 @@ from repro import api
 from repro.core.cost_model import VectorCoreModel
 from repro.core.sparse_matmul import rowwise_spmm
 from repro.core.sparsity import NMConfig, compress_nm, random_nm_matrix
-from repro.kernels import registry
-from repro.kernels.indexmac_gather.ops import indexmac_gather_spmm
 
 SMOKE_MAX_PIX = 256  # cap on N = H_out*W_out per layer in smoke mode
 SMOKE_LAYER_STRIDE = 12  # every 12th layer in smoke mode
@@ -92,14 +91,16 @@ def measure_layer(
     x = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, k_run),
                           dtype=jnp.float32)
 
-    f_pallas = jax.jit(lambda x, w: api.nm_matmul(x, w))
-    y = f_pallas(x, sw).block_until_ready()  # compile + warm
-    rec = registry.last_dispatch("nm_matmul_q" if quantized else "nm_matmul")
-    if rec is None or not rec.impl.startswith("pallas"):
+    # preflight the routing: the public dry-run says which impl the real
+    # call will take, before any compile time is spent.
+    rec = api.explain_dispatch((n, k_run), sw, dtype=jnp.float32)
+    if not rec.impl.startswith("pallas"):
         raise RuntimeError(
             f"measured mode requires the Pallas dispatch; layer {name} "
-            f"({m}x{k_run}x{n}, {cfg.tag}) routed to "
-            f"{rec.impl if rec else 'nothing'}: {rec.reason if rec else ''}")
+            f"({m}x{k_run}x{n}, {cfg.tag}) would route to "
+            f"{rec.impl}: {rec.reason}")
+    f_pallas = jax.jit(lambda x, w: api.nm_matmul(x, w))
+    y = f_pallas(x, sw).block_until_ready()  # compile + warm
     t_pallas = best_us(lambda: f_pallas(x, sw), repeats=repeats)
 
     # Row-Wise-SpMM baseline (Alg. 2), paper orientation: A (m, k) sparse.
@@ -117,11 +118,12 @@ def measure_layer(
 
     # gather-port baseline (its own dispatch family; XLA ref when the
     # shape isn't tileable for the gather kernel).
-    f_gather = jax.jit(
-        lambda v, i, b: indexmac_gather_spmm(v, i, b, cfg))
-    f_gather(a_vals, a_idx, bt).block_until_ready()
-    grec = registry.last_dispatch("indexmac_gather")
-    t_gather = best_us(lambda: f_gather(a_vals, a_idx, bt), repeats=repeats)
+    gw = api.NMWeight(vals=a_vals, idx=a_idx, nm=cfg, axis=1,
+                      kernel_policy=api.KernelPolicy("auto"))
+    grec = api.explain_dispatch(bt.shape, gw)
+    f_gather = jax.jit(lambda w, b: api.indexmac_gather(w, b))
+    f_gather(gw, bt).block_until_ready()
+    t_gather = best_us(lambda: f_gather(gw, bt), repeats=repeats)
 
     row = {
         "layer": name,
@@ -132,7 +134,7 @@ def measure_layer(
         "pallas_impl": rec.impl,
         "block": list(rec.block) if rec.block else None,
         "padded": list(rec.padded) if rec.padded else None,
-        "gather_impl": grec.impl if grec else None,
+        "gather_impl": grec.impl,
         "t_pallas_us": round(t_pallas, 1),
         "t_rowwise_us": round(t_row, 1),
         "t_gather_us": round(t_gather, 1),

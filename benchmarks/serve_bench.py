@@ -13,11 +13,15 @@ schema-2 rows:
   serve_itl_{variant}_{D}dev     p50 inter-token latency us
                                  (derived carries p99)
 
-Only the ``serve_decode_*`` family gates in ``check_regression.py`` —
-us/token is inverse tokens/sec, and the share-normalized comparison
-(row / sum of gated rows, new vs baseline) cancels runner speed, so the
-gate fires when one engine variant slows *relative to the others*, e.g.
-a sparse dispatch regression that dense serving doesn't see.
+The ``serve_decode_*`` and ``serve_itl_*`` families gate in
+``check_regression.py`` — us/token is inverse tokens/sec, and the
+share-normalized comparison (row / sum of gated rows, new vs baseline)
+cancels runner speed, so the gate fires when one engine variant slows
+*relative to the others*, e.g. a sparse decode-dispatch regression that
+dense serving doesn't see. The sparse variants run with
+``use_kernel=True`` and preflight every compressed GEMM with
+``api.explain_dispatch`` — a decode step must route to the Pallas
+decode family for its timings to be admitted at all.
 
 Every cell runs in a subprocess: the 8-device cells must set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before jax
@@ -44,12 +48,13 @@ MESH_8DEV = (2, 4)  # (data, model) for the forced host mesh
 
 
 def _child(devices: int, smoke: bool) -> None:
+    import dataclasses
     import time
 
     import jax
     import numpy as np
 
-    from repro import compat
+    from repro import api, compat
     from repro.configs import get_reduced
     from repro.models.transformer import LM
     from repro.serving.engine import Request, ServeEngine, ShardedServeEngine
@@ -63,14 +68,39 @@ def _child(devices: int, smoke: bool) -> None:
 
     def build(variant):
         cfg = get_reduced("yi-9b", sparse=variant != "dense")
+        if cfg.sparsity is not None:
+            # the sparse variants measure the kernel path, not the XLA
+            # reference: the decode-family dispatch is what serve_itl_*
+            # rows gate
+            cfg = dataclasses.replace(
+                cfg, sparsity=dataclasses.replace(
+                    cfg.sparsity, use_kernel=True))
         lm = LM(cfg)
         params = lm.init(jax.random.PRNGKey(0))
+        if variant != "dense":
+            _preflight_decode_dispatch(params, variant)
         kw = dict(slots=slots, max_seq=128, prefill_len=prefill_len,
                   prefill_chunk=chunk,
                   quantize="int8" if variant == "int8" else None)
         if mesh is not None:
             return cfg, ShardedServeEngine(lm, params, mesh=mesh, **kw)
         return cfg, ServeEngine(lm, params, **kw)
+
+    def _preflight_decode_dispatch(params, variant):
+        # the public dry-run replaces record sniffing: every compressed
+        # GEMM at decode shape (M = slots) must route to a Pallas
+        # decode-family kernel before any timing is trusted.
+        leaves = [x for x in jax.tree.leaves(
+            params, is_leaf=api.is_sparse) if api.is_sparse(x)]
+        for w in leaves:
+            rec = api.explain_dispatch((slots, w.dense_dim), w)
+            if not (rec.op.startswith("nm_matmul_decode")
+                    and rec.impl.startswith("pallas")):
+                raise RuntimeError(
+                    f"serve bench ({variant}) needs the Pallas decode "
+                    f"dispatch for every GEMM; K={w.dense_dim} "
+                    f"N={w.vals.shape[-1]} would route to "
+                    f"{rec.op}/{rec.impl}: {rec.reason}")
 
     rows = []
     for variant in VARIANTS:

@@ -6,8 +6,14 @@ The verbs most users need:
   quantize(w)       NMWeight / dense array -> int8 QNMWeight (+ scales)
   dequantize(qw)    QNMWeight -> float NMWeight (fallback path)
   densify(w)        any typed weight node / {"w": ...} -> dense array
-  nm_matmul(x, w)   y = x @ densify(w), dispatched by w's own metadata
-                    and *type* (QNMWeight -> the int8 kernel family)
+  nm_matmul(x, w, epilogue=...)
+                    y = epilogue(x @ densify(w)), dispatched by w's own
+                    metadata and *type* (QNMWeight -> the int8 kernel
+                    family); skinny-M calls route to the fused decode
+                    kernel family
+  explain_dispatch(x_shape, w)
+                    the DispatchRecord nm_matmul *would* produce —
+                    family, kernel, block, pad plan — without running
   is_sparse(obj)    True for typed sparse weight nodes
 
 An :class:`NMWeight` is a registered JAX pytree: ``vals``/``idx`` are
@@ -26,7 +32,15 @@ Kernel policy semantics (``KernelPolicy.mode``):
          is ignored.
 
 ``KernelPolicy.block`` optionally pins the (block_m, block_n, block_k)
-tile triple; ``None`` consults the autotune cache.
+tile triple (``decode_block`` likewise for the decode family); ``None``
+consults the autotune cache.
+
+Epilogues: :class:`Epilogue` is a (bias, activation-name) spec.
+``nm_matmul(x, w, epilogue=Epilogue(bias=b, activation="silu"))``
+computes ``silu(x @ densify(w) + b)`` with one composition contract on
+every path — fused into the decode kernels' f32 accumulator writeback,
+applied identically outside the prefill-shaped kernels — so outputs are
+bit-exact against the reference composition on the integer lattice.
 """
 from __future__ import annotations
 
@@ -48,13 +62,24 @@ from repro.core.sparsity import (
     decompress_nm,
     prune_mask_nm,
 )
+from repro.kernels.epilogue import Epilogue
+from repro.kernels.indexmac.ops import (
+    explain_dispatch as _explain_dispatch,
+)
 from repro.kernels.indexmac.ops import nm_matmul as _nm_matmul_typed
+from repro.kernels.indexmac_gather.ops import (
+    indexmac_gather as _indexmac_gather,
+)
+from repro.kernels.registry import DispatchRecord, KernelForceError
 from repro.quant import QNMWeight
 from repro.quant import dequantize as _dequantize
 from repro.quant import quantize_nm as _quantize_nm
 from repro.quant import quantize_tree, dequantize_tree  # noqa: F401 (re-export)
 
 __all__ = [
+    "DispatchRecord",
+    "Epilogue",
+    "KernelForceError",
     "KernelPolicy",
     "MaskedNMWeight",
     "NMConfig",
@@ -64,6 +89,8 @@ __all__ = [
     "densify",
     "dequantize",
     "dequantize_tree",
+    "explain_dispatch",
+    "indexmac_gather",
     "is_sparse",
     "nm_matmul",
     "quantize",
@@ -147,12 +174,36 @@ def is_sparse(obj) -> bool:
 
 
 def nm_matmul(x: jax.Array, w, *,
-              block: Optional[tuple[int, int, int]] = None) -> jax.Array:
-    """y = x @ densify(w) for an :class:`NMWeight` or int8
-    :class:`QNMWeight`; dispatch (reference vs Pallas, tile sizes, and
-    the float-vs-int8 kernel family) is decided by ``w.kernel_policy``
-    and the weight's type — see the module docstring."""
-    return _nm_matmul_typed(x, w, block=block)
+              block: Optional[tuple[int, int, int]] = None,
+              epilogue: Optional[Epilogue] = None) -> jax.Array:
+    """y = epilogue(x @ densify(w)) for an :class:`NMWeight` or int8
+    :class:`QNMWeight`; dispatch (reference vs Pallas, decode vs prefill
+    family, tile sizes, and the float-vs-int8 kernel family) is decided
+    by ``w.kernel_policy``, the weight's type and the flattened row
+    count — see the module docstring. ``epilogue`` is an
+    :class:`Epilogue` (bias + activation) fused into the decode kernels'
+    writeback."""
+    return _nm_matmul_typed(x, w, block=block, epilogue=epilogue)
+
+
+def explain_dispatch(x_shape, w, *, epilogue: Optional[Epilogue] = None,
+                     dtype=None) -> DispatchRecord:
+    """The :class:`DispatchRecord` that ``nm_matmul(x, w)`` (or, for an
+    axis-1 weight, ``indexmac_gather(w, b)``) *would* produce for an
+    operand of shape ``x_shape`` — dispatch family, chosen kernel, block
+    triple and padded geometry — without executing anything. Raises the
+    same typed errors as the real call, including
+    :class:`KernelForceError` for a forced weight whose shape cannot
+    normalize."""
+    return _explain_dispatch(x_shape, w, epilogue=epilogue, dtype=dtype)
+
+
+def indexmac_gather(w, b: jax.Array, *,
+                    block: Optional[tuple[int, int, int]] = None) -> jax.Array:
+    """C = densify(w) @ b for a row-compressed A (``w.axis == 1``) — the
+    literal gather-port orientation of the paper. Accepts an
+    :class:`NMWeight` or int8 :class:`QNMWeight`."""
+    return _indexmac_gather(w, b, block=block)
 
 
 def sparsify_conv(

@@ -60,10 +60,13 @@ class KernelPolicy:
               padding waste limit is ignored (benchmarking / pinning).
     block: optional ``(block_m, block_n, block_k)`` override; ``None``
       consults the autotune cache and falls back to the default triple.
+    decode_block: same, for the skinny-M decode kernel family (its
+      autotune cache keys are separate, so its override is too).
     """
 
     mode: KernelMode = "off"
     block: Optional[tuple[int, int, int]] = None
+    decode_block: Optional[tuple[int, int, int]] = None
 
     def __post_init__(self):
         if self.mode not in ("off", "auto", "force"):
@@ -71,6 +74,8 @@ class KernelPolicy:
                              "('off', 'auto', 'force')")
         if self.block is not None:
             object.__setattr__(self, "block", tuple(self.block))
+        if self.decode_block is not None:
+            object.__setattr__(self, "decode_block", tuple(self.decode_block))
 
 
 @dataclasses.dataclass(frozen=True)

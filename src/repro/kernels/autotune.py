@@ -35,6 +35,9 @@ from repro.core.sparsity import NMConfig
 from repro.kernels.padding import plan_nm_matmul
 
 DEFAULT_BLOCK = (256, 256, 2048)
+# decode family: M is one sublane by construction, K blocks are kept
+# small enough that a single k step covers typical reduced projections.
+DEFAULT_DECODE_BLOCK = (8, 256, 1024)
 _CACHE_VERSION = "v1"
 
 _LOCK = threading.Lock()
@@ -49,8 +52,15 @@ def cache_path() -> str:
     )
 
 
-def _key(m: int, n: int, k: int, cfg: NMConfig, dtype, backend: str) -> str:
-    return f"{_CACHE_VERSION}|{backend}|{jnp.dtype(dtype).name}|{cfg.tag}|{m}x{k}x{n}"
+def _key(m: int, n: int, k: int, cfg: NMConfig, dtype, backend: str,
+         family: str = "") -> str:
+    """Cache key; ``family`` distinguishes kernel families that sweep
+    different grids over the same problem (the decode family gets a
+    ``|decode`` suffix — the default family keeps the v1 key shape, so
+    existing caches stay valid)."""
+    base = (f"{_CACHE_VERSION}|{backend}|{jnp.dtype(dtype).name}|{cfg.tag}|"
+            f"{m}x{k}x{n}")
+    return f"{base}|{family}" if family else base
 
 
 def _load_locked() -> None:
@@ -100,21 +110,30 @@ def clear_memory_cache() -> None:
         _LOADED_FROM = None
 
 
-def cached_block(m: int, n: int, k: int, cfg: NMConfig, dtype) -> Optional[tuple]:
+def cached_block(m: int, n: int, k: int, cfg: NMConfig, dtype,
+                 family: str = "") -> Optional[tuple]:
     backend = jax.default_backend()
     with _LOCK:
         _load_locked()
-        return _MEM.get(_key(m, n, k, cfg, dtype, backend))
+        return _MEM.get(_key(m, n, k, cfg, dtype, backend, family))
 
 
-def candidate_blocks(m: int, n: int, k: int, cfg: NMConfig) -> list[tuple]:
+def candidate_blocks(m: int, n: int, k: int, cfg: NMConfig,
+                     family: str = "") -> list[tuple]:
     """Plan-feasible, deduplicated candidate triples for this problem.
 
     On CPU the kernel runs in interpret mode (each probe is orders of
     magnitude slower than compiled Mosaic), so the grid is trimmed — the
     cache key carries the backend, so a CPU-tuned entry never shadows a
-    TPU sweep."""
-    if jax.default_backend() == "cpu":
+    TPU sweep. The decode family pins block_m to one sublane (its M is
+    always 8) and sweeps only the streaming (n, k) tiles."""
+    if family == "decode":
+        grid_m = (8,)
+        if jax.default_backend() == "cpu":
+            grid_n, grid_k = (128, 256), (256, 1024)
+        else:
+            grid_n, grid_k = (128, 256, 512), (256, 512, 1024, 2048)
+    elif jax.default_backend() == "cpu":
         grid_m, grid_n, grid_k = (8, 128), (128, 256), (256, 1024)
     else:
         grid_m, grid_n, grid_k = (8, 64, 128, 256), (128, 256, 512), (
@@ -139,18 +158,22 @@ def tune(
     dtype=jnp.float32,
     candidates: Optional[Sequence[tuple]] = None,
     repeats: int = 3,
+    family: str = "",
 ) -> tuple:
     """Time every candidate on real operands; persist and return the winner.
 
     ``dtype`` is the *value* dtype of the compressed operand and selects
-    the kernel family: a float dtype sweeps the float kernel on float
-    operands; ``int8`` sweeps the dequantizing kernel
-    (``run_pallas_padded_q``) on int8 values + per-column scales — the
-    int8 family has its own cache keys (the dtype is part of the key),
-    so its winners never shadow the float sweep's.
+    the quantization family: a float dtype sweeps the float kernel on
+    float operands; ``int8`` sweeps the dequantizing kernel on int8
+    values + per-column scales — the int8 family has its own cache keys
+    (the dtype is part of the key), so its winners never shadow the
+    float sweep's. ``family="decode"`` sweeps the skinny-M decode
+    kernels instead, under their own ``|decode``-suffixed keys.
     """
     from repro.core.sparsity import compress_nm, random_nm_matrix
     from repro.kernels.indexmac.ops import (
+        run_pallas_decode,
+        run_pallas_decode_q,
         run_pallas_padded,
         run_pallas_padded_q,
     )
@@ -158,6 +181,7 @@ def tune(
     backend = jax.default_backend()
     interpret = backend == "cpu"
     quantized = jnp.dtype(dtype) == jnp.dtype(jnp.int8)
+    decode = family == "decode"
     kk = -(-k // cfg.m) * cfg.m  # operand K must hold whole blocks
     w = random_nm_matrix(jax.random.PRNGKey(0), (kk, n), cfg, axis=0)
     vals, idx = compress_nm(w, cfg, axis=0)
@@ -167,16 +191,29 @@ def tune(
         scales = jnp.full((n,), 1.0 / 64.0, jnp.float32)
         x = jax.random.normal(jax.random.PRNGKey(1), (m, kk))
 
-        def run(x, vals, idx, *, cfg, plan, interpret):
-            return run_pallas_padded_q(
-                x, vals, idx, scales, cfg=cfg, plan=plan, interpret=interpret)
+        if decode:
+            def run(x, vals, idx, *, cfg, plan, interpret):
+                return run_pallas_decode_q(
+                    x, vals, idx, scales, None, cfg=cfg, plan=plan,
+                    activation=None, interpret=interpret)
+        else:
+            def run(x, vals, idx, *, cfg, plan, interpret):
+                return run_pallas_padded_q(
+                    x, vals, idx, scales, cfg=cfg, plan=plan,
+                    interpret=interpret)
     else:
         x = jax.random.normal(jax.random.PRNGKey(1), (m, kk)).astype(dtype)
         vals = vals.astype(dtype)
-        run = run_pallas_padded
+        if decode:
+            def run(x, vals, idx, *, cfg, plan, interpret):
+                return run_pallas_decode(
+                    x, vals, idx, None, cfg=cfg, plan=plan,
+                    activation=None, interpret=interpret)
+        else:
+            run = run_pallas_padded
 
     best, best_t = None, float("inf")
-    for block in candidates or candidate_blocks(m, n, kk, cfg):
+    for block in candidates or candidate_blocks(m, n, kk, cfg, family):
         plan = plan_nm_matmul(m, n, kk, cfg, block)
         if plan is None:
             continue
@@ -193,10 +230,11 @@ def tune(
         if t < best_t:
             best, best_t = plan.block, t
     if best is None:
-        best = plan_nm_matmul(m, n, kk, cfg, DEFAULT_BLOCK).block
+        default = DEFAULT_DECODE_BLOCK if decode else DEFAULT_BLOCK
+        best = plan_nm_matmul(m, n, kk, cfg, default).block
     with _LOCK:
         _load_locked()
-        _MEM[_key(m, n, k, cfg, dtype, backend)] = best
+        _MEM[_key(m, n, k, cfg, dtype, backend, family)] = best
         _save_locked()
     return best
 
@@ -208,21 +246,24 @@ def _time_once(fn, x, vals, idx, cfg, plan, interpret) -> float:
 
 
 def best_block(
-    m: int, n: int, k: int, cfg: NMConfig, dtype=jnp.float32
+    m: int, n: int, k: int, cfg: NMConfig, dtype=jnp.float32,
+    family: str = "",
 ) -> tuple:
     """Hot-path lookup: cache hit, else sweep iff REPRO_AUTOTUNE=1, else
-    the default triple (clamped to the problem later by the pad plan)."""
-    hit = cached_block(m, n, k, cfg, dtype)
+    the family default triple (clamped later by the pad plan)."""
+    hit = cached_block(m, n, k, cfg, dtype, family)
     if hit is not None:
         return hit
     if os.environ.get("REPRO_AUTOTUNE") == "1":
-        return tune(m, n, k, cfg, dtype)
-    return DEFAULT_BLOCK
+        return tune(m, n, k, cfg, dtype, family=family)
+    return DEFAULT_DECODE_BLOCK if family == "decode" else DEFAULT_BLOCK
 
 
 def ensure_tuned(
-    m: int, n: int, k: int, cfg: NMConfig, dtype=jnp.float32
+    m: int, n: int, k: int, cfg: NMConfig, dtype=jnp.float32,
+    family: str = "",
 ) -> tuple:
     """Sweep-if-missing, for callers that want to pre-pay (serving warmup,
     benchmarks) regardless of REPRO_AUTOTUNE."""
-    return cached_block(m, n, k, cfg, dtype) or tune(m, n, k, cfg, dtype)
+    return cached_block(m, n, k, cfg, dtype, family) or tune(
+        m, n, k, cfg, dtype, family=family)

@@ -1,0 +1,82 @@
+"""Fused-epilogue spec for the compressed-GEMM entry point.
+
+A decode-step GEMM is memory-bound: the matmul output is tiny (M <= 8
+rows), so any separate XLA op that re-reads it — dequant scale, bias
+add, activation — costs another round trip over the output bytes plus
+kernel-launch latency that dominates at M=1. :class:`Epilogue` names
+the two things a projection does to its accumulator (``bias`` add and a
+pointwise ``activation``) so the Pallas decode kernels can run them at
+accumulator writeback instead; the reference implementations apply the
+*same* composition, which keeps kernel-vs-reference parity exact on the
+integer lattice.
+
+The composition contract every implementation follows::
+
+    y32 = f32(x) @ f32(densify(w))          # f32 accumulation
+    y32 = y32 * scales                      # int8 family only
+    y32 = y32 + f32(bias)                   # when bias is not None
+    y32 = ACTIVATIONS[activation](y32)      # when activation is not None
+    y   = y32.astype(out_dtype)
+
+``activation`` is a *name* (static, part of the compiled kernel), never
+a callable — kernels specialize on it. ``bias`` is a ``(N,)`` array
+operand (traced like any other).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ACTIVATIONS", "Epilogue", "apply_epilogue_f32", "resolve_epilogue"]
+
+ACTIVATIONS = {
+    "relu": lambda y: jnp.maximum(y, 0.0),
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu_sq": lambda y: jnp.square(jnp.maximum(y, 0.0)),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """What a projection fuses into the GEMM writeback.
+
+    bias: optional ``(N,)`` array added to the f32 accumulator.
+    activation: optional name from :data:`ACTIVATIONS`, applied after
+      the bias add (still in f32, before the output-dtype cast).
+    """
+
+    bias: Optional[jax.Array] = None
+    activation: Optional[str] = None
+
+    def __post_init__(self):
+        if self.activation is not None and self.activation not in ACTIVATIONS:
+            raise ValueError(
+                f"unknown epilogue activation {self.activation!r}; known: "
+                f"{sorted(ACTIVATIONS)}")
+
+
+def resolve_epilogue(epilogue: Optional[Epilogue]):
+    """Destructure into the (bias operand, static activation name) pair
+    the kernels consume; ``None`` means the identity epilogue."""
+    if epilogue is None:
+        return None, None
+    if not isinstance(epilogue, Epilogue):
+        raise TypeError(
+            f"epilogue must be an Epilogue or None, got "
+            f"{type(epilogue).__name__}")
+    return epilogue.bias, epilogue.activation
+
+
+def apply_epilogue_f32(y32: jax.Array, bias: Optional[jax.Array],
+                       activation: Optional[str]) -> jax.Array:
+    """The shared f32 composition — reference impls and the non-decode
+    fallback call this so 'fused' and 'unfused' are the same arithmetic."""
+    if bias is not None:
+        y32 = y32 + bias.astype(jnp.float32)
+    if activation is not None:
+        y32 = ACTIVATIONS[activation](y32)
+    return y32

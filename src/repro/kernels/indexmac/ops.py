@@ -1,36 +1,54 @@
-"""Public ops for the indexmac kernel: `nm_matmul` (typed) and
-`nm_matmul_raw` (positional compat wrapper).
+"""The compressed-GEMM op layer: one typed entry point, four dispatch
+families, fused epilogues.
 
-``nm_matmul(x, w)`` consumes an :class:`repro.core.nmweight.NMWeight`:
-the weight's own ``NMConfig`` and :class:`KernelPolicy` drive dispatch —
-``off`` pins the XLA reference, ``auto`` takes the padded Pallas kernel
-when the shape normalizes within the waste limit, ``force`` ignores the
-limit. ``nm_matmul_raw(x, vals, idx, cfg, ...)`` keeps the old
-positional surface for benchmarks and kernel-level tests.
+``nm_matmul(x, w, *, epilogue=None)`` consumes an
+:class:`repro.core.nmweight.NMWeight` or an int8
+:class:`repro.quant.qnmweight.QNMWeight`: the weight's own ``NMConfig``
+and :class:`KernelPolicy` drive dispatch — ``off`` pins the XLA
+reference, ``auto`` takes a Pallas kernel when the shape normalizes
+within the family's waste limit, ``force`` ignores the limit (and
+*raises* :class:`repro.kernels.registry.KernelForceError` when no legal
+kernel geometry exists, instead of silently serving reference timings).
 
-Dispatch goes through the kernel registry (`repro.kernels.registry`):
-the padded Pallas implementation normalizes arbitrary (M, K, N) up to a
-tileable geometry — zero-padding x and the compressed (vals, idx) pair
-and slicing the output — so real transformer shapes execute the kernel
-(interpret=True on CPU so the kernel body is validated here; compiled
-Mosaic on real TPUs) instead of silently falling back to the dense
-reference. Blocks come from the weight's policy, the caller, the
-autotune cache, or the default triple, in that order. The reference
-implementation remains registered as the priority-0 fallback.
+Dispatch families (the registry selects by M-threshold, not by falling
+back to reference):
 
-Training backward (unchanged by padding — it works on logical shapes):
+  nm_matmul          float values, M > REPRO_DECODE_M_MAX (prefill /
+                     training shapes; (mi, ni, ki)-tiled kernel)
+  nm_matmul_q        int8 values, same shapes (dequantizing kernel)
+  nm_matmul_decode   float values, M <= REPRO_DECODE_M_MAX (default 8):
+                     the skinny-M kernel of
+                     :mod:`repro.kernels.indexmac.decode_kernel`, with
+                     the epilogue fused into the accumulator writeback
+  nm_matmul_decode_q int8 decode sibling (scales fused too)
 
-  y     = x @ W,           W = decompress(vals, idx)
-  dx    = dy @ W^T
-  dvals = gather_{kept positions}(x^T @ dy)     (straight-through on idx)
+The :class:`repro.kernels.epilogue.Epilogue` spec (bias + activation
+name) is honored on *every* path: decode kernels fuse it at writeback;
+the non-decode families apply the identical f32 composition after the
+GEMM; the reference implementations mirror it exactly — so parity is
+bit-exact on the integer lattice across all eight implementations.
 
-The backward keeps the compressed representation closed under training
-(compressed fine-tuning); the paper's prune->retrain flow additionally uses
-masked-dense training in `repro/training`.
+``explain_dispatch(x_shape, w)`` answers "which family/kernel/block/pad
+plan *would* run" without executing anything — the public dry-run used
+by benchmarks instead of sniffing the record history.
+
+The positional surfaces (``nm_matmul_raw`` and friends) are deprecated:
+they live in :mod:`repro.kernels.raw` and warn on use; the non-warning
+``nm_matmul_positional`` / ``nm_matmul_q_positional`` internals remain
+for kernel-level tests.
+
+Training backward (both float families; padding never changes it — it
+works on logical shapes, via the differentiable reference composition):
+
+  y     = act(x @ W + bias),   W = decompress(vals, idx)
+  dx    = (dy * act'(..)) @ W^T
+  dvals = gather_{kept positions}(x^T @ (dy * act'(..)))
+  dbias = sum over rows of (dy * act'(..))     (straight-through on idx)
 """
 from __future__ import annotations
 
 import functools
+import math
 import os
 from typing import Optional
 
@@ -40,10 +58,16 @@ import jax.numpy as jnp
 from repro.core.nmweight import NMWeight
 from repro.core.sparsity import NMConfig, decompress_nm
 from repro.kernels import autotune, registry
+from repro.kernels.epilogue import apply_epilogue_f32, resolve_epilogue
+from repro.kernels.indexmac.decode_kernel import (
+    nm_spmm_pallas_decode,
+    nm_spmm_pallas_decode_q,
+)
 from repro.kernels.indexmac.kernel import nm_spmm_pallas, nm_spmm_pallas_q
 from repro.kernels.indexmac.ref import nm_matmul_q_ref, nm_matmul_ref
 from repro.kernels.padding import (
     PadPlan,
+    decode_pad_waste_limit,
     pad_nm_operands,
     pad_waste_limit,
     plan_nm_matmul,
@@ -53,6 +77,105 @@ from repro.quant.qnmweight import QNMWeight
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def decode_m_max() -> int:
+    """Largest M (flattened row count) routed to the decode families."""
+    return int(os.environ.get("REPRO_DECODE_M_MAX", 8))
+
+
+def _pin_compressed(vals, idx):
+    if os.environ.get("REPRO_GATHER_COMPRESSED") == "1":
+        # Pin the compressed operands to (None, "model") so the FSDP
+        # all-gather over "data" moves the COMPRESSED bytes (vals+idx,
+        # 0.375-0.75x dense) and decompression runs shard-locally — without
+        # this, SPMD may decompress on the home shards and gather the
+        # dense W (EXPERIMENTS.md §Perf P3).
+        from repro.parallel.hints import shard_hint_leaves
+
+        vals, idx = shard_hint_leaves((vals, idx), None, "model")
+    return vals, idx
+
+
+def _validate_pair(vals, idx, k, cfg):
+    if vals.shape[0] * cfg.m != k * cfg.n:
+        raise ValueError(
+            f"vals rows {vals.shape[0]} inconsistent with K={k} and {cfg.tag}"
+        )
+    if idx.shape != vals.shape:
+        raise ValueError("idx/vals shape mismatch")
+
+
+# ---------------------------------------------------------------------------
+# routing: (M, K, N) + policy -> dispatch family + pad plan
+# ---------------------------------------------------------------------------
+
+
+def _route(mm, nn, kk, cfg, dtype, use_kernel, force, block, decode_block,
+           quantized):
+    """Resolve the dispatch family, block triple and pad plan for one
+    call — shared by the executing paths and :func:`explain_dispatch`,
+    so the explanation can never drift from the real routing."""
+    decode = mm <= decode_m_max()
+    family = "decode" if decode else ""
+    op = ("nm_matmul_decode" if decode else "nm_matmul") + (
+        "_q" if quantized else "")
+    key_dtype = jnp.int8 if quantized else dtype
+    plan = None
+    if use_kernel:  # skip block resolution (cache I/O, possible inline
+        # sweep under REPRO_AUTOTUNE=1) when the kernel can't be taken
+        blk = decode_block if decode else block
+        if blk is None:
+            blk = autotune.best_block(mm, nn, kk, cfg, key_dtype,
+                                      family=family)
+        plan = plan_nm_matmul(mm, nn, kk, cfg, tuple(blk))
+        if plan is None and force:
+            raise registry.KernelForceError(
+                f"KernelPolicy('force') on a "
+                f"{'QNMWeight' if quantized else 'NMWeight'} compressed "
+                f"along axis 0 with pattern {cfg.tag}: shape "
+                f"M={mm} K={kk} N={nn} does not normalize to any legal "
+                f"kernel geometry, and force forbids the reference "
+                f"fallback")
+    ctx = registry.make_ctx(
+        (mm, kk, nn), nm=cfg, use_kernel=use_kernel, plan=plan,
+        dtype=key_dtype, force=force,
+    )
+    return op, plan, ctx
+
+
+def _pallas_supports(ctx: dict) -> Optional[str]:
+    if not ctx["use_kernel"]:
+        return "use_kernel=False"
+    plan = ctx["plan"]
+    if plan is None:
+        return "shape not normalizable"
+    if ctx.get("force"):
+        return None  # KernelPolicy "force": waste limit ignored
+    limit = pad_waste_limit()
+    if plan.waste > limit:
+        return f"padding waste {plan.waste:.2f}x > limit {limit:.2f}x"
+    return None
+
+
+def _decode_supports(ctx: dict) -> Optional[str]:
+    if not ctx["use_kernel"]:
+        return "use_kernel=False"
+    plan = ctx["plan"]
+    if plan is None:
+        return "shape not normalizable"
+    if ctx.get("force"):
+        return None
+    limit = decode_pad_waste_limit()
+    if plan.waste_nk > limit:
+        return (f"N/K padding waste {plan.waste_nk:.2f}x > decode limit "
+                f"{limit:.2f}x")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# prefill-shaped family (M > decode_m_max): (mi, ni, ki)-tiled kernel
+# ---------------------------------------------------------------------------
 
 
 def run_pallas_padded(
@@ -74,20 +197,6 @@ def run_pallas_padded(
     return y[: plan.m, : plan.n]
 
 
-def _pallas_supports(ctx: dict) -> Optional[str]:
-    if not ctx["use_kernel"]:
-        return "use_kernel=False"
-    plan = ctx["plan"]
-    if plan is None:
-        return "shape not normalizable"
-    if ctx.get("force"):
-        return None  # KernelPolicy "force": waste limit ignored
-    limit = pad_waste_limit()
-    if plan.waste > limit:
-        return f"padding waste {plan.waste:.2f}x > limit {limit:.2f}x"
-    return None
-
-
 @registry.register("nm_matmul", "pallas_padded", priority=100,
                    supports=_pallas_supports, uses_plan=True)
 def _run_pallas_impl(x2, vals, idx, *, cfg, plan, interpret):
@@ -99,11 +208,6 @@ def _run_pallas_impl(x2, vals, idx, *, cfg, plan, interpret):
 @registry.register("nm_matmul", "reference", priority=0)
 def _run_ref_impl(x2, vals, idx, *, cfg, plan, interpret):
     return nm_matmul_ref(x2, vals, idx, cfg)
-
-
-# ---------------------------------------------------------------------------
-# quantized (int8-value) family — its own dispatch op and autotune keys
-# ---------------------------------------------------------------------------
 
 
 def run_pallas_padded_q(
@@ -144,107 +248,331 @@ def _run_ref_q_impl(x2, vals, idx, scales, *, cfg, plan, interpret):
     return nm_matmul_q_ref(x2, vals, idx, scales, cfg)
 
 
+# ---------------------------------------------------------------------------
+# decode-shaped families (M <= decode_m_max): skinny-M kernel, fused epilogue
+# ---------------------------------------------------------------------------
+
+
+def run_pallas_decode(
+    x2: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    bias: Optional[jax.Array],
+    *,
+    cfg: NMConfig,
+    plan: PadPlan,
+    activation: Optional[str],
+    interpret: bool,
+) -> jax.Array:
+    """Pad to the plan and run the fused decode kernel. Padded bias
+    columns are zero and all epilogue activations fix 0 (act(0) == 0 for
+    relu/gelu/silu/relu_sq), so the slice-back stays exact."""
+    xp, vp, ip = pad_nm_operands(x2, vals, idx, plan, cfg)
+    bp = bias
+    if bias is not None and plan.pn > plan.n:
+        bp = jnp.pad(bias, (0, plan.pn - plan.n))
+    _, bn, bk = plan.block
+    y = nm_spmm_pallas_decode(
+        xp, vp, ip, bp, cfg=cfg, block_n=bn, block_k=bk,
+        activation=activation, interpret=interpret,
+    )
+    return y[: plan.m, : plan.n]
+
+
+@registry.register("nm_matmul_decode", "pallas_decode", priority=100,
+                   supports=_decode_supports, uses_plan=True)
+def _run_pallas_decode_impl(x2, vals, idx, bias, *, cfg, plan, activation,
+                            interpret):
+    return run_pallas_decode(
+        x2, vals, idx, bias, cfg=cfg, plan=plan, activation=activation,
+        interpret=interpret,
+    )
+
+
+@registry.register("nm_matmul_decode", "reference_decode", priority=0)
+def _run_ref_decode_impl(x2, vals, idx, bias, *, cfg, plan, activation,
+                         interpret):
+    w = decompress_nm(vals, idx, cfg, axis=0)
+    y32 = jnp.dot(
+        x2.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return apply_epilogue_f32(y32, bias, activation).astype(x2.dtype)
+
+
+def run_pallas_decode_q(
+    x2: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    scales: jax.Array,
+    bias: Optional[jax.Array],
+    *,
+    cfg: NMConfig,
+    plan: PadPlan,
+    activation: Optional[str],
+    interpret: bool,
+) -> jax.Array:
+    """int8 decode sibling: padded columns get unit scales + zero bias."""
+    xp, vp, ip = pad_nm_operands(x2, vals, idx, plan, cfg)
+    sp, bp = scales, bias
+    if plan.pn > plan.n:
+        sp = jnp.pad(scales, (0, plan.pn - plan.n), constant_values=1.0)
+        if bias is not None:
+            bp = jnp.pad(bias, (0, plan.pn - plan.n))
+    _, bn, bk = plan.block
+    y = nm_spmm_pallas_decode_q(
+        xp, vp, ip, sp, bp, cfg=cfg, block_n=bn, block_k=bk,
+        activation=activation, interpret=interpret,
+    )
+    return y[: plan.m, : plan.n]
+
+
+@registry.register("nm_matmul_decode_q", "pallas_decode_q", priority=100,
+                   supports=_decode_supports, uses_plan=True)
+def _run_pallas_decode_q_impl(x2, vals, idx, scales, bias, *, cfg, plan,
+                              activation, interpret):
+    return run_pallas_decode_q(
+        x2, vals, idx, scales, bias, cfg=cfg, plan=plan,
+        activation=activation, interpret=interpret,
+    )
+
+
+@registry.register("nm_matmul_decode_q", "reference_decode_q", priority=0)
+def _run_ref_decode_q_impl(x2, vals, idx, scales, bias, *, cfg, plan,
+                           activation, interpret):
+    w8 = decompress_nm(vals, idx, cfg, axis=0)
+    y32 = jnp.dot(
+        x2.astype(jnp.float32), w8.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    y32 = y32 * scales.astype(jnp.float32)[None, :]
+    return apply_epilogue_f32(y32, bias, activation).astype(x2.dtype)
+
+
+# ---------------------------------------------------------------------------
+# typed entry point
+# ---------------------------------------------------------------------------
+
+
+def _epilogue_after(y, bias, activation):
+    """Non-decode paths apply the identical f32 composition after the
+    GEMM (the decode kernels fuse it; same arithmetic either way)."""
+    if bias is None and activation is None:
+        return y
+    return apply_epilogue_f32(
+        y.astype(jnp.float32), bias, activation).astype(y.dtype)
+
+
 def nm_matmul(x: jax.Array, w, *,
-              block: Optional[tuple[int, int, int]] = None) -> jax.Array:
-    """y = x @ densify(w); x: (..., K), w: an NMWeight or QNMWeight
-    compressed along its axis 0 (the contraction dim).
+              block: Optional[tuple[int, int, int]] = None,
+              epilogue=None) -> jax.Array:
+    """y = epilogue(x @ densify(w)); x: (..., K), w: an NMWeight or
+    QNMWeight compressed along its axis 0 (the contraction dim).
 
     The weight's own metadata drives dispatch: ``w.nm`` is the pattern,
-    ``w.kernel_policy`` picks reference/Pallas and the block triple, and
-    the weight's *type* picks the family — int8 weights route to the
-    dequantizing kernel (``nm_matmul_q``), which has its own autotune
-    keys. ``block`` overrides the policy's block for this call
-    (benchmarks).
+    ``w.kernel_policy`` picks reference/Pallas and the block triples,
+    the weight's *type* picks the quantization family (int8 weights
+    route to the dequantizing kernels, which have their own autotune
+    keys), and the flattened row count picks prefill-shaped vs decode
+    families. ``epilogue`` is an :class:`repro.kernels.epilogue.Epilogue`
+    (bias + activation) fused into the decode kernels' writeback.
+    ``block`` overrides the policy's block for this call (benchmarks).
     """
+    bias, activation = resolve_epilogue(epilogue)
     if isinstance(w, QNMWeight):
-        return nm_matmul_q(x, w, block=block)
+        _check_axis0(w, "nm_matmul")
+        pol = w.kernel_policy
+        return _nm_matmul_q_core(
+            x, w.vals, w.idx, w.scales, bias, w.nm, activation,
+            pol.mode != "off", block or pol.block,
+            block or pol.decode_block, pol.mode == "force")
     if not isinstance(w, NMWeight):
         raise TypeError(
             f"nm_matmul expects an NMWeight or QNMWeight, got "
             f"{type(w).__name__}; wrap compressed operands with "
             "repro.api.sparsify / repro.api.quantize, or use "
-            "nm_matmul_raw for positional (vals, idx, cfg) calls"
+            "repro.kernels.raw for positional (vals, idx, cfg) calls"
         )
+    _check_axis0(w, "nm_matmul")
+    pol = w.kernel_policy
+    return _nm_matmul_core(
+        x, w.vals, w.idx, bias, w.nm, activation,
+        pol.mode != "off", block or pol.block,
+        block or pol.decode_block, pol.mode == "force")
+
+
+def _check_axis0(w, name):
     if w.axis != 0:
         raise ValueError(
-            f"nm_matmul needs the weight compressed along axis 0 (the "
+            f"{name} needs the weight compressed along axis 0 (the "
             f"contraction dim of y = x @ W); got axis={w.axis}"
         )
-    pol = w.kernel_policy
-    blk = block if block is not None else pol.block
-    return nm_matmul_raw(x, w.vals, w.idx, w.nm, pol.mode != "off", blk,
-                         pol.mode == "force")
 
 
 def nm_matmul_q(x: jax.Array, w: QNMWeight, *,
-                block: Optional[tuple[int, int, int]] = None) -> jax.Array:
-    """y = x @ densify(w) for an int8 :class:`QNMWeight` (inference
-    path; the optimizer never trains int8 leaves). Dispatch mirrors
-    :func:`nm_matmul` but through the ``nm_matmul_q`` registry family,
-    whose autotune cache keys carry the int8 value dtype."""
+                block: Optional[tuple[int, int, int]] = None,
+                epilogue=None) -> jax.Array:
+    """Quantized alias of :func:`nm_matmul` (the unified entry point
+    type-dispatches; this name survives for callers that want the int8
+    family asserted by construction)."""
     if not isinstance(w, QNMWeight):
         raise TypeError(
             f"nm_matmul_q expects a QNMWeight, got {type(w).__name__}; "
             "produce one with repro.api.quantize"
         )
-    if w.axis != 0:
-        raise ValueError(
-            f"nm_matmul_q needs the weight compressed along axis 0 (the "
-            f"contraction dim of y = x @ W); got axis={w.axis}"
-        )
-    pol = w.kernel_policy
-    blk = block if block is not None else pol.block
-    return nm_matmul_q_raw(x, w.vals, w.idx, w.scales, w.nm,
-                           pol.mode != "off", blk, pol.mode == "force")
+    return nm_matmul(x, w, block=block, epilogue=epilogue)
 
 
-def nm_matmul_q_raw(
-    x: jax.Array,
-    vals: jax.Array,
-    idx: jax.Array,
-    scales: jax.Array,
-    cfg: NMConfig,
-    use_kernel: bool = True,
-    block: Optional[tuple[int, int, int]] = None,
-    force: bool = False,
-) -> jax.Array:
-    """Positional quantized surface: y = (x @ decompress(vals, idx)) *
-    scales[col]; x: (..., K), vals/idx: int8 (Kc, N), scales: (N,).
+# float core: custom_vjp so compressed fine-tuning trains through every
+# family (the bwd runs the differentiable reference composition on
+# logical shapes — padding and family choice never change it)
 
-    ``block=None`` consults the autotune cache under the int8 family's
-    own keys (value dtype int8 — never shared with the float sweep).
-    """
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _nm_matmul_core(x, vals, idx, bias, cfg, activation, use_kernel, block,
+                    decode_block, force):
+    return _core_fwd_impl(x, vals, idx, bias, cfg, activation, use_kernel,
+                          block, decode_block, force)
+
+
+def _core_fwd_impl(x, vals, idx, bias, cfg, activation, use_kernel, block,
+                   decode_block, force):
+    vals, idx = _pin_compressed(vals, idx)
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
     mm = x2.shape[0]
     nn = vals.shape[1]
-    if vals.shape[0] * cfg.m != k * cfg.n:
-        raise ValueError(
-            f"vals rows {vals.shape[0]} inconsistent with K={k} and {cfg.tag}"
+    _validate_pair(vals, idx, k, cfg)
+    op, plan, ctx = _route(mm, nn, k, cfg, x.dtype, use_kernel, force,
+                           block, decode_block, quantized=False)
+    if op == "nm_matmul_decode":
+        y2 = registry.dispatch(
+            op, ctx, x2, vals, idx, bias,
+            cfg=cfg, plan=plan, activation=activation, interpret=_on_cpu(),
         )
-    if idx.shape != vals.shape:
-        raise ValueError("idx/vals shape mismatch")
-    plan = None
-    if use_kernel:
-        if block is None:
-            block = autotune.best_block(mm, nn, k, cfg, jnp.int8)
-        plan = plan_nm_matmul(mm, nn, k, cfg, tuple(block))
-    ctx = registry.make_ctx(
-        (mm, k, nn), nm=cfg, use_kernel=use_kernel, plan=plan,
-        dtype=jnp.int8, force=force,
-    )
-    y2 = registry.dispatch(
-        "nm_matmul_q", ctx, x2, vals, idx, scales,
-        cfg=cfg, plan=plan, interpret=_on_cpu(),
-    )
+    else:
+        y2 = registry.dispatch(
+            op, ctx, x2, vals, idx,
+            cfg=cfg, plan=plan, interpret=_on_cpu(),
+        )
+        y2 = _epilogue_after(y2, bias, activation)
     return y2.reshape(*lead, nn)
+
+
+def _core_fwd(x, vals, idx, bias, cfg, activation, use_kernel, block,
+              decode_block, force):
+    y = _core_fwd_impl(x, vals, idx, bias, cfg, activation, use_kernel,
+                       block, decode_block, force)
+    return y, (x, vals, idx, bias)
+
+
+def _core_bwd(cfg, activation, use_kernel, block, decode_block, force, res,
+              dy):
+    x, vals, idx, bias = res
+
+    def ref(x_, vals_, bias_):
+        w = decompress_nm(vals_, idx, cfg, axis=0).astype(jnp.float32)
+        y = jnp.einsum("...k,kn->...n", x_.astype(jnp.float32), w)
+        return apply_epilogue_f32(y, bias_, activation)
+
+    dy32 = dy.astype(jnp.float32)
+    if bias is None:
+        _, vjp = jax.vjp(lambda x_, v_: ref(x_, v_, None), x, vals)
+        dx, dvals = vjp(dy32)
+        dbias = None
+    else:
+        _, vjp = jax.vjp(ref, x, vals, bias)
+        dx, dvals, dbias = vjp(dy32)
+        dbias = dbias.astype(bias.dtype)
+    # decompress_nm is a one-hot einsum in vals: its vjp IS the gather of
+    # the dense grad at the kept positions (straight-through on idx).
+    return (dx.astype(x.dtype), dvals.astype(vals.dtype),
+            jnp.zeros_like(idx), dbias)
+
+
+_nm_matmul_core.defvjp(_core_fwd, _core_bwd)
+
+
+# int8 core: inference-only (the optimizer never trains int8 leaves)
+
+
+def _nm_matmul_q_core(x, vals, idx, scales, bias, cfg, activation,
+                      use_kernel, block, decode_block, force):
+    vals, idx = _pin_compressed(vals, idx)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    mm = x2.shape[0]
+    nn = vals.shape[1]
+    _validate_pair(vals, idx, k, cfg)
+    op, plan, ctx = _route(mm, nn, k, cfg, x.dtype, use_kernel, force,
+                           block, decode_block, quantized=True)
+    if op == "nm_matmul_decode_q":
+        y2 = registry.dispatch(
+            op, ctx, x2, vals, idx, scales, bias,
+            cfg=cfg, plan=plan, activation=activation, interpret=_on_cpu(),
+        )
+    else:
+        y2 = registry.dispatch(
+            op, ctx, x2, vals, idx, scales,
+            cfg=cfg, plan=plan, interpret=_on_cpu(),
+        )
+        y2 = _epilogue_after(y2, bias, activation)
+    return y2.reshape(*lead, nn)
+
+
+# ---------------------------------------------------------------------------
+# dry-run routing: the public explanation surface
+# ---------------------------------------------------------------------------
+
+
+def explain_dispatch(x_shape, w, *, epilogue=None, dtype=None):
+    """The :class:`repro.kernels.registry.DispatchRecord` that
+    ``nm_matmul(x, w)`` *would* produce for an ``x`` of shape
+    ``x_shape`` — family, kernel, block triple and padded geometry —
+    without running anything.
+
+    ``x_shape`` is the activation shape ``(..., K)`` (for a gather-port
+    weight, ``w.axis == 1``, it is the dense B operand's ``(K, N)``).
+    ``dtype`` is the activation dtype for autotune-cache lookup; it
+    defaults to the weight's value dtype (the int8 family always keys on
+    int8 regardless). Raises the same typed errors as the real call —
+    including :class:`KernelForceError` for a forced weight whose shape
+    cannot normalize.
+    """
+    if not isinstance(w, (NMWeight, QNMWeight)):
+        raise TypeError(
+            f"explain_dispatch expects an NMWeight or QNMWeight, got "
+            f"{type(w).__name__}")
+    if w.axis == 1:
+        from repro.kernels.indexmac_gather.ops import explain_gather
+
+        return explain_gather(x_shape, w)
+    _check_axis0(w, "explain_dispatch")
+    resolve_epilogue(epilogue)  # validates; epilogue never changes routing
+    k = x_shape[-1]
+    mm = math.prod(x_shape[:-1]) if len(x_shape) > 1 else 1
+    nn = w.vals.shape[1]
+    _validate_pair(w.vals, w.idx, k, w.nm)
+    pol = w.kernel_policy
+    quantized = isinstance(w, QNMWeight)
+    dtype = dtype if dtype is not None else w.vals.dtype
+    op, plan, ctx = _route(
+        mm, nn, k, w.nm, dtype, pol.mode != "off", pol.mode == "force",
+        pol.block, pol.decode_block, quantized)
+    return registry.explain(op, ctx)
+
+
+# ---------------------------------------------------------------------------
+# positional internals (kernel-level tests) + deprecated re-export shims
+# ---------------------------------------------------------------------------
 
 
 @functools.partial(
     jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
 )
-def nm_matmul_raw(
+def nm_matmul_positional(
     x: jax.Array,
     vals: jax.Array,
     idx: jax.Array,
@@ -253,40 +581,25 @@ def nm_matmul_raw(
     block: Optional[tuple[int, int, int]] = None,
     force: bool = False,
 ) -> jax.Array:
-    """Positional compat surface: y = x @ decompress(vals, idx);
-    x: (..., K), vals/idx: (Kc, N).
-
-    ``block=None`` consults the autotune cache (see
-    ``repro.kernels.autotune``) and falls back to the default triple.
-    ``force=True`` skips the padding waste limit (KernelPolicy "force").
+    """Positional surface: y = x @ decompress(vals, idx); x: (..., K),
+    vals/idx: (Kc, N). Internal (kernel-level tests / the deprecated
+    ``repro.kernels.raw`` wrappers); always the prefill-shaped family —
+    no decode routing, no epilogue. ``block=None`` consults the autotune
+    cache; ``force=True`` skips the padding waste limit.
     """
     return _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block, force)
 
 
 def _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block, force):
-    if os.environ.get("REPRO_GATHER_COMPRESSED") == "1":
-        # Pin the compressed operands to (None, "model") so the FSDP
-        # all-gather over "data" moves the COMPRESSED bytes (vals+idx,
-        # 0.375-0.75x dense) and decompression runs shard-locally — without
-        # this, SPMD may decompress on the home shards and gather the
-        # dense W (EXPERIMENTS.md §Perf P3).
-        from repro.parallel.hints import shard_hint_leaves
-
-        vals, idx = shard_hint_leaves((vals, idx), None, "model")
+    vals, idx = _pin_compressed(vals, idx)
     lead = x.shape[:-1]
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
     mm = x2.shape[0]
     nn = vals.shape[1]
-    if vals.shape[0] * cfg.m != k * cfg.n:
-        raise ValueError(
-            f"vals rows {vals.shape[0]} inconsistent with K={k} and {cfg.tag}"
-        )
-    if idx.shape != vals.shape:
-        raise ValueError("idx/vals shape mismatch")
+    _validate_pair(vals, idx, k, cfg)
     plan = None
-    if use_kernel:  # skip block resolution (cache I/O, possible inline
-        # sweep under REPRO_AUTOTUNE=1) when the kernel can't be taken
+    if use_kernel:
         if block is None:
             block = autotune.best_block(mm, nn, k, cfg, x.dtype)
         plan = plan_nm_matmul(mm, nn, k, cfg, tuple(block))
@@ -322,4 +635,54 @@ def _bwd(cfg, use_kernel, block, force, res, dy):
     return dx, dvals, jnp.zeros_like(idx)
 
 
-nm_matmul_raw.defvjp(_fwd, _bwd)
+nm_matmul_positional.defvjp(_fwd, _bwd)
+
+
+def nm_matmul_q_positional(
+    x: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    scales: jax.Array,
+    cfg: NMConfig,
+    use_kernel: bool = True,
+    block: Optional[tuple[int, int, int]] = None,
+    force: bool = False,
+) -> jax.Array:
+    """Positional quantized surface: y = (x @ decompress(vals, idx)) *
+    scales[col]. Internal; see :func:`nm_matmul_positional`."""
+    vals, idx = _pin_compressed(vals, idx)
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    mm = x2.shape[0]
+    nn = vals.shape[1]
+    _validate_pair(vals, idx, k, cfg)
+    plan = None
+    if use_kernel:
+        if block is None:
+            block = autotune.best_block(mm, nn, k, cfg, jnp.int8)
+        plan = plan_nm_matmul(mm, nn, k, cfg, tuple(block))
+    ctx = registry.make_ctx(
+        (mm, k, nn), nm=cfg, use_kernel=use_kernel, plan=plan,
+        dtype=jnp.int8, force=force,
+    )
+    y2 = registry.dispatch(
+        "nm_matmul_q", ctx, x2, vals, idx, scales,
+        cfg=cfg, plan=plan, interpret=_on_cpu(),
+    )
+    return y2.reshape(*lead, nn)
+
+
+def nm_matmul_raw(*args, **kwargs):
+    """Deprecated import path — moved to :mod:`repro.kernels.raw` (the
+    warning fires there); removed after one release."""
+    from repro.kernels import raw
+
+    return raw.nm_matmul_raw(*args, **kwargs)
+
+
+def nm_matmul_q_raw(*args, **kwargs):
+    """Deprecated import path — moved to :mod:`repro.kernels.raw`."""
+    from repro.kernels import raw
+
+    return raw.nm_matmul_q_raw(*args, **kwargs)

@@ -3,8 +3,10 @@
 ``indexmac_gather(w, b)`` consumes an :class:`NMWeight` whose rows are
 compressed along axis 1 (the paper's A-matrix orientation, C = A @ B);
 nm and the use-kernel decision come from the weight's own metadata.
-``indexmac_gather_spmm`` keeps the positional (vals, idx, cfg) surface
-for benchmarks.
+The positional (vals, idx, cfg) surface is deprecated — it lives in
+:mod:`repro.kernels.raw` as ``indexmac_gather_spmm`` and warns on use;
+``indexmac_gather_positional`` is the non-warning internal for
+kernel-level tests.
 
 Routed through the kernel registry so dispatch decisions (Pallas gather
 port vs. jnp reference) land in the same inspectable record stream as
@@ -116,7 +118,28 @@ def indexmac_gather(
     )
 
 
-def indexmac_gather_spmm(
+def explain_gather(b_shape, w) -> registry.DispatchRecord:
+    """Dry-run routing for the gather-port families: the record
+    ``indexmac_gather(w, b)`` would produce for a dense B operand of
+    shape ``b_shape`` (the ``w.axis == 1`` arm of
+    ``repro.api.explain_dispatch``)."""
+    if w.axis != 1:
+        raise ValueError(
+            "the gather port consumes the paper's A-orientation: rows "
+            f"compressed along axis 1; got axis={w.axis}"
+        )
+    block = w.kernel_policy.block or DEFAULT_BLOCK
+    mr = w.vals.shape[0]
+    k, nc = b_shape
+    ctx = registry.weight_ctx(
+        w, (mr, k, nc), tileable=_tileable(mr, k, nc, w.nm, block),
+    )
+    op = ("indexmac_gather_q" if isinstance(w, QNMWeight)
+          else "indexmac_gather")
+    return registry.explain(op, ctx)
+
+
+def indexmac_gather_positional(
     vals: jax.Array,
     idx: jax.Array,
     b: jax.Array,
@@ -124,7 +147,8 @@ def indexmac_gather_spmm(
     use_kernel: bool = True,
     block: tuple[int, int, int] = DEFAULT_BLOCK,
 ) -> jax.Array:
-    """Positional compat surface (benchmarks, kernel-level tests)."""
+    """Positional surface (kernel-level tests / the deprecated
+    ``repro.kernels.raw.indexmac_gather_spmm`` wrapper)."""
     mr, kc = vals.shape
     k, nc = b.shape
     ctx = registry.make_ctx(
@@ -134,3 +158,11 @@ def indexmac_gather_spmm(
     return registry.dispatch(
         "indexmac_gather", ctx, vals, idx, b, cfg=cfg, block=block
     )
+
+
+def indexmac_gather_spmm(*args, **kwargs):
+    """Deprecated import path — moved to :mod:`repro.kernels.raw` (the
+    warning fires there); removed after one release."""
+    from repro.kernels import raw
+
+    return raw.indexmac_gather_spmm(*args, **kwargs)

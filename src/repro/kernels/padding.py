@@ -33,9 +33,21 @@ _LANE = 128  # last dim granularity
 # is assumed cheaper than the mostly-empty kernel launch.
 _DEFAULT_WASTE_LIMIT = 4.0
 
+# The decode kernel family pads M to one sublane by design (that is the
+# family's whole point), so its limit looks at N/K padding only — and is
+# looser: a decode GEMM is memory-bound, so lane padding on a narrow
+# projection (e.g. a 16-wide KV head padded to one 128 lane) still beats
+# a separate XLA launch per epilogue op.
+_DEFAULT_DECODE_WASTE_LIMIT = 16.0
+
 
 def pad_waste_limit() -> float:
     return float(os.environ.get("REPRO_PAD_WASTE_LIMIT", _DEFAULT_WASTE_LIMIT))
+
+
+def decode_pad_waste_limit() -> float:
+    return float(os.environ.get("REPRO_DECODE_PAD_WASTE_LIMIT",
+                                _DEFAULT_DECODE_WASTE_LIMIT))
 
 
 def _round_up(a: int, b: int) -> int:
@@ -66,6 +78,12 @@ class PadPlan:
     def waste(self) -> float:
         """Padded / logical output-work ratio (1.0 = no padding)."""
         return (self.pm * self.pn * self.pk) / (self.m * self.n * self.k)
+
+    @property
+    def waste_nk(self) -> float:
+        """Waste over N/K only — the decode family's metric (its M
+        padding to one sublane is intrinsic, not a routing signal)."""
+        return (self.pn * self.pk) / (self.n * self.k)
 
 
 def plan_nm_matmul(

@@ -1,0 +1,72 @@
+"""Deprecated positional kernel surface.
+
+These wrappers keep the pre-typed ``(vals, idx, cfg, ...)`` call shape
+alive for exactly one release. Every call emits a
+:class:`DeprecationWarning` whose message starts with
+``repro.kernels.raw`` — CI promotes those to errors (see pyproject
+``filterwarnings``), so no new in-repo call site can appear. The
+API-freeze test in ``tests/test_api.py`` additionally bans the raw
+names outside this module and the op modules that host the shims.
+
+Migration:
+
+==================================  =====================================
+old call                            new call
+==================================  =====================================
+``nm_matmul_raw(x, vals, idx,       ``repro.api.nm_matmul(x, w)`` with
+cfg, ...)``                         ``w = sparsify(...)`` (an NMWeight
+                                    carrying nm + KernelPolicy)
+``nm_matmul_q_raw(x, vals, idx,     ``repro.api.nm_matmul(x, qw)`` with
+scales, cfg, ...)``                 ``qw = quantize(...)`` (a QNMWeight;
+                                    type selects the int8 family)
+``indexmac_gather_spmm(vals, idx,   ``repro.api.indexmac_gather(w, b)``
+b, cfg, ...)``                      with an axis-1 NMWeight
+==================================  =====================================
+"""
+from __future__ import annotations
+
+import warnings
+
+
+def _warn(name: str, repl: str) -> None:
+    warnings.warn(
+        f"repro.kernels.raw.{name} is deprecated and will be removed in "
+        f"the next release; use {repl}",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def nm_matmul_raw(x, vals, idx, cfg, use_kernel=True, block=None,
+                  force=False):
+    """Deprecated: use ``repro.api.nm_matmul(x, w)`` with a typed
+    :class:`NMWeight` (``repro.api.sparsify``)."""
+    from repro.kernels.indexmac import ops
+
+    _warn("nm_matmul_raw",
+          "repro.api.nm_matmul(x, w) with an NMWeight from sparsify()")
+    return ops.nm_matmul_positional(x, vals, idx, cfg, use_kernel, block,
+                                    force)
+
+
+def nm_matmul_q_raw(x, vals, idx, scales, cfg, use_kernel=True, block=None,
+                    force=False):
+    """Deprecated: use ``repro.api.nm_matmul(x, qw)`` with a typed
+    :class:`QNMWeight` (``repro.api.quantize``)."""
+    from repro.kernels.indexmac import ops
+
+    _warn("nm_matmul_q_raw",
+          "repro.api.nm_matmul(x, qw) with a QNMWeight from quantize()")
+    return ops.nm_matmul_q_positional(x, vals, idx, scales, cfg, use_kernel,
+                                      block, force)
+
+
+def indexmac_gather_spmm(vals, idx, b, cfg, use_kernel=True, block=None):
+    """Deprecated: use ``repro.api.indexmac_gather(w, b)`` with an
+    axis-1 :class:`NMWeight`."""
+    from repro.kernels.indexmac_gather import ops
+
+    _warn("indexmac_gather_spmm",
+          "repro.api.indexmac_gather(w, b) with an axis-1 NMWeight")
+    return ops.indexmac_gather_positional(
+        vals, idx, b, cfg, use_kernel, block or ops.DEFAULT_BLOCK)

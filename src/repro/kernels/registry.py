@@ -24,14 +24,28 @@ from typing import Any, Callable, Optional
 
 @dataclasses.dataclass(frozen=True)
 class DispatchRecord:
-    """One routing decision (newest-last in the history)."""
+    """One routing decision (newest-last in the history).
 
-    op: str
-    impl: str
+    Public surface (re-exported as ``repro.api.DispatchRecord``): tests,
+    benchmarks and fleet monitoring consume these fields — treat them as
+    frozen. ``repro.api.explain_dispatch`` returns the same shape for a
+    dry-run routing query (no kernel executed).
+    """
+
+    op: str  # dispatch family, e.g. "nm_matmul_decode_q"
+    impl: str  # chosen implementation, e.g. "pallas_decode_q"
     shape: tuple  # logical (M, K, N)
     padded: Optional[tuple]  # (M', K', N') when the impl padded, else None
     block: Optional[tuple]  # (block_m, block_n, block_k) when applicable
     reason: str  # why higher-priority impls were skipped ("" if none)
+
+
+class KernelForceError(RuntimeError):
+    """KernelPolicy("force") demanded the Pallas kernel but the shape
+    cannot normalize to any legal kernel geometry. Raised instead of a
+    silent fall-through to the reference path — a forced weight that
+    quietly serves XLA timings is a corrupted benchmark, not a fallback.
+    """
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +142,32 @@ def dispatch(op: str, ctx: dict, *args, **kwargs):
             )
         )
         return out
+    raise LookupError(
+        f"no implementation of {op!r} supports this call: {'; '.join(skipped)}"
+    )
+
+
+def explain(op: str, ctx: dict) -> DispatchRecord:
+    """The :class:`DispatchRecord` ``dispatch`` *would* write for this
+    context, without running anything — the dry-run behind
+    ``repro.api.explain_dispatch``. Raises LookupError when no
+    implementation supports the call (same contract as dispatch)."""
+    skipped = []
+    for impl in implementations(op):
+        why = impl.supports(ctx)
+        if why is not None:
+            skipped.append(f"{impl.name}: {why}")
+            continue
+        plan = ctx.get("plan")
+        uses_plan = plan is not None and impl.uses_plan
+        return DispatchRecord(
+            op=op,
+            impl=impl.name,
+            shape=tuple(ctx.get("shape", ())),
+            padded=plan.padded_shape if uses_plan else None,
+            block=plan.block if uses_plan else None,
+            reason="; ".join(skipped),
+        )
     raise LookupError(
         f"no implementation of {op!r} supports this call: {'; '.join(skipped)}"
     )

@@ -29,6 +29,7 @@ from repro.core.sparsity import (
     compress_nm,
     prune_mask_nm,
 )
+from repro.kernels.epilogue import Epilogue, apply_epilogue_f32, resolve_epilogue
 from repro.kernels.indexmac.ops import nm_matmul
 from repro.quant.qnmweight import QNMWeight
 
@@ -101,26 +102,35 @@ def linear_apply(
     x: jax.Array,
     *,
     compute_dtype=None,
+    epilogue: Optional[Epilogue] = None,
 ) -> jax.Array:
-    """y = x @ W. Dispatches on the weight node's type: NMWeight goes to
-    the indexmac kernel path (its own nm/policy), QNMWeight to the int8
-    dequantizing kernel family, MaskedNMWeight re-projects onto the N:M
-    constraint set (straight-through grads), ``{"w": ...}`` is a plain
-    dense GEMM."""
+    """y = epilogue(x @ W). Dispatches on the weight node's type:
+    NMWeight goes to the indexmac kernel path (its own nm/policy),
+    QNMWeight to the int8 dequantizing kernel family, MaskedNMWeight
+    re-projects onto the N:M constraint set (straight-through grads),
+    ``{"w": ...}`` is a plain dense GEMM.
+
+    ``epilogue`` (an :class:`repro.kernels.epilogue.Epilogue`: bias +
+    activation name) rides through to ``nm_matmul`` for the compressed
+    types — decode-shaped calls fuse it into the kernel writeback — and
+    is applied with the identical f32 composition for the dense/masked
+    kinds, so swapping a layer's weight representation never changes the
+    epilogue arithmetic."""
     compute_dtype = compute_dtype or get_compute_dtype()
     xc = x.astype(compute_dtype)
     if isinstance(params, QNMWeight):
         # int8 payload stays int8 — dequantization happens in-register
         # inside the kernel (scales at accumulator writeback); only the
         # activation follows the compute dtype.
-        return nm_matmul(xc, params)
+        return nm_matmul(xc, params, epilogue=epilogue)
     if isinstance(params, NMWeight):
-        return nm_matmul(xc, params.astype(compute_dtype))
+        return nm_matmul(xc, params.astype(compute_dtype), epilogue=epilogue)
     if isinstance(params, MaskedNMWeight):
         # re-project every forward; gradients flow to all entries
         # (straight-through), pruned entries can revive.
-        return jnp.einsum("...k,kn->...n", xc,
-                          params.project().astype(compute_dtype))
+        y = jnp.einsum("...k,kn->...n", xc,
+                       params.project().astype(compute_dtype))
+        return _dense_epilogue(y, epilogue)
     if not isinstance(params, dict) or "w" not in params:
         raise TypeError(
             "linear_apply expects an NMWeight, a MaskedNMWeight, or dense "
@@ -128,7 +138,16 @@ def linear_apply(
             "compressed dicts must be upgraded to the typed representation "
             "(repro.api.sparsify; checkpoints migrate on restore)."
         )
-    return jnp.einsum("...k,kn->...n", xc, params["w"].astype(compute_dtype))
+    y = jnp.einsum("...k,kn->...n", xc, params["w"].astype(compute_dtype))
+    return _dense_epilogue(y, epilogue)
+
+
+def _dense_epilogue(y: jax.Array, epilogue: Optional[Epilogue]) -> jax.Array:
+    bias, activation = resolve_epilogue(epilogue)
+    if bias is None and activation is None:
+        return y
+    return apply_epilogue_f32(
+        y.astype(jnp.float32), bias, activation).astype(y.dtype)
 
 
 def linear_weight_dense(params) -> jax.Array:

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FFNConfig, SparsityConfig
+from repro.kernels.epilogue import Epilogue
 from repro.models.common import linear_apply, linear_init
 from repro.parallel.hints import tp_reduce
 
@@ -41,15 +42,20 @@ def ffn_apply(
     x: jax.Array,
     cfg: FFNConfig,
 ) -> jax.Array:
-    up = linear_apply(params["w_up"], x)
+    # the activation rides as an Epilogue on its projection: decode-shaped
+    # sparse GEMMs fuse it into the kernel writeback (one launch), every
+    # other path applies the identical f32 composition after the GEMM.
     if cfg.act in ("swiglu", "geglu"):
-        gate = linear_apply(params["w_gate"], x)
-        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
-        h = act(gate) * up
+        up = linear_apply(params["w_up"], x)
+        act = "silu" if cfg.act == "swiglu" else "gelu"
+        gate = linear_apply(params["w_gate"], x,
+                            epilogue=Epilogue(activation=act))
+        h = gate * up
     elif cfg.act == "gelu":
-        h = jax.nn.gelu(up)
+        h = linear_apply(params["w_up"], x, epilogue=Epilogue(activation="gelu"))
     elif cfg.act == "relu_sq":
-        h = jnp.square(jax.nn.relu(up))
+        h = linear_apply(params["w_up"], x,
+                         epilogue=Epilogue(activation="relu_sq"))
     else:
         raise ValueError(cfg.act)
     # w_down is row-parallel under TP serving: per-shard output is a

@@ -293,10 +293,18 @@ class ServeEngine:
                 dt = (jnp.int8 if isinstance(leaf, QNMWeight)
                       else get_compute_dtype())
                 shapes.add((kc * leaf.nm.m // leaf.nm.n, n, leaf.nm, dt))
+        from repro.kernels.indexmac.ops import decode_m_max
+
         for k, n, nm, dt in sorted(
                 shapes, key=lambda t: (t[0], t[1], t[2].tag, str(t[3]))):
             for m_rows in {self.slots, self.slots * self.prefill_len}:
-                autotune.ensure_tuned(m_rows, n, k, nm, dtype=dt)
+                if m_rows <= decode_m_max():
+                    # skinny-M rows route to the decode kernel family,
+                    # which sweeps its own grid under its own cache keys
+                    autotune.ensure_tuned(m_rows, n, k, nm, dtype=dt,
+                                          family="decode")
+                else:
+                    autotune.ensure_tuned(m_rows, n, k, nm, dtype=dt)
 
 
 def _validate_chunkable(cfg) -> None:

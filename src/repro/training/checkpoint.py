@@ -57,6 +57,14 @@ def _flatten(tree: Any) -> tuple[dict[str, np.ndarray], list[str]]:
     return named, [_pathstr(p) for p, _ in flat]
 
 
+def _policy_meta(pol) -> dict:
+    return {
+        "mode": pol.mode,
+        "block": list(pol.block) if pol.block else None,
+        "decode_block": list(pol.decode_block) if pol.decode_block else None,
+    }
+
+
 def _weight_meta(tree: Any) -> dict[str, dict]:
     """Static metadata of every typed sparse weight node, keyed by path."""
     out: dict[str, dict] = {}
@@ -72,16 +80,14 @@ def _weight_meta(tree: Any) -> dict[str, dict]:
                 "axis": leaf.axis,
                 "scale_dtype": str(np.dtype(
                     getattr(leaf.scales, "dtype", np.float32))),
-                "policy": {"mode": pol.mode,
-                           "block": list(pol.block) if pol.block else None},
+                "policy": _policy_meta(pol),
             }
         elif isinstance(leaf, NMWeight):
             pol = leaf.kernel_policy
             out[_pathstr(path)] = {
                 "kind": "compressed", "n": leaf.nm.n, "m": leaf.nm.m,
                 "axis": leaf.axis,
-                "policy": {"mode": pol.mode,
-                           "block": list(pol.block) if pol.block else None},
+                "policy": _policy_meta(pol),
             }
         elif isinstance(leaf, MaskedNMWeight):
             out[_pathstr(path)] = {

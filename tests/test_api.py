@@ -119,12 +119,15 @@ def test_policy_auto_takes_kernel_when_shape_allows():
 
 
 def test_policy_auto_respects_waste_limit_force_ignores_it():
-    # single-row decode: padding M 1 -> block_m exceeds the default cap
-    w, sw_auto = _policy_weight("auto")
-    x = jax.random.normal(jax.random.PRNGKey(6), (1, 256))
+    # prefill-shaped family: N=16 pads to one 128 lane -> 8x waste > 4x
+    nm = NMConfig(2, 4)
+    w = random_nm_matrix(jax.random.PRNGKey(4), (256, 16), nm, axis=0)
+    sw_auto = api.sparsify(w, nm, kernel_policy="auto")
+    x = jax.random.normal(jax.random.PRNGKey(6), (64, 256))
     registry.clear_history()
     api.nm_matmul(x, sw_auto)
-    assert registry.last_dispatch("nm_matmul").impl == "reference"
+    rec = registry.last_dispatch("nm_matmul")
+    assert rec.impl == "reference" and "waste" in rec.reason
 
     sw_force = dataclasses.replace(sw_auto,
                                    kernel_policy=KernelPolicy("force"))
@@ -133,6 +136,97 @@ def test_policy_auto_respects_waste_limit_force_ignores_it():
     assert registry.last_dispatch("nm_matmul").impl == "pallas_padded"
     np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
                                rtol=1e-4, atol=1e-3)
+
+
+def test_skinny_m_routes_to_decode_family():
+    # M <= REPRO_DECODE_M_MAX selects the decode dispatch family — a
+    # Pallas kernel, not the reference fallback the old M-padding-waste
+    # heuristic produced for single-row GEMMs.
+    w, sw = _policy_weight("auto")
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 256))
+    registry.clear_history()
+    y = api.nm_matmul(x, sw)
+    rec = registry.last_dispatch("nm_matmul_decode")
+    assert rec.impl == "pallas_decode" and rec.padded[0] == 8
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_decode_waste_limit_and_force():
+    # N=4 pads to one 128 lane: 32x N/K waste > the 16x decode limit ->
+    # auto falls to reference_decode (same epilogue composition), force
+    # still takes the kernel.
+    nm = NMConfig(2, 4)
+    w = random_nm_matrix(jax.random.PRNGKey(4), (256, 4), nm, axis=0)
+    sw = api.sparsify(w, nm, kernel_policy="auto")
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 256))
+    registry.clear_history()
+    api.nm_matmul(x, sw)
+    rec = registry.last_dispatch("nm_matmul_decode")
+    assert rec.impl == "reference_decode" and "decode limit" in rec.reason
+
+    sw_force = dataclasses.replace(sw, kernel_policy=KernelPolicy("force"))
+    registry.clear_history()
+    y = api.nm_matmul(x, sw_force)
+    assert registry.last_dispatch("nm_matmul_decode").impl == "pallas_decode"
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_force_on_unnormalizable_shape_raises_typed_error():
+    # satellite fix: force + a shape with no legal kernel geometry must
+    # raise (naming the axis and N:M config), never silently serve the
+    # reference path.
+    nm = NMConfig(2, 4)
+    _, sw = _policy_weight("force")
+    empty = dataclasses.replace(sw, vals=sw.vals[:, :0], idx=sw.idx[:, :0])
+    with pytest.raises(api.KernelForceError, match=r"axis 0.*2:4"):
+        api.nm_matmul(jnp.ones((1, 256)), empty)
+    with pytest.raises(api.KernelForceError):
+        api.explain_dispatch((1, 256), empty)
+
+
+def test_epilogue_spec_validates():
+    with pytest.raises(ValueError, match="activation"):
+        api.Epilogue(activation="totally_fused")
+    _, sw = _policy_weight("auto")
+    with pytest.raises(TypeError, match="Epilogue"):
+        api.nm_matmul(jnp.ones((1, 256)), sw, epilogue="relu")
+
+
+# ---------------------------------------------------------------------------
+# explain_dispatch: the documented dry-run routing surface
+# ---------------------------------------------------------------------------
+
+
+def test_explain_dispatch_matches_execution():
+    w, sw = _policy_weight("auto")
+    for shape in ((1, 256), (4, 256), (64, 256)):
+        rec = api.explain_dispatch(shape, sw)
+        assert isinstance(rec, api.DispatchRecord)
+        registry.clear_history()
+        api.nm_matmul(jnp.ones(shape), sw)
+        real = registry.last_dispatch(rec.op)
+        assert (rec.impl, rec.shape, rec.padded, rec.block) == (
+            real.impl, real.shape, real.padded, real.block)
+
+
+def test_explain_dispatch_decode_vs_prefill_families():
+    _, sw = _policy_weight("auto")
+    assert api.explain_dispatch((8, 256), sw).op == "nm_matmul_decode"
+    assert api.explain_dispatch((9, 256), sw).op == "nm_matmul"
+    assert api.explain_dispatch((2, 4, 256), sw).op == "nm_matmul_decode"
+
+
+def test_explain_dispatch_quantized_and_gather():
+    w, sw = _policy_weight("auto")
+    qw = api.quantize(sw)
+    assert api.explain_dispatch((1, 256), qw).op == "nm_matmul_decode_q"
+    gw = api.sparsify(
+        jax.random.normal(jax.random.PRNGKey(12), (8, 64)), NMConfig(2, 4),
+        axis=1, kernel_policy=KernelPolicy("auto", (8, 128, 64)))
+    rec = api.explain_dispatch((64, 128), gw)
+    assert rec.op == "indexmac_gather" and rec.impl == "pallas_gather"
 
 
 def test_policy_block_override_recorded():
@@ -316,6 +410,57 @@ def test_no_vals_key_sniffing_outside_migration_shim():
     assert not offenders, (
         f"dict key-sniffing of the compressed representation crept back "
         f"in: {offenders}; dispatch on NMWeight instead")
+
+
+def test_raw_surface_warns_and_still_computes():
+    """The one-release positional shims work but deprecate loudly (their
+    messages start with "repro.kernels.raw", which pytest promotes to an
+    error everywhere else — see pyproject filterwarnings)."""
+    from repro.kernels import raw
+
+    nm = NMConfig(2, 4)
+    w = random_nm_matrix(jax.random.PRNGKey(13), (32, 16), nm, axis=0)
+    sw = api.sparsify(w, nm)
+    x = jax.random.normal(jax.random.PRNGKey(14), (4, 32))
+    with pytest.warns(DeprecationWarning, match=r"repro\.kernels\.raw"):
+        y = raw.nm_matmul_raw(x, sw.vals, sw.idx, nm, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=1e-4, atol=1e-3)
+    # the in-package re-export shims route through the same warning
+    from repro.kernels.indexmac import ops
+
+    with pytest.warns(DeprecationWarning, match=r"repro\.kernels\.raw"):
+        ops.nm_matmul_raw(x, sw.vals, sw.idx, nm, use_kernel=False)
+
+
+# the deprecated positional surface may only be *defined* in raw.py and
+# the op modules hosting its one-release re-export shims
+_RAW_HOSTS = {
+    SRC / "kernels" / "raw.py",
+    SRC / "kernels" / "indexmac" / "ops.py",
+    SRC / "kernels" / "indexmac_gather" / "ops.py",
+    SRC / "kernels" / "indexmac_gather" / "__init__.py",
+}
+
+
+def test_no_raw_call_sites_outside_shim_modules():
+    """API freeze: no new in-repo call sites of the deprecated positional
+    names — src/ and benchmarks/ must use the typed entry points."""
+    banned = ("nm_matmul_raw", "nm_matmul_q_raw", "indexmac_gather_spmm")
+    roots = [SRC, SRC.parents[1] / "benchmarks"]
+    offenders = []
+    for root in roots:
+        for py in sorted(root.rglob("*.py")):
+            if py in _RAW_HOSTS:
+                continue
+            text = py.read_text()
+            for pat in banned:
+                if pat in text:
+                    offenders.append((str(py), pat))
+    assert not offenders, (
+        f"deprecated positional kernel surface used outside "
+        f"repro.kernels.raw: {offenders}; use repro.api.nm_matmul / "
+        f"indexmac_gather with typed weights")
 
 
 def test_no_sp_threading_in_apply_paths():

@@ -20,7 +20,7 @@ from repro.core.sparsity import (
     random_nm_matrix,
 )
 from repro.kernels import autotune, registry
-from repro.kernels.indexmac.ops import nm_matmul_raw as nm_matmul
+from repro.kernels.indexmac.ops import nm_matmul_positional as nm_matmul
 from repro.kernels.indexmac.ref import nm_matmul_ref
 from repro.kernels.padding import plan_nm_matmul
 

@@ -10,7 +10,7 @@ import pytest
 
 from repro.core.sparsity import NMConfig, compress_nm, random_nm_matrix
 from repro.kernels.indexmac.kernel import nm_spmm_pallas
-from repro.kernels.indexmac.ops import nm_matmul_raw as nm_matmul
+from repro.kernels.indexmac.ops import nm_matmul_positional as nm_matmul
 from repro.kernels.indexmac.ref import nm_matmul_ref
 
 CFGS = [NMConfig(1, 2), NMConfig(1, 4), NMConfig(2, 4)]

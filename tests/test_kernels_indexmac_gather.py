@@ -5,7 +5,9 @@ import numpy as np
 import pytest
 
 from repro.core.sparsity import NMConfig, compress_nm, random_nm_matrix
-from repro.kernels.indexmac_gather.ops import indexmac_gather_spmm
+from repro.kernels.indexmac_gather.ops import (
+    indexmac_gather_positional as indexmac_gather_spmm,
+)
 from repro.kernels.indexmac_gather.ref import indexmac_gather_ref
 
 

@@ -196,9 +196,14 @@ def test_int8_kernel_bit_exact_vs_int8_ref(shape, pattern):
     nm = NMConfig(*pattern)
     x, qw = _int_lattice_problem(k, n, m_rows, nm)
     registry.clear_history()
-    y_k = api.nm_matmul(x, qw)  # force policy -> padded Pallas kernel
-    rec = registry.last_dispatch("nm_matmul_q")
-    assert rec.impl == "pallas_padded_q", rec
+    y_k = api.nm_matmul(x, qw)  # force policy -> Pallas kernel
+    # skinny M routes to the decode family, larger M to the padded kernel
+    if m_rows <= 8:
+        rec = registry.last_dispatch("nm_matmul_decode_q")
+        assert rec.impl == "pallas_decode_q", rec
+    else:
+        rec = registry.last_dispatch("nm_matmul_q")
+        assert rec.impl == "pallas_padded_q", rec
     y_ref = nm_matmul_q_ref(x, qw.vals, qw.idx, qw.scales, nm)
     np.testing.assert_array_equal(np.asarray(y_k), np.asarray(y_ref))
 
@@ -209,8 +214,9 @@ def test_int8_policy_off_pins_reference():
     qw = dataclasses.replace(qw, kernel_policy=KernelPolicy("off"))
     registry.clear_history()
     api.nm_matmul(x, qw)
-    rec = registry.last_dispatch("nm_matmul_q")
-    assert rec.impl == "reference_q" and "use_kernel=False" in rec.reason
+    rec = registry.last_dispatch("nm_matmul_decode_q")  # M=4: decode family
+    assert rec.impl == "reference_decode_q"
+    assert "use_kernel=False" in rec.reason
 
 
 def test_int8_matches_float_reference_within_quant_noise():
@@ -366,7 +372,7 @@ def test_autotune_warmup_walks_qnmweight_leaves(sparse_yi, monkeypatch):
     asked = []
     monkeypatch.setattr(
         autotune, "ensure_tuned",
-        lambda m, n, k, nm, dtype=None:
+        lambda m, n, k, nm, dtype=None, family="":
             asked.append((m, n, k, jnp.dtype(dtype).name)) or (8, 128, 128))
     ServeEngine(klm, kparams, slots=2, max_seq=64, prefill_len=8,
                 autotune_blocks=True, quantize="int8")

@@ -244,7 +244,8 @@ def test_autotune_blocks_warmup_covers_sparse_shapes(yi, monkeypatch):
     asked = []
     monkeypatch.setattr(
         autotune, "ensure_tuned",
-        lambda m, n, k, nm, dtype=None: asked.append((m, n, k)) or (8, 128, 128))
+        lambda m, n, k, nm, dtype=None, family="":
+            asked.append((m, n, k, family)) or (8, 128, 128))
     ServeEngine(lm, params, slots=2, max_seq=64, prefill_len=8,
                 autotune_blocks=True)
 
@@ -253,10 +254,47 @@ def test_autotune_blocks_warmup_covers_sparse_shapes(yi, monkeypatch):
             params, is_leaf=lambda x: isinstance(x, NMWeight)):
         if isinstance(leaf, NMWeight):
             kc, n = leaf.vals.shape[-2:]
-            for m_rows in (2, 16):  # slots, slots * prefill_len
-                want.add((m_rows, n, kc * leaf.nm.m // leaf.nm.n))
+            k = kc * leaf.nm.m // leaf.nm.n
+            # M = slots rows route to the decode family (its own autotune
+            # keys); prefill rows sweep the default family
+            want.add((2, n, k, "decode"))
+            want.add((16, n, k, ""))
     assert want, "reduced config produced no compressed linears"
     assert set(asked) == want
+
+
+def test_decode_step_dispatches_zero_reference_paths(yi):
+    """Acceptance: with use_kernel=True, every GEMM a decode step issues
+    routes to a Pallas decode-family kernel — the dispatch records of the
+    decode compile contain no reference-path entries at all."""
+    import dataclasses
+
+    from repro.configs.base import SparsityConfig
+    from repro.core.sparsity import NMConfig
+    from repro.kernels import registry
+
+    cfg, _, _ = yi
+    scfg = dataclasses.replace(
+        cfg, sparsity=SparsityConfig(
+            nm=NMConfig(2, 4), mode="compressed", use_kernel=True))
+    lm = LM(scfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(lm, params, slots=2, max_seq=64, prefill_len=8)
+    rng = np.random.default_rng(3)
+    eng.submit(Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, size=8).astype(np.int32), max_new=4))
+    registry.clear_history()
+    # one step compiles prefill AND the first decode; records are written
+    # at trace time, so the decode compile's GEMMs are the M == slots rows
+    eng.step()
+    gemms = [r for r in registry.dispatch_history()
+             if r.op.startswith("nm_matmul")]
+    decode_gemms = [r for r in gemms if r.shape[0] == 2]
+    assert decode_gemms, "decode compile issued no compressed GEMMs"
+    assert all(r.op.startswith("nm_matmul_decode") for r in decode_gemms), \
+        decode_gemms
+    assert all(r.impl.startswith("pallas") for r in decode_gemms), \
+        decode_gemms
 
 
 def test_autotune_warmup_uses_each_weights_own_ratio(yi, monkeypatch):
@@ -286,7 +324,7 @@ def test_autotune_warmup_uses_each_weights_own_ratio(yi, monkeypatch):
     asked = []
     monkeypatch.setattr(
         autotune, "ensure_tuned",
-        lambda m, n, k, nm, dtype=None:
+        lambda m, n, k, nm, dtype=None, family="":
             asked.append((m, n, k, nm.tag)) or (8, 128, 128))
     ServeEngine(lm, params, slots=2, max_seq=64, prefill_len=8,
                 autotune_blocks=True)

@@ -74,6 +74,19 @@ kvblk, rep = cfg.plan[0]
 kvcfg = dataclasses.replace(cfg, plan=((dataclasses.replace(
     kvblk, mixer=dataclasses.replace(kvblk.mixer, kv_heads=4)), rep),))
 check(kvcfg, tag="kvsharded")
+# kernel-on: token parity with the Pallas decode family engaged, and the
+# decode compiles (single AND sharded) routed every GEMM to Pallas
+from repro.kernels import registry
+kcfg = dataclasses.replace(cfg, sparsity=SparsityConfig(
+    nm=NMConfig(2, 4), mode="compressed", use_kernel=True))
+registry.clear_history()
+check(kcfg, tag="kernel24")
+dec = [r for r in registry.dispatch_history()
+       if r.op.startswith("nm_matmul_decode")]
+assert dec, registry.dispatch_history()
+bad = [r for r in dec if not r.impl.startswith("pallas")]
+assert not bad, bad
+print(f"KERNELDECODE ok {len(dec)}")
 print("RESULT ok")
 """
 
@@ -93,8 +106,15 @@ def test_sharded_engine_token_parity(subproc):
     variants = [l.split()[1] for l in subproc.splitlines()
                 if l.startswith("OKVARIANT")]
     assert variants == ["float24", "float24-chunked", "int8", "mixednm",
-                        "kvsharded"]
+                        "kvsharded", "kernel24"]
     assert "RESULT ok" in subproc
+
+
+def test_kernel_variant_decodes_on_pallas(subproc):
+    """The use_kernel=True variant must have routed its decode-family
+    GEMMs to the Pallas impls in both engines (asserted in-subprocess;
+    the marker line carries the record count)."""
+    assert "KERNELDECODE ok" in subproc
 
 
 def test_kv_sharded_variant_actually_sharded_kv(subproc):
