@@ -3,9 +3,9 @@
 Compares ``BENCH_results.json`` (fresh run) against the checked-in
 ``benchmarks/BENCH_baseline.json``. Every shared *timed* row — the
 ``fig4/5/6_measured_*`` / ``tpu_kernel_*`` families and the serving
-throughput family ``serve_decode_*`` (us per generated token = inverse
-tokens/sec) — is gated at the 1.5x threshold on its **share of the
-total gated time**:
+throughput families ``serve_decode_*`` / ``serve_paged_decode_*`` (us
+per generated token = inverse tokens/sec) — is gated at the 1.5x
+threshold on its **share of the total gated time**:
 
     ratio_i = (new_i / sum(new)) / (base_i / sum(base))
 
@@ -17,9 +17,13 @@ scales all timings together. A *uniform* slowdown is invisible to
 self-normalization, so the ``bench_calibration`` row (a fixed Pallas
 kernel call timed in the same process) additionally guards the total at
 a deliberately loose 3x (per-process timing variance on shared runners
-makes a tight absolute threshold flaky). Analytic rows (model-derived
-numbers, byte accounting, module wall times) are reported but never
-gate. Runs of different *smoke* settings never compare (identically
+makes a tight absolute threshold flaky). The paged engine's
+dimensionless rate rows (``serve_paged_hitrate_*`` prefix-cache hit
+rate, ``serve_paged_util_*`` pool utilization) gate on a *minimum*
+instead — higher is better and machine speed does not move a rate, so
+a fall below ``baseline / threshold`` fails outright. Analytic rows
+(model-derived numbers, byte accounting, module wall times) are
+reported but never gate. Runs of different *smoke* settings never compare (identically
 named rows at very different magnitudes); the ``--measured`` /
 ``--serve`` flags only decide which row families exist, so a results
 file produced with a subset of the baseline's flags simply gates the
@@ -51,7 +55,13 @@ import sys
 
 # row-name prefixes that represent steady-state kernel/serving timings
 GATED_PREFIXES = ("fig4_measured", "fig5_measured", "fig6_measured",
-                  "tpu_kernel_", "serve_decode_", "serve_itl_")
+                  "tpu_kernel_", "serve_decode_", "serve_itl_",
+                  "serve_paged_decode_")
+# dimensionless rate rows (higher is better): gated on a MINIMUM — the
+# paged engine's prefix-hit rate or pool utilization collapsing means
+# the paging machinery broke even if raw throughput still looks fine.
+# Excluded from the share normalization (they are not times).
+RATE_PREFIXES = ("serve_paged_hitrate_", "serve_paged_util_")
 CALIBRATION_ROW = "bench_calibration"
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
                                 "BENCH_baseline.json")
@@ -103,6 +113,8 @@ def main(argv=None) -> int:
               "the baseline generated with the same run.py mode "
               "(--measured --smoke)?", file=sys.stderr)
         return 1
+    rates = [n for n in shared
+             if n.startswith(RATE_PREFIXES) and base[n] > 0]
     gated = [n for n in shared
              if n.startswith(GATED_PREFIXES) and base[n] >= args.min_us
              and res[n] > 0]
@@ -123,6 +135,15 @@ def main(argv=None) -> int:
             ratio = (r / total_r) / (b / total_b)
             flag = "ok"
             if ratio > args.threshold:
+                failures.append((name, ratio))
+                flag = "FAIL"
+        elif name in rates:
+            # rate rows gate on a floor: new must stay within 1/threshold
+            # of the baseline rate (machine speed does not move a rate,
+            # so no normalization is needed)
+            ratio = r / b
+            flag = "ok(min)"
+            if ratio < 1.0 / args.threshold:
                 failures.append((name, ratio))
                 flag = "FAIL"
         else:

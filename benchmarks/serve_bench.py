@@ -146,7 +146,95 @@ def _child(devices: int, smoke: bool) -> None:
                      f"chunk={chunk}"))
         rows.append((f"serve_itl_{variant}_{dev}", p50 * 1e6,
                      f"p99={p99 * 1e6:.0f}us"))
+    rows += _paged_cell(devices, smoke, mesh)
     print("ROWS" + json.dumps(rows))
+
+
+def _paged_cell(devices: int, smoke: bool, mesh) -> list[tuple]:
+    """High-churn paged-KV cell: mixed-length prompts with shared
+    prefixes over a deliberately undersized page pool, so page
+    recycling, prefix-cache reuse, and (non-smoke) preemption are all
+    load-bearing in the measured number. Emits the gated
+    ``serve_paged_decode`` row plus min-gated rate rows (prefix hit
+    rate, pool utilization) — a drop in either means the paging
+    machinery stopped doing its job even if throughput looks fine."""
+    import dataclasses
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_reduced
+    from repro.models.transformer import LM
+    from repro.serving.engine import Request, ServeEngine, ShardedServeEngine
+
+    slots, prefill_len, chunk, page_size = 4, 16, 8, 8
+    max_seq = 64
+    pool_pages = 16  # full residency would need slots * 8 = 32
+    requests = 6 if smoke else 24
+    max_new = 8 if smoke else 32
+
+    cfg = get_reduced("yi-9b")
+    cfg = dataclasses.replace(
+        cfg, sparsity=dataclasses.replace(cfg.sparsity, use_kernel=True))
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    kw = dict(slots=slots, max_seq=max_seq, prefill_len=prefill_len,
+              prefill_chunk=chunk, paged=True, page_size=page_size,
+              pool_pages=pool_pages)
+    if mesh is not None:
+        eng = ShardedServeEngine(lm, params, mesh=mesh, **kw)
+    else:
+        eng = ServeEngine(lm, params, **kw)
+
+    rng = np.random.default_rng(0)
+    # two prompt families, each sharing its first page (8 tokens after
+    # left-padding) within the family — the prefix cache sees real reuse
+    base_long = rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+    base_short = rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+
+    def req(i):
+        if i % 2:  # short prompt: 4 zero-pad + 4 shared = shared page 0
+            prompt = np.concatenate([base_short, rng.integers(
+                0, cfg.vocab_size, size=8).astype(np.int32)])
+        else:      # long prompt: first 8 tokens shared
+            prompt = np.concatenate([base_long, rng.integers(
+                0, cfg.vocab_size, size=8).astype(np.int32)])
+        return Request(rid=i, prompt=prompt,
+                       max_new=max_new - (i % 3) * (max_new // 4))
+
+    eng.submit(req(-2))  # warmup: pays the prefill+decode compiles
+    eng.run()
+    passes = []
+    for _ in range(3):
+        eng.decode_times.clear()
+        n_warm = len(eng.finished)
+        t0 = time.perf_counter()
+        for i in range(requests):
+            eng.submit(req(i))
+        done = eng.run()[n_warm:]
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out) for r in done)
+        assert len(done) == requests, ("paged", len(done))
+        ttft = float(np.mean([r.t_first - r.t_submit for r in done]))
+        passes.append((wall / toks, toks / wall, ttft))
+    sizes = eng.compiled_cache_sizes()
+    assert sizes["prefill"] in (-1, 1) and sizes["decode"] in (-1, 1), \
+        ("paged", sizes)  # recompiles would poison the timings
+    st = eng.throughput_stats()
+    assert st["prefix_hit_pages"] > 0, st  # shared pages must be reused
+    us_tok, toks_s, ttft = min(passes)
+    dev = f"{devices}dev"
+    return [
+        (f"serve_paged_decode_{dev}", us_tok * 1e6, f"{toks_s:.1f}tok/s"),
+        (f"serve_paged_ttft_{dev}", ttft * 1e6,
+         f"qdepth={st['queue_depth_mean']:.1f} "
+         f"preempt={st['preemptions']}"),
+        (f"serve_paged_hitrate_{dev}", st["prefix_hit_rate"],
+         f"{st['prefix_hit_pages']}/{st['prefix_lookup_pages']}pages"),
+        (f"serve_paged_util_{dev}", st["page_util_mean"],
+         f"max={st['page_util_max']:.2f}"),
+    ]
 
 
 # ---------------------------------------------------------------------------

@@ -32,8 +32,8 @@ bit-exact on the integer lattice across all eight implementations.
 plan *would* run" without executing anything — the public dry-run used
 by benchmarks instead of sniffing the record history.
 
-The positional surfaces (``nm_matmul_raw`` and friends) are deprecated:
-they live in :mod:`repro.kernels.raw` and warn on use; the non-warning
+The positional surfaces are deprecated: they live only in
+:mod:`repro.kernels.raw` and warn on use; the non-warning
 ``nm_matmul_positional`` / ``nm_matmul_q_positional`` internals remain
 for kernel-level tests.
 
@@ -672,17 +672,3 @@ def nm_matmul_q_positional(
     )
     return y2.reshape(*lead, nn)
 
-
-def nm_matmul_raw(*args, **kwargs):
-    """Deprecated import path — moved to :mod:`repro.kernels.raw` (the
-    warning fires there); removed after one release."""
-    from repro.kernels import raw
-
-    return raw.nm_matmul_raw(*args, **kwargs)
-
-
-def nm_matmul_q_raw(*args, **kwargs):
-    """Deprecated import path — moved to :mod:`repro.kernels.raw`."""
-    from repro.kernels import raw
-
-    return raw.nm_matmul_q_raw(*args, **kwargs)

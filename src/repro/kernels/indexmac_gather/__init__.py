@@ -1,4 +1,3 @@
 from repro.kernels.indexmac_gather.ops import (  # noqa: F401
     indexmac_gather,
-    indexmac_gather_spmm,
 )

@@ -3,8 +3,8 @@
 ``indexmac_gather(w, b)`` consumes an :class:`NMWeight` whose rows are
 compressed along axis 1 (the paper's A-matrix orientation, C = A @ B);
 nm and the use-kernel decision come from the weight's own metadata.
-The positional (vals, idx, cfg) surface is deprecated — it lives in
-:mod:`repro.kernels.raw` as ``indexmac_gather_spmm`` and warns on use;
+The positional (vals, idx, cfg) surface is deprecated — it lives only
+in :mod:`repro.kernels.raw` and warns on use;
 ``indexmac_gather_positional`` is the non-warning internal for
 kernel-level tests.
 
@@ -148,7 +148,7 @@ def indexmac_gather_positional(
     block: tuple[int, int, int] = DEFAULT_BLOCK,
 ) -> jax.Array:
     """Positional surface (kernel-level tests / the deprecated
-    ``repro.kernels.raw.indexmac_gather_spmm`` wrapper)."""
+    wrapper in :mod:`repro.kernels.raw`)."""
     mr, kc = vals.shape
     k, nc = b.shape
     ctx = registry.make_ctx(
@@ -159,10 +159,3 @@ def indexmac_gather_positional(
         "indexmac_gather", ctx, vals, idx, b, cfg=cfg, block=block
     )
 
-
-def indexmac_gather_spmm(*args, **kwargs):
-    """Deprecated import path — moved to :mod:`repro.kernels.raw` (the
-    warning fires there); removed after one release."""
-    from repro.kernels import raw
-
-    return raw.indexmac_gather_spmm(*args, **kwargs)

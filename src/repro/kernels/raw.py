@@ -6,7 +6,8 @@ alive for exactly one release. Every call emits a
 ``repro.kernels.raw`` — CI promotes those to errors (see pyproject
 ``filterwarnings``), so no new in-repo call site can appear. The
 API-freeze test in ``tests/test_api.py`` additionally bans the raw
-names outside this module and the op modules that host the shims.
+names outside this module (the old in-package re-export shims are
+gone and must stay gone).
 
 Migration:
 

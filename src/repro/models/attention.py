@@ -22,6 +22,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import AttnConfig, SparsityConfig
 from repro.models.common import (
@@ -39,6 +40,23 @@ from repro.parallel.hints import tp_reduce
 NEG_INF = -1e30
 
 
+class CacheLenError(ValueError):
+    """A concrete ``cache_len`` would write outside the cache bounds."""
+
+
+def _check_cache_len(cache_len, s: int, max_seq: int) -> None:
+    """Bounds-check concrete offsets; traced values can't be inspected,
+    so inside jit the scatters below carry an explicit ``mode="drop"``
+    (out-of-range writes are discarded, never wrapped around)."""
+    if isinstance(cache_len, jax.core.Tracer):
+        return
+    cl = np.asarray(cache_len)
+    if (cl < 0).any() or (cl + s > max_seq).any():
+        raise CacheLenError(
+            f"cache_len={cl.tolist()} with a {s}-token write exceeds "
+            f"cache bounds [0, {max_seq}]")
+
+
 def _write_cache(cache_arr: jax.Array, new: jax.Array,
                  cache_len: jax.Array) -> jax.Array:
     """Write an s-token update starting at position cache_len.
@@ -47,18 +65,71 @@ def _write_cache(cache_arr: jax.Array, new: jax.Array,
     cache_len (B,): per-slot positions (continuous batching / chunked
     prefill — each slot's chunk lands at its own offset).
     new: (B, s, ...) slice to write into cache (B, S, ...).
+
+    Concrete out-of-range offsets raise :class:`CacheLenError`; traced
+    ones drop the out-of-range rows (scatter mode="drop") rather than
+    silently wrapping around.
     """
+    s = new.shape[1]
+    _check_cache_len(cache_len, s, cache_arr.shape[1])
     if cache_len.ndim == 0:
         start = (0, cache_len) + (0,) * (cache_arr.ndim - 2)
         return jax.lax.dynamic_update_slice(cache_arr,
                                             new.astype(cache_arr.dtype), start)
-    b, s = new.shape[:2]
+    b = new.shape[0]
     if s == 1:
         return cache_arr.at[jnp.arange(b), cache_len].set(
-            new[:, 0].astype(cache_arr.dtype))
+            new[:, 0].astype(cache_arr.dtype), mode="drop")
     rows = jnp.arange(b)[:, None]
     cols = cache_len[:, None] + jnp.arange(s)[None, :]
-    return cache_arr.at[rows, cols].set(new.astype(cache_arr.dtype))
+    return cache_arr.at[rows, cols].set(new.astype(cache_arr.dtype),
+                                        mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# paged cache: gather/scatter through a block table
+# ---------------------------------------------------------------------------
+
+
+def paged_write(pool: jax.Array, new: jax.Array, cache_len: jax.Array,
+                table: jax.Array, write_mask: jax.Array) -> jax.Array:
+    """Scatter an s-token update into the page pool via the block table.
+
+    pool: (rows, page_size, ...) — local page pool; row 0 is the null
+    page. table: (B, pages_per_slot) int32 of *global* page ids (``%
+    rows`` recovers the local row on every shard — the host allocator
+    guarantees a slot's pages live in its own shard's sub-pool).
+    write_mask: (B,) — masked-off slots (idle, or mid-prefill during a
+    decode step) land their writes in the null page instead of page 0 of
+    their table row, which may be a *shared prefix* page.
+    """
+    rows, ps = pool.shape[0], pool.shape[1]
+    b, s = new.shape[:2]
+    n_pages = table.shape[1]
+    pos = cache_len[:, None] + jnp.arange(s)[None, :]           # (B, s)
+    page_idx = pos // ps
+    ok = (page_idx < n_pages) & write_mask[:, None]
+    local = jnp.take_along_axis(
+        table, jnp.minimum(page_idx, n_pages - 1), axis=1) % rows
+    local = jnp.where(ok, local, 0)                             # null page
+    flat = local * ps + pos % ps                                # (B, s)
+    pool_flat = pool.reshape((rows * ps,) + pool.shape[2:])
+    pool_flat = pool_flat.at[flat].set(new.astype(pool.dtype), mode="drop")
+    return pool_flat.reshape(pool.shape)
+
+
+def paged_gather(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Assemble each slot's logical cache view from its pages.
+
+    (rows, page_size, ...) gathered through (B, pages_per_slot) ->
+    (B, pages_per_slot * page_size, ...): a drop-in replacement for the
+    slot cache's (B, S, ...) that downstream length masks treat
+    identically (positions past ``cache_len`` read unwritten/null pages
+    and are masked to exact zeros by the softmax)."""
+    rows = pool.shape[0]
+    b, n_pages = table.shape
+    g = jnp.take(pool, table % rows, axis=0)    # (B, n_pages, ps, ...)
+    return g.reshape((b, n_pages * pool.shape[1]) + pool.shape[2:])
 
 
 def _len_mask(length: jax.Array, s: int) -> jax.Array:
@@ -244,9 +315,15 @@ def gqa_apply(
     rope_theta: float = 10_000.0,
     chunk: int = 512,
     cross_kv: Optional[tuple[jax.Array, jax.Array]] = None,
+    block_table: Optional[jax.Array] = None,
+    write_mask: Optional[jax.Array] = None,
 ):
     """Returns (y, new_cache). cross_kv supplies precomputed encoder K/V
-    for cross-attention (whisper); cache is then unused."""
+    for cross-attention (whisper); cache is then unused. block_table
+    switches decode/chunk to the paged cache: ``cache`` leaves are page
+    pools (rows, page_size, ...), writes scatter through the table
+    (masked slots into the null page) and reads gather each slot's
+    logical view — per-slot ``cache_len`` semantics are unchanged."""
     b, s, _ = x.shape
     q = linear_apply(params["wq"], x).reshape(b, s, cfg.q_heads, cfg.head_dim)
     if cross_kv is None:
@@ -265,13 +342,23 @@ def gqa_apply(
     new_cache = cache
     if mode in ("decode", "chunk") and cross_kv is None:
         assert cache is not None and cache_len is not None
-        k_cache = _write_cache(cache["k"], k, cache_len)
-        v_cache = _write_cache(cache["v"], v, cache_len)
-        new_cache = {"k": k_cache, "v": v_cache}
+        if block_table is not None:
+            assert write_mask is not None
+            k_cache = paged_write(cache["k"], k, cache_len,
+                                  block_table, write_mask)
+            v_cache = paged_write(cache["v"], v, cache_len,
+                                  block_table, write_mask)
+            new_cache = {"k": k_cache, "v": v_cache}
+            k_view = paged_gather(k_cache, block_table)
+            v_view = paged_gather(v_cache, block_table)
+        else:
+            k_view = k_cache = _write_cache(cache["k"], k, cache_len)
+            v_view = v_cache = _write_cache(cache["v"], v, cache_len)
+            new_cache = {"k": k_cache, "v": v_cache}
         # chunk (multi-token prefill piece): causal masking via absolute
         # query positions; decode (s=1) keeps the plain length mask
         out = decode_attention(
-            q, k_cache, v_cache, length=cache_len + s, window=cfg.window,
+            q, k_view, v_view, length=cache_len + s, window=cfg.window,
             q_positions=positions if mode == "chunk" else None,
         )
     elif mode == "decode":  # cross-attention decode: static KV, full attend
@@ -381,6 +468,8 @@ def mla_apply(
     rope_theta: float = 10_000.0,
     chunk: int = 512,
     cross_kv=None,  # unused (MLA is self-attention only here)
+    block_table: Optional[jax.Array] = None,
+    write_mask: Optional[jax.Array] = None,
 ):
     b, s, _ = x.shape
     h = cfg.q_heads
@@ -397,33 +486,43 @@ def mla_apply(
     new_cache = cache
     if mode in ("decode", "chunk"):
         assert cache is not None and cache_len is not None
-        ckv_c = _write_cache(cache["ckv"], ckv, cache_len)
-        kr_c = _write_cache(cache["kr"], kr, cache_len)
-        new_cache = {"ckv": ckv_c, "kr": kr_c}
+        if block_table is not None:
+            assert write_mask is not None
+            ckv_c = paged_write(cache["ckv"], ckv, cache_len,
+                                block_table, write_mask)
+            kr_c = paged_write(cache["kr"], kr, cache_len,
+                               block_table, write_mask)
+            new_cache = {"ckv": ckv_c, "kr": kr_c}
+            ckv_v = paged_gather(ckv_c, block_table)
+            kr_v = paged_gather(kr_c, block_table)
+        else:
+            ckv_v = ckv_c = _write_cache(cache["ckv"], ckv, cache_len)
+            kr_v = kr_c = _write_cache(cache["kr"], kr, cache_len)
+            new_cache = {"ckv": ckv_c, "kr": kr_c}
         # absorbed attention over the compressed cache (MLA decode):
         #   logits = q_nope W_uk . ckv + q_rope . kr
         # operands stay bf16 (f32 casts of the cache would materialize f32
         # copies of it); accumulation is f32 via preferred_element_type
         dt = x.dtype
         q_abs = acc_einsum("bqhd,hcd->bqhc", q_nope, w_uk).astype(dt)
-        logits = acc_einsum("bqhc,bsc->bqhs", q_abs, ckv_c.astype(dt))
-        logits += acc_einsum("bqhr,bsr->bqhs", q_rope, kr_c.astype(dt))
+        logits = acc_einsum("bqhc,bsc->bqhs", q_abs, ckv_v.astype(dt))
+        logits += acc_einsum("bqhr,bsr->bqhs", q_rope, kr_v.astype(dt))
         logits *= scale
         if mode == "chunk":
             # multi-token prefill piece: cache slot j visible to query
             # token i iff j <= position(i) — logits are (b, sq, h, S)
             qp = positions if positions.ndim == 2 else positions[None, :]
-            cvalid = (jnp.arange(ckv_c.shape[1])[None, None, :]
+            cvalid = (jnp.arange(ckv_v.shape[1])[None, None, :]
                       <= qp[..., None])  # (B|1, sq, S)
             logits = jnp.where(cvalid[:, :, None, :], logits, NEG_INF)
         else:
-            valid = _len_mask(cache_len + s, ckv_c.shape[1])
+            valid = _len_mask(cache_len + s, ckv_v.shape[1])
             logits = _apply_len_mask(logits, valid)
         m = logits.max(-1, keepdims=True)
         p = jnp.exp(logits - m)
         p = p / p.sum(-1, keepdims=True)
         o_abs = acc_einsum("bqhs,bsc->bqhc", p.astype(dt),
-                           ckv_c.astype(dt)).astype(dt)
+                           ckv_v.astype(dt)).astype(dt)
         out = acc_einsum("bqhc,hcv->bqhv", o_abs, w_uv)
         out = out.astype(x.dtype)
     else:

@@ -111,9 +111,13 @@ def block_apply(
     cache: Optional[dict],
     cache_len: Optional[jax.Array],
     enc_out: Optional[jax.Array] = None,
+    block_table: Optional[jax.Array] = None,
+    write_mask: Optional[jax.Array] = None,
 ):
     """Returns (x, new_cache, aux). Sparse weights are self-describing
-    typed nodes, so no sparsity config threads through apply calls."""
+    typed nodes, so no sparsity config threads through apply calls.
+    block_table/write_mask switch attention caches to the paged layout
+    (see attention.paged_write); only AttnConfig mixers accept them."""
     mx = block.mixer
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
@@ -127,7 +131,8 @@ def block_apply(
         y, new_mc = attention.attn_apply(
             params["mixer"], h, mx, positions=positions,
             cache_len=cache_len, rope_theta=mx.rope_theta or cfg.rope_theta,
-            chunk=cfg.attn_chunk, **kw,
+            chunk=cfg.attn_chunk, block_table=block_table,
+            write_mask=write_mask, **kw,
         )
     elif isinstance(mx, MambaConfig):
         y, new_mc = mamba.mamba_apply(params["mixer"], h, mx, **kw)
@@ -220,7 +225,8 @@ def group_empty_cache(entry, repeat: int, batch: int, max_seq: int,
 
 
 def group_apply(params, x, entry, repeat: int, cfg: ModelConfig, *,
-                mode, positions, cache, cache_len, enc_out, remat: str):
+                mode, positions, cache, cache_len, enc_out, remat: str,
+                block_table=None, write_mask=None):
     blocks = _as_blocks(entry)
 
     def one(p_list, x, c_list):
@@ -229,7 +235,8 @@ def group_apply(params, x, entry, repeat: int, cfg: ModelConfig, *,
         for p, b, c in zip(p_list, blocks,
                            c_list if c_list is not None else [None] * len(blocks)):
             x, nc, a = block_apply(p, x, b, cfg, mode=mode, positions=positions,
-                                   cache=c, cache_len=cache_len, enc_out=enc_out)
+                                   cache=c, cache_len=cache_len, enc_out=enc_out,
+                                   block_table=block_table, write_mask=write_mask)
             new_cs.append(nc)
             aux = aux + a
         return x, new_cs, aux
@@ -333,6 +340,8 @@ class LM:
         cache_len: Optional[jax.Array] = None,
         enc_input: Optional[jax.Array] = None,
         remat: str = "none",
+        block_table: Optional[jax.Array] = None,
+        write_mask: Optional[jax.Array] = None,
     ):
         cfg = self.cfg
         b, s = tokens.shape
@@ -373,7 +382,8 @@ class LM:
             c = caches[i] if caches is not None else None
             x, new_c, aux = group_apply(
                 gp, x, blk, rep, cfg, mode=mode, positions=positions,
-                cache=c, cache_len=cache_len, enc_out=enc_out, remat=remat)
+                cache=c, cache_len=cache_len, enc_out=enc_out, remat=remat,
+                block_table=block_table, write_mask=write_mask)
             new_caches.append(new_c)
             aux_total = aux_total + aux
 

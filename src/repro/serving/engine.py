@@ -27,6 +27,7 @@ assert exactly that.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Any, Optional
 
@@ -36,6 +37,7 @@ import numpy as np
 
 from repro.configs.base import AttnConfig
 from repro.models.transformer import LM
+from repro.serving.paging import PageManager
 from repro.serving.sampling import make_sampler
 from repro.serving.scheduler import Request, Scheduler
 
@@ -118,7 +120,10 @@ class ServeEngine:
                  autotune_blocks: bool = False,
                  quantize: Optional[str] = None,
                  prefill_chunk: Optional[int] = None,
-                 strict: bool = False):
+                 strict: bool = False,
+                 paged: bool = False,
+                 page_size: Optional[int] = None,
+                 pool_pages: Optional[int] = None):
         if quantize not in (None, "int8"):
             raise ValueError(
                 f"quantize must be None or 'int8', got {quantize!r}")
@@ -136,11 +141,35 @@ class ServeEngine:
         self.prefill_len = prefill_len
         self.temperature = temperature
         self.strict = strict
+        self.paged = paged
+        self.page_manager: Optional[PageManager] = None
+        chunk = prefill_chunk or prefill_len
+        if paged:
+            # paged KV: the cache becomes a pool of fixed-size pages
+            # addressed through a per-slot block table. Prefill always
+            # runs in mode="chunk" (offset writes through the table), so
+            # the model needs the chunkable mixers even at full chunk.
+            _validate_chunkable(lm.cfg)
+            ps = int(page_size if page_size is not None
+                     else os.environ.get("REPRO_KV_PAGE_SIZE") or chunk)
+            groups = self._data_parallel()
+            pool = int(pool_pages if pool_pages is not None
+                       else os.environ.get("REPRO_KV_POOL_PAGES")
+                       or slots * (max_seq // ps))
+            if pool % groups:
+                raise ValueError(
+                    f"pool_pages={pool} must divide over the data-parallel "
+                    f"degree ({groups}): each data shard owns an "
+                    "independent sub-pool")
+            self.page_manager = PageManager(
+                page_size=ps, pages_per_group=pool // groups,
+                slots=slots, max_seq=max_seq, groups=groups)
         self.scheduler = Scheduler(
             slots=slots, max_seq=max_seq, prefill_len=prefill_len,
-            prefill_chunk=prefill_chunk, strict=strict)
+            prefill_chunk=prefill_chunk, strict=strict,
+            paging=self.page_manager)
         self.prefill_chunk = self.scheduler.prefill_chunk
-        if self.prefill_chunk != prefill_len:
+        if self.prefill_chunk != prefill_len and not paged:
             _validate_chunkable(lm.cfg)
         self.params = params
         if autotune_blocks:
@@ -152,11 +181,25 @@ class ServeEngine:
         self._sampler = make_sampler(temperature)
         self._key = jax.random.PRNGKey(seed)
         self._build_steps()
-        self.caches = self._place_caches(lm.init_cache(slots, max_seq))
+        # the paged pool reuses the slot-cache constructor: "batch" rows
+        # become pool pages (row 0 of each shard's sub-pool = null page),
+        # "max_seq" becomes the page size — same leaf layout, so the
+        # sharded engine's cache pspecs apply unchanged
+        if paged:
+            pm = self.page_manager
+            self.caches = self._place_caches(
+                lm.init_cache(pm.rows, pm.page_size))
+        else:
+            self.caches = self._place_caches(lm.init_cache(slots, max_seq))
         self.decode_times: list[float] = []  # wall clock after each decode
+        self.queue_depths: list[int] = []    # per-step admission backlog
+        self.page_utils: list[float] = []    # per-step pool utilization
         self.steps = 0
 
     # ---- engine-flavour hooks (overridden by ShardedServeEngine) ---------
+
+    def _data_parallel(self) -> int:
+        return 1
 
     def _place_params(self, params: Any) -> Any:
         return params
@@ -167,6 +210,30 @@ class ServeEngine:
     def _build_steps(self) -> None:
         lm, sampler = self.lm, self._sampler
         full = self.prefill_chunk == self.prefill_len
+
+        if self.paged:
+            # no merge_cache_slots: the write mask itself gates the cache
+            # (masked slots scatter into the null page), so the pool is
+            # only ever touched at positions the scheduler owns
+            def prefill_step(params, tokens, caches, cache_len, table,
+                             mask, key):
+                logits, new_caches, _ = lm.forward(
+                    params, tokens, mode="chunk", caches=caches,
+                    cache_len=cache_len, block_table=table, write_mask=mask)
+                toks, key = sampler(logits[:, -1], key)
+                return toks, new_caches, key
+
+            def decode_step(params, token, caches, cache_len, table,
+                            mask, key):
+                logits, new_caches, _ = lm.forward(
+                    params, token, mode="decode", caches=caches,
+                    cache_len=cache_len, block_table=table, write_mask=mask)
+                toks, key = sampler(logits[:, 0], key)
+                return toks, new_caches, key
+
+            self._prefill = jax.jit(prefill_step, donate_argnums=(2,))
+            self._decode = jax.jit(decode_step, donate_argnums=(2,))
+            return
 
         def prefill_step(params, tokens, caches, cache_len, mask, key):
             if full:
@@ -218,17 +285,26 @@ class ServeEngine:
         sched = self.scheduler
         pf = sched.plan_prefill()
         if pf is not None:
+            # paged: snapshot the block table AFTER planning — admission
+            # just assigned pages for the newly admitted slots
+            tbl = ((jnp.asarray(self.page_manager.table),)
+                   if self.paged else ())
             toks, self.caches, self._key = self._prefill(
                 self.params, jnp.asarray(pf.tokens), self.caches,
-                jnp.asarray(pf.cache_len),
+                jnp.asarray(pf.cache_len), *tbl,
                 jnp.asarray(pf.mask), self._key)
             sched.finish_prefill(pf, np.asarray(toks),
                                  now=time.perf_counter())
         dc = sched.plan_decode()
         if dc is not None:
+            # paged: plan_decode may have allocated fresh pages (or
+            # preempted a slot), so re-snapshot the table
+            tbl = ((jnp.asarray(self.page_manager.table),)
+                   if self.paged else ())
             toks, self.caches, self._key = self._decode(
                 self.params, jnp.asarray(dc.tokens), self.caches,
-                jnp.asarray(dc.lengths), jnp.asarray(dc.mask), self._key)
+                jnp.asarray(dc.lengths), *tbl,
+                jnp.asarray(dc.mask), self._key)
             toks_np = np.asarray(toks)  # device sync: timestamps are real
             now = time.perf_counter()
             self.decode_times.append(now)
@@ -236,6 +312,12 @@ class ServeEngine:
                 # long-running server must not grow a float per token
                 del self.decode_times[:4096]
             sched.finish_decode(dc, toks_np, now=now)
+        self.queue_depths.append(len(sched.queue))
+        if self.page_manager is not None:
+            self.page_utils.append(self.page_manager.utilization())
+        if len(self.queue_depths) > 8192:
+            del self.queue_depths[:4096]
+            del self.page_utils[:4096]
         self.steps += 1
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
@@ -255,7 +337,7 @@ class ServeEngine:
                  if r.t_first is not None and r.t_submit is not None]
         itl = np.diff(np.asarray(self.decode_times)) \
             if len(self.decode_times) > 1 else np.asarray([])
-        return {
+        stats = {
             "requests": len(reqs),
             "tokens": toks,
             "decode_steps": len(self.decode_times),
@@ -264,7 +346,23 @@ class ServeEngine:
             float("nan"),
             "itl_p99_s": float(np.percentile(itl, 99)) if itl.size else
             float("nan"),
+            "queue_depth_mean": float(np.mean(self.queue_depths))
+            if self.queue_depths else 0.0,
+            "queue_depth_max": int(max(self.queue_depths, default=0)),
         }
+        if self.page_manager is not None:
+            pm = self.page_manager
+            stats.update({
+                "page_util_mean": float(np.mean(self.page_utils))
+                if self.page_utils else 0.0,
+                "page_util_max": float(max(self.page_utils, default=0.0)),
+                "prefix_hit_pages": pm.stats.prefix_hit_pages,
+                "prefix_lookup_pages": pm.stats.prefix_lookup_pages,
+                "prefix_hit_rate": pm.stats.prefix_hit_rate,
+                "page_evictions": pm.stats.evictions,
+                "preemptions": self.scheduler.preemptions,
+            })
+        return stats
 
     # ---- warmup -----------------------------------------------------------
 
@@ -359,6 +457,12 @@ class ShardedServeEngine(ServeEngine):
         self._key = jax.device_put(
             self._key, NamedSharding(self.mesh, P()))
 
+    def _data_parallel(self) -> int:
+        # one independent page-pool group per data shard: a slot's pages
+        # always live in its own shard's sub-pool, so the paged
+        # gather/scatter stays shard-local (no collectives)
+        return self._mesh_shape["data"]
+
     def _place_params(self, params: Any) -> Any:
         from jax.sharding import NamedSharding
         from jax.sharding import PartitionSpec as P
@@ -400,13 +504,65 @@ class ShardedServeEngine(ServeEngine):
         # (B, S, H, D) reshapes match the local projection slices
         lm_local = LM(serve_local_cfg(self.lm.cfg, plan))
         p_specs = serve_param_pspecs(self.params, mesh, plan)
-        c_specs = serve_cache_pspecs(
-            jax.eval_shape(
-                lambda: self.lm.init_cache(self.slots, self.max_seq)),
-            mesh, plan)
+        if self.paged:
+            pm = self.page_manager
+            cache_shape = lambda: self.lm.init_cache(pm.rows, pm.page_size)  # noqa: E731
+        else:
+            cache_shape = lambda: self.lm.init_cache(self.slots, self.max_seq)  # noqa: E731
+        c_specs = serve_cache_pspecs(jax.eval_shape(cache_shape), mesh, plan)
         tags = plan.reduce_tags
         p_tok = P("data", None)
         p_vec = P("data")
+
+        if self.paged:
+            # block table shards with the slots over "data"; the pool's
+            # page rows shard over "data" too (rows = dp * stride), so
+            # inside each shard `table % stride` is the local page row
+            p_tbl = P("data", None)
+
+            def prefill_body(params, tokens, caches, cache_len, table, mask):
+                with hints.tp_serving("model", tags):
+                    logits, new_caches, _ = lm_local.forward(
+                        params, tokens, mode="chunk", caches=caches,
+                        cache_len=cache_len, block_table=table,
+                        write_mask=mask)
+                return logits[:, -1], new_caches
+
+            sh_prefill = compat.shard_map(
+                prefill_body, mesh=mesh,
+                in_specs=(p_specs, p_tok, c_specs, p_vec, p_tbl, p_vec),
+                out_specs=(p_tok, c_specs), check_vma=False)
+
+            def decode_body(params, token, caches, cache_len, table, mask):
+                with hints.tp_serving("model", tags):
+                    logits, new_caches, _ = lm_local.forward(
+                        params, token, mode="decode", caches=caches,
+                        cache_len=cache_len, block_table=table,
+                        write_mask=mask)
+                return logits[:, 0], new_caches
+
+            sh_decode = compat.shard_map(
+                decode_body, mesh=mesh,
+                in_specs=(p_specs, p_tok, c_specs, p_vec, p_tbl, p_vec),
+                out_specs=(p_tok, c_specs), check_vma=False)
+
+            def prefill_step(params, tokens, caches, cache_len, table,
+                             mask, key):
+                logits, new_caches = sh_prefill(
+                    params, tokens, caches, cache_len, table, mask)
+                toks, key = sampler(logits, key)
+                return toks, new_caches, key
+
+            def decode_step(params, token, caches, cache_len, table,
+                            mask, key):
+                logits, new_caches = sh_decode(
+                    params, token, caches, cache_len, table, mask)
+                toks, key = sampler(logits, key)
+                return toks, new_caches, key
+
+            self._prefill = jax.jit(prefill_step, donate_argnums=(2,))
+            self._decode = jax.jit(decode_step, donate_argnums=(2,))
+            return
 
         def prefill_body(params, tokens, caches, cache_len, mask):
             with hints.tp_serving("model", tags):

@@ -26,13 +26,28 @@ Because both the single-device and the sharded engines drive this same
 scheduler, their step sequences — and therefore their sampler key
 streams — are identical, which is what makes cross-engine token-parity
 testable.
+
+Paged mode (``paging=PageManager(...)``): admission is planned against
+the *free-page budget* instead of free slots alone — a request is
+admitted when a free slot exists in a group with enough free-or-
+evictable pages for its prompt (minus whatever prefix-cache pages it
+can reuse). Admission stays arrival-ordered with an explicit
+starvation guard: a request that does not fit may be bypassed by later
+arrivals **once**; the second time it fails to fit, admission stops
+behind it until it gets in. Decode allocates pages lazily (one page
+per ``page_size`` generated tokens); when the pool is exhausted the
+scheduler preempts the latest-admitted slot in the group
+(pages freed, request requeued at the front for recompute).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 import numpy as np
+
+from repro.serving.paging import PageManager, PoolExhaustedError, page_keys
 
 
 @dataclasses.dataclass
@@ -43,6 +58,7 @@ class Request:
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     truncated: bool = False  # prompt exceeded prefill_len (tail kept)
+    bypassed: bool = False   # a later arrival was admitted past this one
     # serving timestamps (perf_counter seconds; engines fill these in)
     t_submit: Optional[float] = None
     t_first: Optional[float] = None   # first token available (TTFT end)
@@ -72,11 +88,16 @@ class _Slot:
     tokens: Optional[np.ndarray] = None  # padded (prefill_len,) prompt
     pos: int = 0      # prefill progress (tokens written to cache)
     length: int = 0   # decode-time cache length
+    # paged-mode bookkeeping
+    seq: int = 0                  # admission order (preemption victim pick)
+    hit_pages: int = 0            # prefix pages reused at admission
+    keys: Optional[list] = None   # per-page chain hashes of the prompt
 
 
 class Scheduler:
     def __init__(self, *, slots: int, max_seq: int, prefill_len: int,
-                 prefill_chunk: Optional[int] = None, strict: bool = False):
+                 prefill_chunk: Optional[int] = None, strict: bool = False,
+                 paging: Optional[PageManager] = None):
         self.prefill_chunk = prefill_chunk or prefill_len
         if prefill_len % self.prefill_chunk:
             raise ValueError(
@@ -86,9 +107,21 @@ class Scheduler:
         self.max_seq = max_seq
         self.prefill_len = prefill_len
         self.strict = strict
+        self.paging = paging
+        if paging is not None:
+            if prefill_len % paging.page_size:
+                raise ValueError(
+                    f"prefill_len={prefill_len} must be a multiple of "
+                    f"page_size={paging.page_size}: decode must start on "
+                    "a fresh page so prompt pages stay immutable once "
+                    "registered in the prefix cache")
+            # prefix hits advance in whole pages AND whole chunks
+            self._hit_gran = math.lcm(paging.page_size, self.prefill_chunk)
         self.slots = [_Slot() for _ in range(slots)]
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        self.preemptions = 0
+        self._admit_seq = 0
 
     # ---- admission --------------------------------------------------------
 
@@ -113,15 +146,127 @@ class Scheduler:
         tok[self.prefill_len - len(p):] = p
         return tok
 
+    # ---- paged admission --------------------------------------------------
+
+    def _plan_hit(self, group: int, keys: list) -> tuple[int, list]:
+        """Longest page-and-chunk-aligned cached prefix of ``keys``.
+
+        Capped at ``prefill_len - prefill_chunk``: the final chunk always
+        runs so the finishing step has last-token logits to sample from.
+        Returns (hit_pages, gids) — not yet retained."""
+        pm = self.paging
+        gids = []
+        for k in keys:
+            gid = pm.peek(group, k)
+            if gid is None:
+                break
+            gids.append(gid)
+        hit_tokens = min(len(gids) * pm.page_size,
+                         self.prefill_len - self.prefill_chunk)
+        hit_tokens -= hit_tokens % self._hit_gran
+        hit_pages = hit_tokens // pm.page_size
+        return hit_pages, gids[:hit_pages]
+
+    def _admit_paged(self) -> None:
+        """Arrival-ordered admission against the page budget.
+
+        Starvation guard: the first time a request doesn't fit it is
+        marked ``bypassed`` and later arrivals may still be admitted
+        past it; the second time, admission stops at it — no request is
+        ever passed over twice while pages/slots free up behind it."""
+        pm = self.paging
+        free = [i for i, s in enumerate(self.slots) if s.req is None]
+        pages_per_prompt = self.prefill_len // pm.page_size
+        for req in list(self.queue):
+            if not free:
+                break
+            tokens = self._padded(req.prompt)
+            keys = page_keys(tokens, pm.page_size)
+            placed = None
+            for i in free:
+                g = pm.slot_group(i)
+                hit_pages, gids = self._plan_hit(g, keys)
+                need = pages_per_prompt - hit_pages
+                if pm.available_pages(g, exclude=gids) >= need:
+                    placed = (i, g, hit_pages, gids)
+                    break
+            if placed is None:
+                if req.bypassed:
+                    break  # guard: it will be next, or nothing moves
+                req.bypassed = True
+                continue
+            i, g, hit_pages, gids = placed
+            free.remove(i)
+            self.queue.remove(req)
+            self._admit_seq += 1
+            slot = self.slots[i]
+            slot.req = req
+            slot.tokens = tokens
+            slot.pos = hit_pages * pm.page_size  # skip cached prefix
+            slot.length = 0
+            slot.seq = self._admit_seq
+            slot.hit_pages = hit_pages
+            slot.keys = keys
+            req.bypassed = False
+            pm.stats.prefix_lookup_pages += pages_per_prompt
+            for p, gid in enumerate(gids):
+                pm.hit(gid)
+                pm.assign(i, p, gid)
+            for p in range(hit_pages, pages_per_prompt):
+                pm.assign(i, p, pm.alloc_or_evict(g))
+
+    def _preempt(self, victim: int) -> None:
+        """Evict a running request for recompute: free its pages, clear
+        generated output, requeue at the FRONT (it keeps arrival
+        priority and the starvation guard protects its readmission)."""
+        slot = self.slots[victim]
+        req = slot.req
+        self.paging.free_slot(victim)
+        req.out.clear()
+        req.t_first = None
+        req.bypassed = False
+        self.queue.insert(0, req)
+        self.slots[victim] = _Slot()
+        self.preemptions += 1
+
+    def _ensure_decode_page(self, i: int) -> bool:
+        """Make sure slot i's next decode write lands in an owned page,
+        preempting the youngest other slot in the group if the pool is
+        exhausted. False = slot i itself got unschedulable (cannot
+        happen while i holds pages; defensive)."""
+        pm = self.paging
+        p = self.slots[i].length // pm.page_size
+        if pm.table[i, p] != 0:
+            return True
+        g = pm.slot_group(i)
+        while True:
+            try:
+                pm.assign(i, p, pm.alloc_or_evict(g))
+                return True
+            except PoolExhaustedError:
+                victims = [j for j, s in enumerate(self.slots)
+                           if j != i and s.req is not None
+                           and pm.slot_group(j) == g]
+                if not victims:
+                    raise PoolExhaustedError(
+                        f"slot {i} needs a decode page but group {g} has "
+                        "no free, evictable, or preemptible page — pool "
+                        "too small for a single max-length request"
+                    ) from None
+                self._preempt(max(victims, key=lambda j: self.slots[j].seq))
+
     # ---- prefill ----------------------------------------------------------
 
     def plan_prefill(self) -> Optional[PrefillPlan]:
-        for slot in self.slots:
-            if slot.req is None and self.queue:
-                slot.req = self.queue.pop(0)
-                slot.tokens = self._padded(slot.req.prompt)
-                slot.pos = 0
-                slot.length = 0
+        if self.paging is not None:
+            self._admit_paged()
+        else:
+            for slot in self.slots:
+                if slot.req is None and self.queue:
+                    slot.req = self.queue.pop(0)
+                    slot.tokens = self._padded(slot.req.prompt)
+                    slot.pos = 0
+                    slot.length = 0
         chunk = self.prefill_chunk
         active, finishing = [], []
         tokens = np.zeros((self.n_slots, chunk), np.int32)
@@ -153,12 +298,27 @@ class Scheduler:
             if req.t_first is None:
                 req.t_first = now
             slot.length = self.prefill_len
+            if self.paging is not None:
+                # prompt fully written: publish the owned (non-hit) pages
+                # under their chain keys; decode starts on a fresh page
+                # (prefill_len % page_size == 0), so these stay immutable
+                pm = self.paging
+                g = pm.slot_group(i)
+                for p in range(slot.hit_pages,
+                               self.prefill_len // pm.page_size):
+                    pm.register_prefix(g, slot.keys[p], int(pm.table[i, p]))
             if len(req.out) >= req.max_new:
                 self._finish(i, now)
 
     # ---- decode -----------------------------------------------------------
 
     def plan_decode(self) -> Optional[DecodePlan]:
+        if self.paging is not None:
+            # lazy page allocation for this round's writes, BEFORE the
+            # plan is built: a preempted victim drops out of the round
+            for i, slot in enumerate(self.slots):
+                if slot.req is not None and slot.pos >= self.prefill_len:
+                    self._ensure_decode_page(i)
         tokens = np.zeros((self.n_slots, 1), np.int32)
         lengths = np.zeros(self.n_slots, np.int32)
         mask = np.zeros(self.n_slots, bool)
@@ -193,4 +353,6 @@ class Scheduler:
         slot.req.done = True
         slot.req.t_done = now
         self.finished.append(slot.req)
+        if self.paging is not None:
+            self.paging.free_slot(i)  # pages recycle, not the whole slot
         self.slots[i] = _Slot()

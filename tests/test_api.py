@@ -413,9 +413,11 @@ def test_no_vals_key_sniffing_outside_migration_shim():
 
 
 def test_raw_surface_warns_and_still_computes():
-    """The one-release positional shims work but deprecate loudly (their
-    messages start with "repro.kernels.raw", which pytest promotes to an
-    error everywhere else — see pyproject filterwarnings)."""
+    """The positional surface lives ONLY in repro.kernels.raw; it works
+    but deprecates loudly (its messages start with "repro.kernels.raw",
+    which pytest promotes to an error everywhere else — see pyproject
+    filterwarnings). The one-release re-export shims in the old op
+    modules are gone."""
     from repro.kernels import raw
 
     nm = NMConfig(2, 4)
@@ -426,20 +428,25 @@ def test_raw_surface_warns_and_still_computes():
         y = raw.nm_matmul_raw(x, sw.vals, sw.idx, nm, use_kernel=False)
     np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
                                rtol=1e-4, atol=1e-3)
-    # the in-package re-export shims route through the same warning
-    from repro.kernels.indexmac import ops
-
-    with pytest.warns(DeprecationWarning, match=r"repro\.kernels\.raw"):
-        ops.nm_matmul_raw(x, sw.vals, sw.idx, nm, use_kernel=False)
 
 
-# the deprecated positional surface may only be *defined* in raw.py and
-# the op modules hosting its one-release re-export shims
+def test_old_shim_locations_stay_removed():
+    """The PR-era re-export shims must not resurrect: the positional
+    names are importable from repro.kernels.raw and nowhere else."""
+    from repro.kernels import indexmac_gather
+    from repro.kernels.indexmac import ops as indexmac_ops
+    from repro.kernels.indexmac_gather import ops as gather_ops
+
+    for mod, name in [(indexmac_ops, "nm_matmul_raw"),
+                      (indexmac_ops, "nm_matmul_q_raw"),
+                      (gather_ops, "indexmac_gather_spmm"),
+                      (indexmac_gather, "indexmac_gather_spmm")]:
+        assert not hasattr(mod, name), (mod.__name__, name)
+
+
+# the deprecated positional surface may only be *defined* in raw.py
 _RAW_HOSTS = {
     SRC / "kernels" / "raw.py",
-    SRC / "kernels" / "indexmac" / "ops.py",
-    SRC / "kernels" / "indexmac_gather" / "ops.py",
-    SRC / "kernels" / "indexmac_gather" / "__init__.py",
 }
 
 

@@ -1,0 +1,104 @@
+"""_write_cache per-slot-offset edge cases (models/attention.py).
+
+The cache write is the one primitive every serving mode shares (decode,
+chunked prefill, paged pools all funnel through it or its paged
+sibling), so its offset semantics are pinned here: s=1 vs s>1 writes at
+ragged per-slot offsets, the boundary write at exactly ``max_seq - s``,
+and the out-of-range contract — a typed :class:`CacheLenError` for
+concrete offsets, explicit drop (never wraparound) for traced ones.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import CacheLenError, _write_cache
+
+S = 16  # max_seq of the toy cache
+
+
+def _cache(b=4, h=2, d=3):
+    return jnp.zeros((b, S, h, d), jnp.float32)
+
+
+def _new(b, s, h=2, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(b, s, h, d)).astype(np.float32))
+
+
+def _ref(cache, new, offsets):
+    out = np.array(cache)
+    s = new.shape[1]
+    for i, off in enumerate(np.atleast_1d(offsets)):
+        out[i, off:off + s] = np.asarray(new)[i]
+    return out
+
+
+def test_single_token_write_at_ragged_offsets():
+    off = jnp.asarray([0, 5, 11, S - 1], jnp.int32)
+    new = _new(4, 1)
+    got = _write_cache(_cache(), new, off)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  _ref(_cache(), new, np.asarray(off)))
+
+
+def test_chunk_write_at_ragged_offsets():
+    """s>1 per-slot writes: each slot's chunk lands at its own offset,
+    untouched rows stay exactly zero."""
+    off = jnp.asarray([0, 3, 7, S - 4], jnp.int32)
+    new = _new(4, 4, seed=1)
+    got = _write_cache(_cache(), new, off)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  _ref(_cache(), new, np.asarray(off)))
+
+
+def test_write_at_exactly_max_seq_minus_s():
+    """The boundary write fills the last s rows and raises nothing."""
+    for s in (1, 4):
+        off = jnp.full((2,), S - s, jnp.int32)
+        new = _new(2, s, seed=2)
+        got = np.asarray(_write_cache(_cache(b=2), new, off))
+        np.testing.assert_array_equal(got[:, S - s:], np.asarray(new))
+        assert (got[:, :S - s] == 0).all()
+
+
+def test_scalar_offset_matches_vector_offset():
+    """The dry-run scalar path and the per-slot vector path agree when
+    every slot shares one offset."""
+    new = _new(3, 4, seed=3)
+    scalar = _write_cache(_cache(b=3), new, jnp.int32(5))
+    vector = _write_cache(_cache(b=3), new, jnp.full((3,), 5, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(scalar), np.asarray(vector))
+
+
+@pytest.mark.parametrize("off,s", [
+    (S, 1),          # one past the end
+    (S - 1, 2),      # chunk straddles the end
+    (-1, 1),         # negative offset
+])
+def test_concrete_out_of_range_raises_typed_error(off, s):
+    with pytest.raises(CacheLenError):
+        _write_cache(_cache(b=2), _new(2, s),
+                     jnp.full((2,), off, jnp.int32))
+
+
+def test_concrete_scalar_out_of_range_raises_typed_error():
+    with pytest.raises(CacheLenError):
+        _write_cache(_cache(), _new(4, 2), jnp.int32(S - 1))
+
+
+def test_traced_out_of_range_drops_not_wraps():
+    """Inside jit the offset can't be inspected; rows past the end must
+    be DISCARDED — a wraparound would corrupt position 0 (the start of
+    some request's prompt)."""
+    new = _new(2, 2, seed=4)
+    mixed = jnp.asarray([3, S - 1], jnp.int32)  # slot 1 straddles the end
+
+    got = np.asarray(jax.jit(_write_cache)(_cache(b=2), new, mixed))
+    # in-range slot written in full
+    np.testing.assert_array_equal(got[0, 3:5], np.asarray(new)[0])
+    # straddling slot: first row lands, overflow row dropped — and
+    # crucially position 0 is untouched (no wraparound)
+    np.testing.assert_array_equal(got[1, S - 1], np.asarray(new)[1, 0])
+    assert (got[1, 0] == 0).all()
+    assert (got[0, :3] == 0).all() and (got[0, 5:] == 0).all()

@@ -1,0 +1,445 @@
+"""Paged KV cache: PageManager units, page-budget scheduling with the
+starvation guard, and paged-engine token parity with the slot engine.
+
+The contract (same one PR 5/6 established for sharded serving): the
+paged engine must be *token-identical* to the slot engine on the same
+request stream — mixed lengths, mid-flight admissions, shared prefixes,
+even preemption-by-recompute (greedy restart reproduces the stream) —
+with zero recompiles across admissions. Parity runs in f32 greedy so
+equality is exact, not approximate.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import common
+from repro.configs import get_reduced
+from repro.models.transformer import LM
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.paging import (
+    PageManager,
+    PoolExhaustedError,
+    page_keys,
+)
+from repro.serving.scheduler import Scheduler
+
+
+# ---------------------------------------------------------------------------
+# PageManager units
+# ---------------------------------------------------------------------------
+
+
+def _pm(**kw):
+    base = dict(page_size=4, pages_per_group=8, slots=2, max_seq=16)
+    base.update(kw)
+    return PageManager(**base)
+
+
+def test_alloc_release_recycles_pages():
+    pm = _pm()
+    a = pm.alloc(0)
+    b = pm.alloc(0)
+    assert a != b and a % pm.stride != 0 and b % pm.stride != 0  # never null
+    assert pm.free_pages(0) == 6
+    pm.release(a)
+    assert pm.free_pages(0) == 7
+    assert pm.alloc(0) == a  # LIFO recycle: freed page is reused first
+
+
+def test_pool_exhaustion_raises_typed_error():
+    pm = _pm()
+    for _ in range(8):
+        pm.alloc(0)
+    with pytest.raises(PoolExhaustedError):
+        pm.alloc(0)
+
+
+def test_refcounted_sharing_and_release():
+    pm = _pm()
+    a = pm.alloc(0)
+    pm.retain(a)
+    assert pm.is_shared(a)
+    pm.release(a)
+    assert not pm.is_shared(a)  # one holder left
+    assert pm.free_pages(0) == 7
+    pm.release(a)
+    assert pm.free_pages(0) == 8  # last release frees
+
+
+def test_prefix_cache_peek_hit_and_lru_eviction():
+    pm = _pm()
+    pages = [pm.alloc(0) for _ in range(3)]
+    keys = [bytes([i]) * 16 for i in range(3)]
+    for k, g in zip(keys, pages):
+        pm.register_prefix(0, k, g)
+    for g in pages:
+        pm.release(g)  # cached pages survive release as evictable
+    assert pm.free_pages(0) == 5
+    assert pm.evictable_pages(0) == 3
+    assert pm.peek(0, keys[1]) == pages[1]
+    pm.hit(pages[0])  # bump page 0: now most recently used
+    assert pm.evict_lru(0)  # evicts pages[1] (oldest untouched)
+    assert pm.peek(0, keys[1]) is None
+    assert pm.peek(0, keys[2]) == pages[2]
+    pm.release(pages[0])
+    assert pm.stats.evictions == 1 and pm.stats.prefix_hit_pages == 1
+
+
+def test_eviction_skips_actively_referenced_pages():
+    pm = _pm(pages_per_group=4)
+    a = pm.alloc(0)
+    pm.register_prefix(0, b"k" * 16, a)  # cached AND ref=1: not evictable
+    assert not pm.evict_lru(0)
+    for _ in range(3):
+        pm.alloc(0)
+    with pytest.raises(PoolExhaustedError):
+        pm.alloc_or_evict(0)
+    pm.release(a)  # now cache-only -> reclaimable under pressure
+    assert pm.alloc_or_evict(0) == a
+
+
+def test_fork_is_metadata_cow():
+    """fork() re-homes a writer off a shared page: fresh private page,
+    old refcount decremented, other readers unaffected."""
+    pm = _pm()
+    a = pm.alloc(0)
+    pm.retain(a)  # two readers
+    new = pm.fork(a)
+    assert new != a and not pm.is_shared(new)
+    assert not pm.is_shared(a)  # back to one reader
+    assert pm.stats.forks == 1
+
+
+def test_slot_assign_and_free_releases_pages():
+    pm = _pm()
+    for p in range(2):
+        pm.assign(0, p, pm.alloc(0))
+    assert pm.used_pages() == 2 and pm.table[0, 0] != 0
+    pm.free_slot(0)
+    assert pm.used_pages() == 0 and (pm.table[0] == 0).all()
+    assert pm.free_pages(0) == 8
+
+
+def test_grouped_pools_are_independent():
+    pm = _pm(slots=4, groups=2)
+    assert [pm.slot_group(i) for i in range(4)] == [0, 0, 1, 1]
+    a = pm.alloc(0)
+    b = pm.alloc(1)
+    assert pm.group_of(a) == 0 and pm.group_of(b) == 1
+    assert a % pm.stride != 0 and b % pm.stride != 0
+    # a group's prefix registrations are invisible to the other group
+    pm.register_prefix(0, b"k" * 16, a)
+    assert pm.peek(1, b"k" * 16) is None
+
+
+def test_manager_validation_errors():
+    with pytest.raises(ValueError, match="multiple"):
+        _pm(page_size=5)  # 16 % 5 != 0
+    with pytest.raises(ValueError, match="full-length"):
+        _pm(pages_per_group=3)  # < 16/4 pages per request
+    with pytest.raises(ValueError, match="groups"):
+        _pm(slots=3, groups=2)
+
+
+def test_page_keys_chain_semantics():
+    """key[p] commits to ALL tokens through page p (a chain, not a
+    per-block hash): shared prefix -> equal keys, any earlier
+    divergence -> different keys from that page on."""
+    a = np.arange(16, dtype=np.int32)
+    b = a.copy()
+    b[5] = 99  # diverge inside page 1
+    ka, kb = page_keys(a, 4), page_keys(b, 4)
+    assert len(ka) == 4
+    assert ka[0] == kb[0]
+    assert all(ka[p] != kb[p] for p in (1, 2, 3))  # chained
+    assert len(page_keys(a[:7], 4)) == 1  # only full pages get keys
+
+
+# ---------------------------------------------------------------------------
+# scheduler: arrival order, starvation guard, preemption
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, n=8, max_new=4, seed=None):
+    rng = np.random.default_rng(seed if seed is not None else rid)
+    return Request(rid=rid, prompt=rng.integers(
+        1, 500, size=n).astype(np.int32), max_new=max_new)
+
+
+def test_admission_is_arrival_ordered():
+    """Slot admission is FIFO: with every resource free, the first
+    arrivals get the slots, in order."""
+    sched = Scheduler(slots=2, max_seq=32, prefill_len=8)
+    for i in range(4):
+        sched.submit(_req(i))
+    plan = sched.plan_prefill()
+    assert plan.active == [0, 1]
+    assert [sched.slots[i].req.rid for i in plan.active] == [0, 1]
+    assert [r.rid for r in sched.queue] == [2, 3]
+
+
+def test_paged_admission_is_arrival_ordered():
+    pm = _pm(slots=2, pages_per_group=8)
+    sched = Scheduler(slots=2, max_seq=16, prefill_len=8,
+                      prefill_chunk=4, paging=pm)
+    for i in range(4):
+        sched.submit(_req(i))
+    plan = sched.plan_prefill()
+    assert [sched.slots[i].req.rid for i in plan.active] == [0, 1]
+
+
+def test_starvation_guard_bypass_once():
+    """A request that doesn't fit may be bypassed by later arrivals
+    exactly once; the second failure stops admission behind it."""
+    # 5 pages: one 8-token prompt (2 pages) admitted into slot 0 leaves
+    # 3 free; slot 1 free but a second 2-page prompt fits fine — so use
+    # a pool where slot count, not pages, is the contended resource:
+    # occupy both slots, then free one while the queue holds big-first.
+    pm = _pm(slots=2, pages_per_group=4, max_seq=16)
+    sched = Scheduler(slots=2, max_seq=16, prefill_len=8,
+                      prefill_chunk=4, paging=pm)
+    sched.submit(_req(0))  # 2 pages
+    sched.plan_prefill()   # admitted into slot 0; 2 pages left in pool
+    # occupy the remaining 2 pages so nothing else fits
+    blockers = [pm.alloc(0), pm.alloc(0)]
+    sched.submit(_req(1))
+    sched.submit(_req(2))
+    plan = sched.plan_prefill()
+    assert plan.active == [0]  # nobody admitted; both got their one pass
+    assert sched.queue[0].bypassed and sched.queue[1].bypassed
+    # free ONE page: still not enough for req 1 (needs 2) — and because
+    # req 1 was already bypassed once, admission must stop AT req 1:
+    # req 2 does not get probed again (order intact, nobody admitted)
+    pm.release(blockers[0])
+    plan = sched.plan_prefill()
+    assert plan.active == [0]
+    assert [r.rid for r in sched.queue] == [1, 2]  # order intact
+    # free the second page: req 1 now fits and goes first
+    pm.release(blockers[1])
+    sched.plan_prefill()
+    assert sched.slots[1].req.rid == 1
+    assert not sched.slots[1].req.bypassed  # guard resets on admission
+
+
+def test_requeued_preemption_victim_keeps_priority():
+    pm = _pm(slots=2, pages_per_group=4, max_seq=16)
+    sched = Scheduler(slots=2, max_seq=16, prefill_len=8,
+                      prefill_chunk=4, paging=pm)
+    sched.submit(_req(0))
+    sched.plan_prefill()
+    sched.submit(_req(5))
+    sched._preempt(0)
+    assert [r.rid for r in sched.queue] == [0, 5]  # front, not back
+    assert sched.preemptions == 1
+
+
+# ---------------------------------------------------------------------------
+# engine parity: paged == slot, zero recompiles
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def yi():
+    common.set_compute_dtype(jnp.float32)  # exactness for parity
+    cfg = get_reduced("yi-9b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    yield cfg, lm, params
+    common.set_compute_dtype(jnp.bfloat16)
+
+
+def _serve(lm, params, prompts, max_news, **kw):
+    eng = ServeEngine(lm, params, **kw)
+    for i, (p, n) in enumerate(zip(prompts, max_news)):
+        eng.submit(Request(rid=i, prompt=p, max_new=n))
+    out = {r.rid: tuple(r.out) for r in eng.run()}
+    return out, eng
+
+
+def _mixed_stream(cfg, n=7, seed=0):
+    """Mixed lengths, three of them sharing a prefix with request 0."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab_size, size=ln).astype(np.int32)
+               for ln in (8, 5, 8, 3, 8, 6, 8)[:n]]
+    prompts[2][:4] = prompts[0][:4]
+    if n > 4:
+        prompts[4] = prompts[0].copy()
+    max_news = [3 + i % 4 for i in range(n)]
+    return prompts, max_news
+
+
+def test_paged_engine_token_parity_mixed_stream(yi):
+    """7 mixed-length requests over 2 slots: admissions happen
+    mid-flight as requests finish. Paged output == slot output exactly,
+    zero recompiles, and the shared prefixes actually hit the cache."""
+    cfg, lm, params = yi
+    prompts, max_news = _mixed_stream(cfg)
+    kw = dict(slots=2, max_seq=32, prefill_len=8, prefill_chunk=4)
+    slot_out, es = _serve(lm, params, prompts, max_news, **kw)
+    paged_out, ep = _serve(lm, params, prompts, max_news, paged=True, **kw)
+    assert paged_out == slot_out
+    assert ep.compiled_cache_sizes() == {"prefill": 1, "decode": 1}
+    st = ep.throughput_stats()
+    assert st["prefix_hit_pages"] > 0
+    assert 0 < st["prefix_hit_rate"] <= 1
+    assert st["page_util_max"] <= 1.0
+    assert st["queue_depth_max"] >= 1  # stream oversubscribes the slots
+
+
+def test_paged_engine_token_parity_mla(yi):
+    """Same parity on an MLA model: the paged path must serve the
+    compressed ckv/kr pools identically (absorbed decode reads the
+    gathered latent view)."""
+    del yi  # fixture pins f32 for the module
+    cfg = get_reduced("deepseek-v2-lite-16b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(1))
+    prompts, max_news = _mixed_stream(cfg, n=5, seed=3)
+    kw = dict(slots=2, max_seq=32, prefill_len=8, prefill_chunk=4)
+    slot_out, _ = _serve(lm, params, prompts, max_news, **kw)
+    paged_out, ep = _serve(lm, params, prompts, max_news, paged=True, **kw)
+    assert paged_out == slot_out
+    assert ep.compiled_cache_sizes() == {"prefill": 1, "decode": 1}
+
+
+def test_paged_parity_full_chunk_prefill(yi):
+    """paged without prefill_chunk: the whole prompt prefills as ONE
+    mode="chunk" call (page_size defaults to prefill_len). Compared
+    against the chunk=4 slot engine — per-token K/V writes and each
+    query's full-cache masked attention are chunking-invariant, so the
+    greedy streams must agree exactly even though the step counts
+    differ."""
+    cfg, lm, params = yi
+    prompts, max_news = _mixed_stream(cfg, n=4, seed=5)
+    kw = dict(slots=2, max_seq=32, prefill_len=8)
+    chunked_out, _ = _serve(lm, params, prompts, max_news,
+                            prefill_chunk=4, **kw)
+    paged_out, _ = _serve(lm, params, prompts, max_news, paged=True, **kw)
+    assert paged_out == chunked_out
+
+
+def test_paged_engine_preemption_recovers(yi):
+    """An undersized pool forces preemption-by-recompute mid-decode; the
+    preempted request restarts (prefix cache skips its prompt chunks)
+    and the final streams still match the slot engine exactly."""
+    cfg, lm, params = yi
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab_size, size=8).astype(np.int32)
+               for _ in range(3)]
+    max_news = [18, 18, 6]
+    kw = dict(slots=2, max_seq=32, prefill_len=8, prefill_chunk=4)
+    slot_out, _ = _serve(lm, params, prompts, max_news, **kw)
+    # 9 pages of 4: two admitted prompts take 4, decode to length 26
+    # needs 7 pages each -> exhaustion mid-decode -> preemption
+    paged_out, ep = _serve(lm, params, prompts, max_news, paged=True,
+                           pool_pages=9, **kw)
+    assert ep.scheduler.preemptions > 0
+    assert paged_out == slot_out
+    assert ep.compiled_cache_sizes() == {"prefill": 1, "decode": 1}
+
+
+def test_paged_engine_isolation(yi):
+    """A request's stream must not depend on pool pressure or
+    co-residents: serve alone vs in a churny batch."""
+    cfg, lm, params = yi
+    rng = np.random.default_rng(9)
+    p = rng.integers(1, cfg.vocab_size, size=8).astype(np.int32)
+    kw = dict(slots=2, max_seq=32, prefill_len=8, prefill_chunk=4,
+              paged=True)
+    alone, _ = _serve(lm, params, [p], [6], **kw)
+    others = [rng.integers(1, cfg.vocab_size, size=6).astype(np.int32)
+              for _ in range(3)]
+    batched, _ = _serve(lm, params, others + [p], [3, 4, 5, 6], **kw)
+    assert batched[3] == alone[0]
+
+
+def test_env_var_page_geometry(yi, monkeypatch):
+    cfg, lm, params = yi
+    monkeypatch.setenv("REPRO_KV_PAGE_SIZE", "8")
+    monkeypatch.setenv("REPRO_KV_POOL_PAGES", "6")
+    eng = ServeEngine(lm, params, slots=2, max_seq=32, prefill_len=8,
+                      paged=True)
+    assert eng.page_manager.page_size == 8
+    assert eng.page_manager.capacity == 6
+    # explicit args beat the environment
+    eng = ServeEngine(lm, params, slots=2, max_seq=32, prefill_len=8,
+                      paged=True, page_size=4, pool_pages=16)
+    assert eng.page_manager.page_size == 4
+    assert eng.page_manager.capacity == 16
+
+
+def test_paged_validation_errors(yi):
+    cfg, lm, params = yi
+    with pytest.raises(ValueError, match="multiple"):
+        ServeEngine(lm, params, slots=2, max_seq=32, prefill_len=8,
+                    paged=True, page_size=5)
+    with pytest.raises(ValueError, match="full-length"):
+        ServeEngine(lm, params, slots=2, max_seq=32, prefill_len=8,
+                    paged=True, page_size=4, pool_pages=4)
+    with pytest.raises(ValueError, match="page_size"):
+        # prefill_len must land on a page boundary (prompt pages become
+        # immutable prefix-cache entries; decode starts on a fresh page)
+        ServeEngine(lm, params, slots=2, max_seq=32, prefill_len=8,
+                    paged=True, page_size=16)
+
+
+def test_paged_rejects_stateful_mixers():
+    cfg = get_reduced("rwkv6-3b")
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError, match="attention"):
+        ServeEngine(lm, params, slots=1, max_seq=32, prefill_len=8,
+                    paged=True)
+
+
+# ---------------------------------------------------------------------------
+# sharded spec rule (no lowering): paged pools reuse the cache pspecs
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+
+    class devices:  # noqa: D106
+        shape = (2, 4)
+        size = 8
+
+
+def test_paged_pool_reuses_head_sharded_cache_specs():
+    """The pool leaf (rows, page_size, H, D) has the same rank layout as
+    the slot cache (slots, max_seq, H, D): serve_cache_pspecs shards the
+    page rows over "data" and the head axis over "model" unchanged."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import serve_cache_pspecs, serve_tp_plan
+
+    cfg = get_reduced("yi-9b")
+    blk, rep = cfg.plan[0]
+    kvcfg = dataclasses.replace(cfg, plan=((dataclasses.replace(
+        blk, mixer=dataclasses.replace(blk.mixer, kv_heads=4)), rep),))
+    lm = LM(kvcfg)
+    plan = serve_tp_plan(kvcfg, 4)
+    assert plan.shard_kv
+    pm = PageManager(page_size=4, pages_per_group=8, slots=2, max_seq=32,
+                     groups=2)
+    pool = jax.eval_shape(lambda: lm.init_cache(pm.rows, pm.page_size))
+    specs = serve_cache_pspecs(pool, _FakeMesh, plan)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    k_specs = [s for path, s in flat
+               if any(getattr(k, "key", None) == "k" for k in path)]
+    assert k_specs, "no k-leaf spec found"
+    for s in k_specs:
+        assert s[-3:] == P("data", None, "model")[-3:] or \
+            tuple(s)[-3:] == ("data", None, "model")
+
+
+def test_paged_pool_rows_divide_data_axis():
+    """rows = groups * stride with groups = dp, so the leading pool axis
+    always shards evenly over "data"."""
+    for dp in (1, 2, 4):
+        pm = PageManager(page_size=4, pages_per_group=8, slots=4,
+                         max_seq=16, groups=dp)
+        assert pm.rows % dp == 0

@@ -2,8 +2,8 @@
 forced 8-device host mesh, plus unit tests for the head-aware TP spec
 rules.
 
-The parity matrix (float 2:4, int8 2:4, mixed 2:4/1:4, kv-head-sharded)
-runs real multi-device CPU execution in a subprocess (device count must
+The parity matrix (float 2:4, int8 2:4, mixed 2:4/1:4, kv-head-sharded,
+paged-KV) runs real multi-device CPU execution in a subprocess (device count must
 be set before jax initializes — same pattern as test_sharding /
 test_moe_distributed); each variant asserts identical token ids AND that
 the compiled-step caches hold exactly one entry after serving (zero
@@ -87,6 +87,35 @@ assert dec, registry.dispatch_history()
 bad = [r for r in dec if not r.impl.startswith("pallas")]
 assert not bad, bad
 print(f"KERNELDECODE ok {len(dec)}")
+# paged: the sharded PAGED engine (block-table gather, one page sub-pool
+# per data shard, head-sharded pool pages via the unchanged cache specs)
+# against the single-device SLOT engine — cross-engine AND cross-layout
+# token parity in one shot. Shared prompt prefixes must actually hit the
+# per-shard prefix caches. kvcfg so the pool's head axis really shards.
+lm = LM(kvcfg)
+params = lm.init(jax.random.PRNGKey(0))
+pp = [rng.integers(0, kvcfg.vocab_size, size=8).astype(np.int32)
+      for _ in range(5)]
+for p in pp[1:]:
+    p[:4] = pp[0][:4]  # every request shares the first page
+kw = dict(slots=2, max_seq=64, prefill_len=8, prefill_chunk=4)
+def serve_paged(make):
+    eng = make()
+    for i, p in enumerate(pp):
+        eng.submit(Request(rid=i, prompt=p, max_new=4 + i))
+    return {r.rid: tuple(r.out) for r in eng.run()}, eng
+single, _ = serve_paged(lambda: ServeEngine(lm, params, **kw))
+paged, ep = serve_paged(
+    lambda: ShardedServeEngine(lm, params, mesh=mesh, paged=True, **kw))
+assert paged == single, (single, paged)
+cs = ep.compiled_cache_sizes()
+assert cs in ({"prefill": 1, "decode": 1},
+              {"prefill": -1, "decode": -1}), cs
+assert ep.page_manager.groups == 2  # one sub-pool per data shard
+st = ep.throughput_stats()
+assert st["prefix_hit_pages"] >= 1, st  # shared page reused on-shard
+print(f"OKVARIANT paged {ep.tp_plan.shard_attn:d}"
+      f"{ep.tp_plan.shard_kv:d}{ep.tp_plan.shard_ffn:d}")
 print("RESULT ok")
 """
 
@@ -106,7 +135,7 @@ def test_sharded_engine_token_parity(subproc):
     variants = [l.split()[1] for l in subproc.splitlines()
                 if l.startswith("OKVARIANT")]
     assert variants == ["float24", "float24-chunked", "int8", "mixednm",
-                        "kvsharded", "kernel24"]
+                        "kvsharded", "kernel24", "paged"]
     assert "RESULT ok" in subproc
 
 
