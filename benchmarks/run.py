@@ -97,10 +97,13 @@ def main(argv=None) -> None:
             rows += mrows
             layer_rows += mlayers
         layer_rows = _dedupe_layers(layer_rows)
+    serve_metrics: dict = {}
     if args.serve:
         from benchmarks import serve_bench  # noqa: PLC0415
 
-        rows += serve_bench.bench_rows(smoke=args.smoke)
+        srows, serve_metrics = serve_bench.bench_rows_and_metrics(
+            smoke=args.smoke)
+        rows += srows
 
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
@@ -115,6 +118,10 @@ def main(argv=None) -> None:
         "layers": layer_rows,
         "kernels": tpu_kernel_roofline.kernel_records(),
     }
+    if serve_metrics:
+        # per-device-count obs metrics snapshots from the serve bench's
+        # untimed obs-on pass (the timed rows stay obs-off)
+        payload["serve_metrics"] = serve_metrics
     with open(OUT_JSON, "w") as f:
         json.dump(payload, f, indent=1)
     # stderr: stdout from the CSV header down is machine-consumed

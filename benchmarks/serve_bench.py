@@ -8,10 +8,22 @@ best-of-3 passes, so a transient contention window on a shared runner
 does not masquerade as a serving regression — and reports three
 schema-2 rows:
 
-  serve_decode_{variant}_{D}dev  us per generated token   (GATED)
-  serve_ttft_{variant}_{D}dev    mean time-to-first-token us
-  serve_itl_{variant}_{D}dev     p50 inter-token latency us
-                                 (derived carries p99)
+  serve_decode_{variant}_{D}dev    us per generated token   (GATED)
+  serve_ttft_{variant}_{D}dev      mean time-to-first-token us
+  serve_ttft_p50_{variant}_{D}dev  p50 TTFT us (info, ungated)
+  serve_ttft_p99_{variant}_{D}dev  p99 TTFT us (info, ungated)
+  serve_itl_{variant}_{D}dev       p50 inter-token latency us
+                                   (derived carries p99)
+
+Inter-token latency pools each finished request's own token-timestamp
+gaps (``Request.t_tokens``) — not a diff over the engine's global
+decode clock, which would charge admission/preemption stalls between
+*other* requests' steps to every request.
+
+The timed passes always run with observability OFF (the gated rows
+measure the zero-overhead path). A final untimed pass per device count
+runs with a fresh ``repro.obs`` bundle enabled and attaches its metrics
+snapshot to ``BENCH_results.json`` (``serve_metrics``).
 
 The ``serve_decode_*`` and ``serve_itl_*`` families gate in
 ``check_regression.py`` — us/token is inverse tokens/sec, and the
@@ -129,25 +141,33 @@ def _child(devices: int, smoke: bool) -> None:
             wall = time.perf_counter() - t0
             toks = sum(len(r.out) for r in done)
             assert len(done) == requests, (variant, len(done))
-            ttft = float(np.mean(
-                [r.t_first - r.t_submit for r in done]))
-            itl = np.diff(np.asarray(eng.decode_times))
-            passes.append((wall / toks, toks / wall, ttft,
+            ttfts = np.asarray(
+                [r.t_first - r.t_submit for r in done])
+            # per-request inter-token gaps, pooled across the pass
+            itl = np.concatenate([r.itl_s() for r in done])
+            passes.append((wall / toks, toks / wall, float(ttfts.mean()),
                            float(np.percentile(itl, 50)),
-                           float(np.percentile(itl, 99))))
+                           float(np.percentile(itl, 99)),
+                           float(np.percentile(ttfts, 50)),
+                           float(np.percentile(ttfts, 99))))
         sizes = eng.compiled_cache_sizes()
         assert sizes["prefill"] in (-1, 1) and sizes["decode"] in (-1, 1), \
             (variant, sizes)  # recompiles would poison the timings
-        us_tok, toks_s, ttft, p50, p99 = min(passes)
+        us_tok, toks_s, ttft, p50, p99, tp50, tp99 = min(passes)
         dev = f"{devices}dev"
         rows.append((f"serve_decode_{variant}_{dev}", us_tok * 1e6,
                      f"{toks_s:.1f}tok/s"))
         rows.append((f"serve_ttft_{variant}_{dev}", ttft * 1e6,
                      f"chunk={chunk}"))
+        rows.append((f"serve_ttft_p50_{variant}_{dev}", tp50 * 1e6,
+                     "info"))
+        rows.append((f"serve_ttft_p99_{variant}_{dev}", tp99 * 1e6,
+                     "info"))
         rows.append((f"serve_itl_{variant}_{dev}", p50 * 1e6,
                      f"p99={p99 * 1e6:.0f}us"))
     rows += _paged_cell(devices, smoke, mesh)
     print("ROWS" + json.dumps(rows))
+    print("METRICS" + json.dumps(_metrics_pass(devices, smoke, mesh)))
 
 
 def _paged_cell(devices: int, smoke: bool, mesh) -> list[tuple]:
@@ -237,21 +257,71 @@ def _paged_cell(devices: int, smoke: bool, mesh) -> list[tuple]:
     ]
 
 
+def _metrics_pass(devices: int, smoke: bool, mesh) -> dict:
+    """One untimed paged serve with a fresh ``repro.obs`` bundle enabled.
+
+    A *fresh* engine is built under the bundle on purpose: kernel
+    dispatch and autotune-cache decisions happen at trace time, so only
+    a run that pays its own compiles records the ``kernel_dispatch_*``
+    and ``autotune_*`` metrics alongside the engine/scheduler/paging
+    ones. Returns the ``MetricsRegistry.snapshot()`` dict that
+    ``run.py`` attaches to ``BENCH_results.json``."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    import repro.obs as obs_mod
+    from repro.configs import get_reduced
+    from repro.models.transformer import LM
+    from repro.serving.engine import Request, ServeEngine, ShardedServeEngine
+
+    bundle = obs_mod.enable(obs_mod.Obs.create())
+    try:
+        cfg = get_reduced("yi-9b")
+        cfg = dataclasses.replace(
+            cfg, sparsity=dataclasses.replace(
+                cfg.sparsity, use_kernel=True))
+        lm = LM(cfg)
+        params = lm.init(jax.random.PRNGKey(0))
+        kw = dict(slots=4, max_seq=64, prefill_len=16, prefill_chunk=8,
+                  paged=True, page_size=8, pool_pages=16)
+        if mesh is not None:
+            eng = ShardedServeEngine(lm, params, mesh=mesh, **kw)
+        else:
+            eng = ServeEngine(lm, params, **kw)
+        rng = np.random.default_rng(0)
+        for i in range(4 if smoke else 8):
+            eng.submit(Request(
+                rid=i, prompt=rng.integers(
+                    0, cfg.vocab_size, size=16).astype(np.int32),
+                max_new=4))
+        eng.run()
+        return bundle.metrics.snapshot()
+    finally:
+        obs_mod.disable()
+
+
 # ---------------------------------------------------------------------------
 # parent: spawn one subprocess per device count
 # ---------------------------------------------------------------------------
 
 
-def bench_rows(smoke: bool = False) -> list[tuple]:
-    """All serve-bench rows; spawns the per-device-count subprocesses."""
+def bench_rows_and_metrics(smoke: bool = False) -> tuple[list, dict]:
+    """All serve-bench rows plus the per-device-count obs metrics
+    snapshots; spawns the per-device-count subprocesses."""
     here = os.path.dirname(os.path.abspath(__file__))
     root = os.path.dirname(here)
     rows: list[tuple] = []
+    metrics: dict = {}
     for devices in (1, 8):
         env = dict(os.environ)
         env["PYTHONPATH"] = os.pathsep.join(
             [os.path.join(root, "src"), root]
             + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+        # the timed cells must measure the zero-overhead path even when
+        # the harness itself runs under REPRO_OBS=1
+        env.pop("REPRO_OBS", None)
         if devices > 1:
             env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
             env["JAX_PLATFORMS"] = "cpu"  # host mesh is CPU by definition
@@ -268,7 +338,16 @@ def bench_rows(smoke: bool = False) -> list[tuple]:
         line = [l for l in proc.stdout.splitlines()
                 if l.startswith("ROWS")][0]
         rows += [tuple(r) for r in json.loads(line[len("ROWS"):])]
-    return rows
+        mline = [l for l in proc.stdout.splitlines()
+                 if l.startswith("METRICS")]
+        if mline:
+            metrics[f"{devices}dev"] = json.loads(mline[0][len("METRICS"):])
+    return rows, metrics
+
+
+def bench_rows(smoke: bool = False) -> list[tuple]:
+    """All serve-bench rows; spawns the per-device-count subprocesses."""
+    return bench_rows_and_metrics(smoke=smoke)[0]
 
 
 def main(argv=None) -> None:

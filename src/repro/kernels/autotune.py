@@ -31,6 +31,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
 from repro.core.sparsity import NMConfig
 from repro.kernels.padding import plan_nm_matmul
 
@@ -115,7 +116,14 @@ def cached_block(m: int, n: int, k: int, cfg: NMConfig, dtype,
     backend = jax.default_backend()
     with _LOCK:
         _load_locked()
-        return _MEM.get(_key(m, n, k, cfg, dtype, backend, family))
+        hit = _MEM.get(_key(m, n, k, cfg, dtype, backend, family))
+    bundle = _obs.get_obs()
+    if bundle is not None:
+        bundle.metrics.inc(
+            "autotune_cache_hits_total" if hit is not None
+            else "autotune_cache_misses_total",
+            family=family or "default")
+    return hit
 
 
 def candidate_blocks(m: int, n: int, k: int, cfg: NMConfig,
@@ -182,6 +190,7 @@ def tune(
     interpret = backend == "cpu"
     quantized = jnp.dtype(dtype) == jnp.dtype(jnp.int8)
     decode = family == "decode"
+    t_sweep0 = time.perf_counter()
     kk = -(-k // cfg.m) * cfg.m  # operand K must hold whole blocks
     w = random_nm_matrix(jax.random.PRNGKey(0), (kk, n), cfg, axis=0)
     vals, idx = compress_nm(w, cfg, axis=0)
@@ -236,6 +245,12 @@ def tune(
         _load_locked()
         _MEM[_key(m, n, k, cfg, dtype, backend, family)] = best
         _save_locked()
+    bundle = _obs.get_obs()
+    if bundle is not None:
+        bundle.metrics.inc("autotune_sweeps_total",
+                           family=family or "default")
+        bundle.metrics.observe("autotune_sweep_seconds",
+                               time.perf_counter() - t_sweep0)
     return best
 
 

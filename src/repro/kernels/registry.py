@@ -13,6 +13,14 @@ Pallas kernel rather than silently falling back to the dense reference).
 Dispatch happens at trace time: under ``jax.jit`` one record is written
 per compilation, not per call — the routing is shape-static, so one
 record per compiled shape is the complete story.
+
+Alongside the bounded record history the registry keeps **per-family
+dispatch counters** (``dispatch_counts``): a ``(op, impl) -> count``
+map that never evicts, so tests assert "the decode family dispatched N
+times and the reference route zero times" without sniffing the record
+list. When observability is enabled (:mod:`repro.obs`) every routing
+decision also increments the ``kernel_dispatch_total{op=,impl=}``
+metric.
 """
 from __future__ import annotations
 
@@ -20,6 +28,8 @@ import collections
 import dataclasses
 import threading
 from typing import Any, Callable, Optional
+
+from repro import obs as _obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +71,7 @@ class KernelImpl:
 _LOCK = threading.Lock()
 _IMPLS: dict[str, list[KernelImpl]] = {}
 _HISTORY: collections.deque[DispatchRecord] = collections.deque(maxlen=256)
+_COUNTS: collections.Counter = collections.Counter()  # (op, impl) -> n
 
 
 def make_ctx(shape, *, nm, use_kernel: bool, plan=None, dtype=None,
@@ -176,6 +187,11 @@ def explain(op: str, ctx: dict) -> DispatchRecord:
 def _record(rec: DispatchRecord) -> None:
     with _LOCK:
         _HISTORY.append(rec)
+        _COUNTS[(rec.op, rec.impl)] += 1
+    bundle = _obs.get_obs()
+    if bundle is not None:
+        bundle.metrics.inc("kernel_dispatch_total", op=rec.op,
+                           impl=rec.impl)
 
 
 def last_dispatch(op: Optional[str] = None) -> Optional[DispatchRecord]:
@@ -192,6 +208,19 @@ def dispatch_history(op: Optional[str] = None) -> list[DispatchRecord]:
         return [r for r in _HISTORY if op is None or r.op == op]
 
 
+def dispatch_counts(op_prefix: Optional[str] = None) -> dict:
+    """Cumulative ``(op, impl) -> count`` of every routing decision made
+    since process start (or :func:`clear_history`). Unlike the bounded
+    record history this never evicts — the supported way for tests and
+    monitoring to assert which families executed (e.g. decode-family
+    count > 0 and reference-route count == 0)."""
+    with _LOCK:
+        return {k: v for k, v in _COUNTS.items()
+                if op_prefix is None or k[0].startswith(op_prefix)}
+
+
 def clear_history() -> None:
+    """Reset both the bounded record history and the dispatch counters."""
     with _LOCK:
         _HISTORY.clear()
+        _COUNTS.clear()

@@ -9,15 +9,25 @@ Multi-device (tensor-parallel x data-parallel) serving:
 
 (on real accelerators drop the XLA_FLAGS override — the mesh axes map
 onto the attached devices; slots must divide the data axis).
+
+Observability: ``--trace-out trace.json`` / ``--metrics-out
+metrics.prom`` enable the :mod:`repro.obs` layer for the run (same as
+``REPRO_OBS=1``) and export a Perfetto-loadable Chrome trace and a
+Prometheus text snapshot on exit. ``--paged`` serves through the paged
+KV cache; ``--kernels`` forces the compressed GEMMs through the Pallas
+kernel families so the exported metrics include kernel-dispatch and
+autotune-cache activity.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import numpy as np
 
+import repro.obs as obs_mod
 from repro.configs import ARCHS, get_reduced
 from repro.models.transformer import LM
 from repro.serving.engine import Request, ServeEngine, ShardedServeEngine
@@ -45,16 +55,48 @@ def main() -> None:
     ap.add_argument("--strict", action="store_true",
                     help="reject prompts longer than prefill-len instead "
                          "of silently truncating to the tail")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged KV cache (page pool + "
+                         "block tables + prefix cache)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page (paged mode; default: the "
+                         "prefill chunk)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="total pages in the KV pool (paged mode; "
+                         "default: full residency for every slot)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="route compressed GEMMs through the Pallas "
+                         "kernel families (use_kernel=True)")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.JSON",
+                    help="enable observability and export a Chrome/"
+                         "Perfetto trace here on exit")
+    ap.add_argument("--metrics-out", default=None, metavar="METRICS.PROM",
+                    help="enable observability and export a Prometheus "
+                         "text snapshot here on exit")
     args = ap.parse_args()
 
+    bundle = None
+    if args.trace_out or args.metrics_out:
+        bundle = obs_mod.enable()
+
     cfg = get_reduced(args.arch)
+    if args.kernels:
+        if cfg.sparsity is None:
+            raise SystemExit(
+                f"--kernels: {args.arch} reduces to a dense config "
+                "(no compressed GEMMs to route)")
+        cfg = dataclasses.replace(
+            cfg, sparsity=dataclasses.replace(
+                cfg.sparsity, use_kernel=True))
     lm = LM(cfg)
     params = lm.init(jax.random.PRNGKey(0))
     kw = dict(slots=args.slots, max_seq=args.max_seq,
               prefill_len=args.prefill_len,
               prefill_chunk=args.prefill_chunk,
               temperature=args.temperature,
-              quantize=args.quantize, strict=args.strict)
+              quantize=args.quantize, strict=args.strict,
+              paged=args.paged, page_size=args.page_size,
+              pool_pages=args.pool_pages)
     if args.mesh:
         from repro.launch.mesh import make_serve_mesh
 
@@ -87,6 +129,15 @@ def main() -> None:
     assert eng.compiled_cache_sizes() in \
         ({"prefill": 1, "decode": 1}, {"prefill": -1, "decode": -1}), \
         eng.compiled_cache_sizes()
+    if bundle is not None:
+        if args.trace_out:
+            n = bundle.tracer.export_chrome(args.trace_out)
+            print(f"wrote {args.trace_out} ({n} events, "
+                  f"{bundle.tracer.dropped} dropped)")
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                f.write(bundle.metrics.to_prometheus())
+            print(f"wrote {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro.configs.base import AttnConfig
 from repro.models.transformer import LM
 from repro.serving.paging import PageManager
@@ -123,7 +124,8 @@ class ServeEngine:
                  strict: bool = False,
                  paged: bool = False,
                  page_size: Optional[int] = None,
-                 pool_pages: Optional[int] = None):
+                 pool_pages: Optional[int] = None,
+                 obs=None):
         if quantize not in (None, "int8"):
             raise ValueError(
                 f"quantize must be None or 'int8', got {quantize!r}")
@@ -136,6 +138,10 @@ class ServeEngine:
 
             params = quantize_tree(params)
         self.lm = lm
+        # observability: explicit bundle wins, else the process-global
+        # one (None when off — every instrumented site is is-not-None
+        # gated, so the off path allocates and records nothing)
+        self.obs = obs if obs is not None else _obs.get_obs()
         self.slots = slots
         self.max_seq = max_seq
         self.prefill_len = prefill_len
@@ -163,11 +169,11 @@ class ServeEngine:
                     "independent sub-pool")
             self.page_manager = PageManager(
                 page_size=ps, pages_per_group=pool // groups,
-                slots=slots, max_seq=max_seq, groups=groups)
+                slots=slots, max_seq=max_seq, groups=groups, obs=self.obs)
         self.scheduler = Scheduler(
             slots=slots, max_seq=max_seq, prefill_len=prefill_len,
             prefill_chunk=prefill_chunk, strict=strict,
-            paging=self.page_manager)
+            paging=self.page_manager, obs=self.obs)
         self.prefill_chunk = self.scheduler.prefill_chunk
         if self.prefill_chunk != prefill_len and not paged:
             _validate_chunkable(lm.cfg)
@@ -283,35 +289,44 @@ class ServeEngine:
         slot with pending prompt pieces, then one decode for every slot
         whose prefill completed."""
         sched = self.scheduler
+        obs = self.obs
+        span = obs.tracer.span if obs is not None else _obs.null_span()
         pf = sched.plan_prefill()
         if pf is not None:
             # paged: snapshot the block table AFTER planning — admission
             # just assigned pages for the newly admitted slots
             tbl = ((jnp.asarray(self.page_manager.table),)
                    if self.paged else ())
-            toks, self.caches, self._key = self._prefill(
-                self.params, jnp.asarray(pf.tokens), self.caches,
-                jnp.asarray(pf.cache_len), *tbl,
-                jnp.asarray(pf.mask), self._key)
-            sched.finish_prefill(pf, np.asarray(toks),
-                                 now=time.perf_counter())
+            with span("engine.prefill", step=self.steps,
+                      active=len(pf.active), finishing=len(pf.finishing)):
+                toks, self.caches, self._key = self._prefill(
+                    self.params, jnp.asarray(pf.tokens), self.caches,
+                    jnp.asarray(pf.cache_len), *tbl,
+                    jnp.asarray(pf.mask), self._key)
+                toks_np = np.asarray(toks)  # device sync inside the span
+            sched.finish_prefill(pf, toks_np, now=time.perf_counter())
         dc = sched.plan_decode()
         if dc is not None:
             # paged: plan_decode may have allocated fresh pages (or
             # preempted a slot), so re-snapshot the table
             tbl = ((jnp.asarray(self.page_manager.table),)
                    if self.paged else ())
-            toks, self.caches, self._key = self._decode(
-                self.params, jnp.asarray(dc.tokens), self.caches,
-                jnp.asarray(dc.lengths), *tbl,
-                jnp.asarray(dc.mask), self._key)
-            toks_np = np.asarray(toks)  # device sync: timestamps are real
+            with span("engine.decode", step=self.steps,
+                      active=len(dc.active)):
+                toks, self.caches, self._key = self._decode(
+                    self.params, jnp.asarray(dc.tokens), self.caches,
+                    jnp.asarray(dc.lengths), *tbl,
+                    jnp.asarray(dc.mask), self._key)
+                toks_np = np.asarray(toks)  # device sync: real timestamps
             now = time.perf_counter()
             self.decode_times.append(now)
             if len(self.decode_times) > 8192:  # bounded history: a
                 # long-running server must not grow a float per token
                 del self.decode_times[:4096]
             sched.finish_decode(dc, toks_np, now=now)
+            if obs is not None:
+                obs.metrics.inc("serve_decode_steps_total")
+                obs.metrics.inc("serve_tokens_total", len(dc.active))
         self.queue_depths.append(len(sched.queue))
         if self.page_manager is not None:
             self.page_utils.append(self.page_manager.utilization())
@@ -319,6 +334,21 @@ class ServeEngine:
             del self.queue_depths[:4096]
             del self.page_utils[:4096]
         self.steps += 1
+        if obs is not None:
+            occupied = sum(1 for s in sched.slots if s.req is not None)
+            obs.tracer.instant("engine.step", step=self.steps,
+                               occupied=occupied, queue=len(sched.queue))
+            obs.metrics.inc("serve_steps_total")
+            obs.metrics.set_gauge("serve_slots_occupied", occupied)
+            obs.metrics.set_gauge("serve_queue_depth", len(sched.queue))
+            if self.page_manager is not None:
+                # unified with PageStats: gauges mirror the same numbers
+                # throughput_stats() reports
+                obs.metrics.set_gauge("page_pool_utilization",
+                                      self.page_utils[-1])
+                obs.metrics.set_gauge(
+                    "prefix_hit_rate",
+                    self.page_manager.stats.prefix_hit_rate)
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         steps = 0
@@ -329,19 +359,31 @@ class ServeEngine:
 
     def throughput_stats(self) -> dict:
         """Serving metrics over everything finished so far (the serve
-        bench's source of truth): generated tokens, mean TTFT, and
-        p50/p99 inter-token latency from the decode-step wall clock."""
+        bench's source of truth): generated tokens, mean + p50/p99 TTFT,
+        and p50/p99 inter-token latency.
+
+        ITL percentiles pool each finished request's *own* inter-token
+        gaps (``Request.t_tokens``). The old estimate diffed the global
+        ``decode_times`` wall clock, which conflates a request's token
+        cadence with engine-level stalls between *other* requests'
+        decode steps (admission gaps, preemption recompute) — a request
+        that decoded smoothly would inherit latency spikes it never saw.
+        """
         reqs = list(self.scheduler.finished)
         toks = sum(len(r.out) for r in reqs)
         ttfts = [r.t_first - r.t_submit for r in reqs
                  if r.t_first is not None and r.t_submit is not None]
-        itl = np.diff(np.asarray(self.decode_times)) \
-            if len(self.decode_times) > 1 else np.asarray([])
+        gaps = [r.itl_s() for r in reqs]
+        itl = np.concatenate(gaps) if gaps else np.asarray([])
         stats = {
             "requests": len(reqs),
             "tokens": toks,
             "decode_steps": len(self.decode_times),
             "ttft_s": float(np.mean(ttfts)) if ttfts else float("nan"),
+            "ttft_p50_s": float(np.percentile(ttfts, 50)) if ttfts else
+            float("nan"),
+            "ttft_p99_s": float(np.percentile(ttfts, 99)) if ttfts else
+            float("nan"),
             "itl_p50_s": float(np.percentile(itl, 50)) if itl.size else
             float("nan"),
             "itl_p99_s": float(np.percentile(itl, 99)) if itl.size else

@@ -265,8 +265,10 @@ def test_autotune_blocks_warmup_covers_sparse_shapes(yi, monkeypatch):
 
 def test_decode_step_dispatches_zero_reference_paths(yi):
     """Acceptance: with use_kernel=True, every GEMM a decode step issues
-    routes to a Pallas decode-family kernel — the dispatch records of the
-    decode compile contain no reference-path entries at all."""
+    routes to a Pallas decode-family kernel — the per-family dispatch
+    counters show decode-family dispatches and zero reference-route
+    entries (no record-list sniffing: the bounded history can evict,
+    the counters cannot)."""
     import dataclasses
 
     from repro.configs.base import SparsityConfig
@@ -284,17 +286,16 @@ def test_decode_step_dispatches_zero_reference_paths(yi):
     eng.submit(Request(rid=0, prompt=rng.integers(
         0, cfg.vocab_size, size=8).astype(np.int32), max_new=4))
     registry.clear_history()
-    # one step compiles prefill AND the first decode; records are written
-    # at trace time, so the decode compile's GEMMs are the M == slots rows
+    # one step compiles prefill AND the first decode; dispatch counts at
+    # trace time, so the decode compile's GEMMs are the M == slots rows
+    # (only they route to the nm_matmul_decode* families)
     eng.step()
-    gemms = [r for r in registry.dispatch_history()
-             if r.op.startswith("nm_matmul")]
-    decode_gemms = [r for r in gemms if r.shape[0] == 2]
-    assert decode_gemms, "decode compile issued no compressed GEMMs"
-    assert all(r.op.startswith("nm_matmul_decode") for r in decode_gemms), \
-        decode_gemms
-    assert all(r.impl.startswith("pallas") for r in decode_gemms), \
-        decode_gemms
+    counts = registry.dispatch_counts("nm_matmul_decode")
+    assert counts and sum(counts.values()) > 0, \
+        "decode compile issued no decode-family GEMMs"
+    reference = {k: v for k, v in counts.items()
+                 if not k[1].startswith("pallas")}
+    assert not reference, reference
 
 
 def test_autotune_warmup_uses_each_weights_own_ratio(yi, monkeypatch):
