@@ -94,11 +94,12 @@ def measure_layer(
     # preflight the routing: the public dry-run says which impl the real
     # call will take, before any compile time is spent.
     rec = api.explain_dispatch((n, k_run), sw, dtype=jnp.float32)
-    if not rec.impl.startswith("pallas"):
+    if not (rec.impl.startswith("pallas")
+            and rec.backend in ("tpu", "gpu")):
         raise RuntimeError(
             f"measured mode requires the Pallas dispatch; layer {name} "
             f"({m}x{k_run}x{n}, {cfg.tag}) would route to "
-            f"{rec.impl}: {rec.reason}")
+            f"{rec.impl} on backend {rec.backend}: {rec.reason}")
     f_pallas = jax.jit(lambda x, w: api.nm_matmul(x, w))
     y = f_pallas(x, sw).block_until_ready()  # compile + warm
     t_pallas = best_us(lambda: f_pallas(x, sw), repeats=repeats)

@@ -107,12 +107,14 @@ def _child(devices: int, smoke: bool) -> None:
         for w in leaves:
             rec = api.explain_dispatch((slots, w.dense_dim), w)
             if not (rec.op.startswith("nm_matmul_decode")
-                    and rec.impl.startswith("pallas")):
+                    and rec.impl.startswith("pallas")
+                    and rec.backend in ("tpu", "gpu")):
                 raise RuntimeError(
                     f"serve bench ({variant}) needs the Pallas decode "
                     f"dispatch for every GEMM; K={w.dense_dim} "
                     f"N={w.vals.shape[-1]} would route to "
-                    f"{rec.op}/{rec.impl}: {rec.reason}")
+                    f"{rec.op}/{rec.impl} on backend {rec.backend}: "
+                    f"{rec.reason}")
 
     rows = []
     for variant in VARIANTS:

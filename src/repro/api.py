@@ -35,6 +35,22 @@ Kernel policy semantics (``KernelPolicy.mode``):
 tile triple (``decode_block`` likewise for the decode family); ``None``
 consults the autotune cache.
 
+Kernel backends (``KernelPolicy.backend`` / the ``backend=`` kwarg on
+``nm_matmul`` / ``explain_dispatch`` / ``indexmac_gather``):
+
+  auto   (default) ``$REPRO_BACKEND`` if set, else the device platform
+         — a GPU host resolves to ``gpu``, everything else to ``tpu``.
+  tpu    the Pallas-on-Mosaic kernel family (interprets off-TPU).
+  gpu    the Pallas-on-Triton family (:mod:`repro.kernels.indexmac_gpu`)
+         — available on a GPU host, or anywhere under
+         ``REPRO_GPU_INTERPRET=1`` (interpreter; CI parity lane).
+
+Forcing a backend the host cannot execute raises the typed
+:class:`KernelForceError` naming the backend; ``explain_dispatch``
+dry-runs the identical resolution without executing a kernel, and the
+:class:`DispatchRecord` it returns (like every record the real calls
+write) carries the resolved ``backend`` field.
+
 Epilogues: :class:`Epilogue` is a (bias, activation-name) spec.
 ``nm_matmul(x, w, epilogue=Epilogue(bias=b, activation="silu"))``
 computes ``silu(x @ densify(w) + b)`` with one composition contract on
@@ -62,6 +78,7 @@ from repro.core.sparsity import (
     decompress_nm,
     prune_mask_nm,
 )
+from repro.kernels.backend import resolve_backend  # noqa: F401 (re-export)
 from repro.kernels.epilogue import Epilogue
 from repro.kernels.indexmac.ops import (
     explain_dispatch as _explain_dispatch,
@@ -70,6 +87,7 @@ from repro.kernels.indexmac.ops import nm_matmul as _nm_matmul_typed
 from repro.kernels.indexmac_gather.ops import (
     indexmac_gather as _indexmac_gather,
 )
+import repro.kernels.indexmac_gpu.ops  # noqa: F401 (gpu-backend registrations)
 from repro.kernels.registry import DispatchRecord, KernelForceError
 from repro.quant import QNMWeight
 from repro.quant import dequantize as _dequantize
@@ -95,6 +113,7 @@ __all__ = [
     "nm_matmul",
     "quantize",
     "quantize_tree",
+    "resolve_backend",
     "sparsify",
     "sparsify_conv",
 ]
@@ -175,35 +194,44 @@ def is_sparse(obj) -> bool:
 
 def nm_matmul(x: jax.Array, w, *,
               block: Optional[tuple[int, int, int]] = None,
-              epilogue: Optional[Epilogue] = None) -> jax.Array:
+              epilogue: Optional[Epilogue] = None,
+              backend: Optional[str] = None) -> jax.Array:
     """y = epilogue(x @ densify(w)) for an :class:`NMWeight` or int8
     :class:`QNMWeight`; dispatch (reference vs Pallas, decode vs prefill
-    family, tile sizes, and the float-vs-int8 kernel family) is decided
-    by ``w.kernel_policy``, the weight's type and the flattened row
-    count — see the module docstring. ``epilogue`` is an
+    family, tile sizes, kernel backend, and the float-vs-int8 kernel
+    family) is decided by ``w.kernel_policy``, the weight's type and the
+    flattened row count — see the module docstring. ``epilogue`` is an
     :class:`Epilogue` (bias + activation) fused into the decode kernels'
-    writeback."""
-    return _nm_matmul_typed(x, w, block=block, epilogue=epilogue)
+    writeback; ``backend`` (``"auto"``/``"tpu"``/``"gpu"``) overrides
+    the policy's kernel backend for this call."""
+    return _nm_matmul_typed(x, w, block=block, epilogue=epilogue,
+                            backend=backend)
 
 
 def explain_dispatch(x_shape, w, *, epilogue: Optional[Epilogue] = None,
-                     dtype=None) -> DispatchRecord:
+                     dtype=None, backend: Optional[str] = None,
+                     ) -> DispatchRecord:
     """The :class:`DispatchRecord` that ``nm_matmul(x, w)`` (or, for an
     axis-1 weight, ``indexmac_gather(w, b)``) *would* produce for an
-    operand of shape ``x_shape`` — dispatch family, chosen kernel, block
-    triple and padded geometry — without executing anything. Raises the
-    same typed errors as the real call, including
-    :class:`KernelForceError` for a forced weight whose shape cannot
-    normalize."""
-    return _explain_dispatch(x_shape, w, epilogue=epilogue, dtype=dtype)
+    operand of shape ``x_shape`` — dispatch family, chosen kernel,
+    resolved backend, block triple and padded geometry — without
+    executing anything. ``backend`` overrides the policy's kernel
+    backend, same contract as :func:`nm_matmul`. Raises the same typed
+    errors as the real call, including :class:`KernelForceError` for a
+    forced weight whose shape cannot normalize or a forced backend this
+    host cannot execute."""
+    return _explain_dispatch(x_shape, w, epilogue=epilogue, dtype=dtype,
+                             backend=backend)
 
 
 def indexmac_gather(w, b: jax.Array, *,
-                    block: Optional[tuple[int, int, int]] = None) -> jax.Array:
+                    block: Optional[tuple[int, int, int]] = None,
+                    backend: Optional[str] = None) -> jax.Array:
     """C = densify(w) @ b for a row-compressed A (``w.axis == 1``) — the
     literal gather-port orientation of the paper. Accepts an
-    :class:`NMWeight` or int8 :class:`QNMWeight`."""
-    return _indexmac_gather(w, b, block=block)
+    :class:`NMWeight` or int8 :class:`QNMWeight`; ``backend`` overrides
+    the policy's kernel backend."""
+    return _indexmac_gather(w, b, block=block, backend=backend)
 
 
 def sparsify_conv(

@@ -45,6 +45,7 @@ __all__ = [
 ]
 
 KernelMode = Literal["off", "auto", "force"]
+Backend = Literal["auto", "tpu", "gpu"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,16 +63,26 @@ class KernelPolicy:
       consults the autotune cache and falls back to the default triple.
     decode_block: same, for the skinny-M decode kernel family (its
       autotune cache keys are separate, so its override is too).
+    backend: which kernel *family* serves this weight's GEMMs —
+      ``"auto"`` (default: ``$REPRO_BACKEND``, then the device
+      platform), ``"tpu"`` (Pallas-on-Mosaic), or ``"gpu"``
+      (Pallas-on-Triton). Forcing a backend the host cannot execute
+      raises the typed ``KernelForceError`` at dispatch — see
+      :mod:`repro.kernels.backend`.
     """
 
     mode: KernelMode = "off"
     block: Optional[tuple[int, int, int]] = None
     decode_block: Optional[tuple[int, int, int]] = None
+    backend: Backend = "auto"
 
     def __post_init__(self):
         if self.mode not in ("off", "auto", "force"):
             raise ValueError(f"kernel policy mode {self.mode!r} not in "
                              "('off', 'auto', 'force')")
+        if self.backend not in ("auto", "tpu", "gpu"):
+            raise ValueError(f"kernel policy backend {self.backend!r} not "
+                             "in ('auto', 'tpu', 'gpu')")
         if self.block is not None:
             object.__setattr__(self, "block", tuple(self.block))
         if self.decode_block is not None:

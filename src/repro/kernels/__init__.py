@@ -2,13 +2,22 @@
 
 Structure:
   registry.py  — named implementations per op, priority dispatch, records
+                 (each registered for a kernel backend; other-backend
+                 impls are filtered silently)
+  backend.py   — the backend axis: tpu/gpu availability, auto
+                 resolution (call -> policy -> $REPRO_BACKEND ->
+                 platform), typed force errors
   padding.py   — shape normalization (pad-to-tileable, slice back)
   autotune.py  — per-shape block sweep with a persistent on-disk cache
-                 (per value-dtype family: the int8 sweep never shares
-                 keys with bf16/f32)
+                 (per value-dtype family and kernel backend: the int8
+                 sweep never shares keys with bf16/f32, nor gpu with
+                 tpu)
   indexmac/    — TPU adaptation: decompress-in-VMEM -> MXU (the fast
                  path) + the int8 dequantizing variant (nm_matmul_q)
   indexmac_gather/ — literal vindexmac port (faithfulness artifact)
                  + its int8 variant (indexmac_gather_q)
+  indexmac_gpu/ — Pallas-on-Triton lowering of all three families
+                 (prefill, decode, gather + int8 variants): output-tile
+                 grids, in-kernel K reduction, register accumulators
 """
 from repro.kernels import registry  # noqa: F401  (re-export for callers)

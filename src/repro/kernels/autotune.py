@@ -12,7 +12,16 @@ Cache
 JSON at ``$REPRO_AUTOTUNE_CACHE`` (default
 ``~/.cache/repro/autotune.json``), one entry per key::
 
-    {"v1|backend|dtype|n:m|MxKxN": [block_m, block_n, block_k], ...}
+    {"v2|platform|kernel_backend|dtype|n:m|MxKxN": [bm, bn, bk], ...}
+
+The key carries two distinct backend tokens: ``platform`` is the
+*device* (``jax.default_backend()`` — an interpret-mode sweep on CPU
+must never shadow a compiled sweep), ``kernel_backend`` is the *kernel
+family* (``tpu``/``gpu`` — the GPU lowering sweeps different grids and
+gets its own winners even when both families run on one host). Legacy
+``v1`` keys (no kernel-backend token — written before the backend axis
+existed, always the TPU family) migrate in place on load, so checked-in
+CI caches keep their entries without a re-sweep.
 
 Lookup policy in the hot path (``nm_matmul`` with ``block=None``):
 cache hit wins; on a miss the default triple is used unless
@@ -33,13 +42,20 @@ import jax.numpy as jnp
 
 from repro import obs as _obs
 from repro.core.sparsity import NMConfig
+from repro.kernels.backend import interpret_for
 from repro.kernels.padding import plan_nm_matmul
 
 DEFAULT_BLOCK = (256, 256, 2048)
 # decode family: M is one sublane by construction, K blocks are kept
 # small enough that a single k step covers typical reduced projections.
 DEFAULT_DECODE_BLOCK = (8, 256, 1024)
-_CACHE_VERSION = "v1"
+# GPU family: output tiles sized for Triton program instances (the K
+# reduction is in-kernel, so block_k only bounds the chunk loop, not a
+# grid dimension); smaller than the TPU MXU-sweep tiles by design.
+DEFAULT_GPU_BLOCK = (64, 128, 512)
+DEFAULT_GPU_DECODE_BLOCK = (8, 128, 512)
+_CACHE_VERSION = "v2"
+_LEGACY_VERSION = "v1"  # pre-backend-axis keys: always the tpu family
 
 _LOCK = threading.Lock()
 _MEM: dict[str, tuple] = {}
@@ -53,15 +69,29 @@ def cache_path() -> str:
     )
 
 
-def _key(m: int, n: int, k: int, cfg: NMConfig, dtype, backend: str,
-         family: str = "") -> str:
-    """Cache key; ``family`` distinguishes kernel families that sweep
-    different grids over the same problem (the decode family gets a
-    ``|decode`` suffix — the default family keeps the v1 key shape, so
-    existing caches stay valid)."""
-    base = (f"{_CACHE_VERSION}|{backend}|{jnp.dtype(dtype).name}|{cfg.tag}|"
-            f"{m}x{k}x{n}")
+def _key(m: int, n: int, k: int, cfg: NMConfig, dtype, platform: str,
+         backend: str = "tpu", family: str = "") -> str:
+    """Cache key; ``platform`` is the device, ``backend`` the kernel
+    family (see module docstring). ``family`` distinguishes kernel
+    families that sweep different grids over the same problem (the
+    decode family gets a ``|decode`` suffix)."""
+    base = (f"{_CACHE_VERSION}|{platform}|{backend}|"
+            f"{jnp.dtype(dtype).name}|{cfg.tag}|{m}x{k}x{n}")
     return f"{base}|{family}" if family else base
+
+
+def _migrate_key(key: str) -> str:
+    """Map a legacy v1 key (no kernel-backend token) onto the v2 schema.
+
+    Everything written under v1 was the TPU kernel family — the only one
+    that existed — so ``v1|plat|rest`` becomes ``v2|plat|tpu|rest``.
+    Non-v1 keys pass through unchanged."""
+    if not key.startswith(f"{_LEGACY_VERSION}|"):
+        return key
+    parts = key.split("|")
+    if len(parts) < 5:
+        return key  # malformed: keep as-is, it simply never matches
+    return "|".join([_CACHE_VERSION, parts[1], "tpu"] + parts[2:])
 
 
 def _load_locked() -> None:
@@ -74,9 +104,19 @@ def _load_locked() -> None:
     try:
         with open(path) as f:
             raw = json.load(f)
+        legacy = {}
         for key, blk in raw.items():
-            if isinstance(blk, list) and len(blk) == 3:
+            if not (isinstance(blk, list) and len(blk) == 3):
+                continue
+            if key.startswith(f"{_LEGACY_VERSION}|"):
+                legacy[_migrate_key(key)] = tuple(int(b) for b in blk)
+            else:
                 _MEM[key] = tuple(int(b) for b in blk)
+        # one-time v1 -> v2 migration: a native v2 entry for the same
+        # problem wins over the migrated legacy one.
+        for key, blk in legacy.items():
+            if not key.startswith(f"{_LEGACY_VERSION}|"):
+                _MEM.setdefault(key, blk)
     except (OSError, ValueError):
         pass  # missing/corrupt cache == empty cache
 
@@ -112,11 +152,11 @@ def clear_memory_cache() -> None:
 
 
 def cached_block(m: int, n: int, k: int, cfg: NMConfig, dtype,
-                 family: str = "") -> Optional[tuple]:
-    backend = jax.default_backend()
+                 family: str = "", backend: str = "tpu") -> Optional[tuple]:
+    platform = jax.default_backend()
     with _LOCK:
         _load_locked()
-        hit = _MEM.get(_key(m, n, k, cfg, dtype, backend, family))
+        hit = _MEM.get(_key(m, n, k, cfg, dtype, platform, backend, family))
     bundle = _obs.get_obs()
     if bundle is not None:
         bundle.metrics.inc(
@@ -127,15 +167,30 @@ def cached_block(m: int, n: int, k: int, cfg: NMConfig, dtype,
 
 
 def candidate_blocks(m: int, n: int, k: int, cfg: NMConfig,
-                     family: str = "") -> list[tuple]:
+                     family: str = "", backend: str = "tpu") -> list[tuple]:
     """Plan-feasible, deduplicated candidate triples for this problem.
 
     On CPU the kernel runs in interpret mode (each probe is orders of
-    magnitude slower than compiled Mosaic), so the grid is trimmed — the
-    cache key carries the backend, so a CPU-tuned entry never shadows a
-    TPU sweep. The decode family pins block_m to one sublane (its M is
-    always 8) and sweeps only the streaming (n, k) tiles."""
-    if family == "decode":
+    magnitude slower than compiled code), so the grid is trimmed — the
+    cache key carries the platform, so a CPU-tuned entry never shadows a
+    compiled sweep. The decode family pins block_m to one sublane (its M
+    is always 8) and sweeps only the streaming (n, k) tiles. The GPU
+    kernel family sweeps smaller output tiles (one Triton program
+    instance per tile; its block_k only sizes the in-kernel reduction
+    chunks)."""
+    interp = interpret_for(backend)
+    if backend == "gpu":
+        if family == "decode":
+            grid_m = (8,)
+            grid_n, grid_k = ((128,), (512,)) if interp else (
+                (64, 128, 256), (256, 512, 1024))
+        else:
+            if interp:
+                grid_m, grid_n, grid_k = (32, 64), (128,), (512,)
+            else:
+                grid_m, grid_n, grid_k = (32, 64, 128), (64, 128, 256), (
+                    256, 512, 1024)
+    elif family == "decode":
         grid_m = (8,)
         if jax.default_backend() == "cpu":
             grid_n, grid_k = (128, 256), (256, 1024)
@@ -158,6 +213,14 @@ def candidate_blocks(m: int, n: int, k: int, cfg: NMConfig,
     return out
 
 
+def default_block(family: str = "", backend: str = "tpu") -> tuple:
+    """The fallback triple for a (family, kernel-backend) pair."""
+    if backend == "gpu":
+        return DEFAULT_GPU_DECODE_BLOCK if family == "decode" \
+            else DEFAULT_GPU_BLOCK
+    return DEFAULT_DECODE_BLOCK if family == "decode" else DEFAULT_BLOCK
+
+
 def tune(
     m: int,
     n: int,
@@ -167,6 +230,7 @@ def tune(
     candidates: Optional[Sequence[tuple]] = None,
     repeats: int = 3,
     family: str = "",
+    backend: str = "tpu",
 ) -> tuple:
     """Time every candidate on real operands; persist and return the winner.
 
@@ -176,7 +240,9 @@ def tune(
     values + per-column scales — the int8 family has its own cache keys
     (the dtype is part of the key), so its winners never shadow the
     float sweep's. ``family="decode"`` sweeps the skinny-M decode
-    kernels instead, under their own ``|decode``-suffixed keys.
+    kernels instead, under their own ``|decode``-suffixed keys;
+    ``backend`` selects the kernel lowering (tpu/gpu) being swept, each
+    under its own key namespace.
     """
     from repro.core.sparsity import compress_nm, random_nm_matrix
     from repro.kernels.indexmac.ops import (
@@ -185,11 +251,18 @@ def tune(
         run_pallas_padded,
         run_pallas_padded_q,
     )
+    from repro.kernels.indexmac_gpu.ops import (
+        run_gpu_decode,
+        run_gpu_decode_q,
+        run_gpu_padded,
+        run_gpu_padded_q,
+    )
 
-    backend = jax.default_backend()
-    interpret = backend == "cpu"
+    platform = jax.default_backend()
+    interpret = interpret_for(backend)
     quantized = jnp.dtype(dtype) == jnp.dtype(jnp.int8)
     decode = family == "decode"
+    gpu = backend == "gpu"
     t_sweep0 = time.perf_counter()
     kk = -(-k // cfg.m) * cfg.m  # operand K must hold whole blocks
     w = random_nm_matrix(jax.random.PRNGKey(0), (kk, n), cfg, axis=0)
@@ -201,28 +274,35 @@ def tune(
         x = jax.random.normal(jax.random.PRNGKey(1), (m, kk))
 
         if decode:
+            run_q_decode = run_gpu_decode_q if gpu else run_pallas_decode_q
+
             def run(x, vals, idx, *, cfg, plan, interpret):
-                return run_pallas_decode_q(
+                return run_q_decode(
                     x, vals, idx, scales, None, cfg=cfg, plan=plan,
                     activation=None, interpret=interpret)
         else:
+            run_q_padded = run_gpu_padded_q if gpu else run_pallas_padded_q
+
             def run(x, vals, idx, *, cfg, plan, interpret):
-                return run_pallas_padded_q(
+                return run_q_padded(
                     x, vals, idx, scales, cfg=cfg, plan=plan,
                     interpret=interpret)
     else:
         x = jax.random.normal(jax.random.PRNGKey(1), (m, kk)).astype(dtype)
         vals = vals.astype(dtype)
         if decode:
+            run_f_decode = run_gpu_decode if gpu else run_pallas_decode
+
             def run(x, vals, idx, *, cfg, plan, interpret):
-                return run_pallas_decode(
+                return run_f_decode(
                     x, vals, idx, None, cfg=cfg, plan=plan,
                     activation=None, interpret=interpret)
         else:
-            run = run_pallas_padded
+            run = run_gpu_padded if gpu else run_pallas_padded
 
     best, best_t = None, float("inf")
-    for block in candidates or candidate_blocks(m, n, kk, cfg, family):
+    for block in candidates or candidate_blocks(m, n, kk, cfg, family,
+                                                backend):
         plan = plan_nm_matmul(m, n, kk, cfg, block)
         if plan is None:
             continue
@@ -239,11 +319,11 @@ def tune(
         if t < best_t:
             best, best_t = plan.block, t
     if best is None:
-        default = DEFAULT_DECODE_BLOCK if decode else DEFAULT_BLOCK
-        best = plan_nm_matmul(m, n, kk, cfg, default).block
+        best = plan_nm_matmul(m, n, kk, cfg,
+                              default_block(family, backend)).block
     with _LOCK:
         _load_locked()
-        _MEM[_key(m, n, k, cfg, dtype, backend, family)] = best
+        _MEM[_key(m, n, k, cfg, dtype, platform, backend, family)] = best
         _save_locked()
     bundle = _obs.get_obs()
     if bundle is not None:
@@ -262,23 +342,23 @@ def _time_once(fn, x, vals, idx, cfg, plan, interpret) -> float:
 
 def best_block(
     m: int, n: int, k: int, cfg: NMConfig, dtype=jnp.float32,
-    family: str = "",
+    family: str = "", backend: str = "tpu",
 ) -> tuple:
     """Hot-path lookup: cache hit, else sweep iff REPRO_AUTOTUNE=1, else
-    the family default triple (clamped later by the pad plan)."""
-    hit = cached_block(m, n, k, cfg, dtype, family)
+    the (family, backend) default triple (clamped later by the plan)."""
+    hit = cached_block(m, n, k, cfg, dtype, family, backend)
     if hit is not None:
         return hit
     if os.environ.get("REPRO_AUTOTUNE") == "1":
-        return tune(m, n, k, cfg, dtype, family=family)
-    return DEFAULT_DECODE_BLOCK if family == "decode" else DEFAULT_BLOCK
+        return tune(m, n, k, cfg, dtype, family=family, backend=backend)
+    return default_block(family, backend)
 
 
 def ensure_tuned(
     m: int, n: int, k: int, cfg: NMConfig, dtype=jnp.float32,
-    family: str = "",
+    family: str = "", backend: str = "tpu",
 ) -> tuple:
     """Sweep-if-missing, for callers that want to pre-pay (serving warmup,
     benchmarks) regardless of REPRO_AUTOTUNE."""
-    return cached_block(m, n, k, cfg, dtype, family) or tune(
-        m, n, k, cfg, dtype, family=family)
+    return cached_block(m, n, k, cfg, dtype, family, backend) or tune(
+        m, n, k, cfg, dtype, family=family, backend=backend)

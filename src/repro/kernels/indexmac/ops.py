@@ -58,6 +58,7 @@ import jax.numpy as jnp
 from repro.core.nmweight import NMWeight
 from repro.core.sparsity import NMConfig, decompress_nm
 from repro.kernels import autotune, registry
+from repro.kernels.backend import interpret_for, resolve_backend
 from repro.kernels.epilogue import apply_epilogue_f32, resolve_epilogue
 from repro.kernels.indexmac.decode_kernel import (
     nm_spmm_pallas_decode,
@@ -73,10 +74,6 @@ from repro.kernels.padding import (
     plan_nm_matmul,
 )
 from repro.quant.qnmweight import QNMWeight
-
-
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
 
 
 def decode_m_max() -> int:
@@ -112,10 +109,13 @@ def _validate_pair(vals, idx, k, cfg):
 
 
 def _route(mm, nn, kk, cfg, dtype, use_kernel, force, block, decode_block,
-           quantized):
+           quantized, backend="tpu"):
     """Resolve the dispatch family, block triple and pad plan for one
     call — shared by the executing paths and :func:`explain_dispatch`,
-    so the explanation can never drift from the real routing."""
+    so the explanation can never drift from the real routing.
+    ``backend`` is the *resolved* kernel backend (never "auto") — it
+    selects which lowering family the registry may pick and which
+    autotune cache namespace supplies the default block."""
     decode = mm <= decode_m_max()
     family = "decode" if decode else ""
     op = ("nm_matmul_decode" if decode else "nm_matmul") + (
@@ -127,7 +127,7 @@ def _route(mm, nn, kk, cfg, dtype, use_kernel, force, block, decode_block,
         blk = decode_block if decode else block
         if blk is None:
             blk = autotune.best_block(mm, nn, kk, cfg, key_dtype,
-                                      family=family)
+                                      family=family, backend=backend)
         plan = plan_nm_matmul(mm, nn, kk, cfg, tuple(blk))
         if plan is None and force:
             raise registry.KernelForceError(
@@ -139,7 +139,7 @@ def _route(mm, nn, kk, cfg, dtype, use_kernel, force, block, decode_block,
                 f"fallback")
     ctx = registry.make_ctx(
         (mm, kk, nn), nm=cfg, use_kernel=use_kernel, plan=plan,
-        dtype=key_dtype, force=force,
+        dtype=key_dtype, force=force, backend=backend,
     )
     return op, plan, ctx
 
@@ -198,7 +198,8 @@ def run_pallas_padded(
 
 
 @registry.register("nm_matmul", "pallas_padded", priority=100,
-                   supports=_pallas_supports, uses_plan=True)
+                   supports=_pallas_supports, uses_plan=True,
+                   backend="tpu")
 def _run_pallas_impl(x2, vals, idx, *, cfg, plan, interpret):
     return run_pallas_padded(
         x2, vals, idx, cfg=cfg, plan=plan, interpret=interpret
@@ -236,7 +237,8 @@ def run_pallas_padded_q(
 
 
 @registry.register("nm_matmul_q", "pallas_padded_q", priority=100,
-                   supports=_pallas_supports, uses_plan=True)
+                   supports=_pallas_supports, uses_plan=True,
+                   backend="tpu")
 def _run_pallas_q_impl(x2, vals, idx, scales, *, cfg, plan, interpret):
     return run_pallas_padded_q(
         x2, vals, idx, scales, cfg=cfg, plan=plan, interpret=interpret
@@ -280,7 +282,8 @@ def run_pallas_decode(
 
 
 @registry.register("nm_matmul_decode", "pallas_decode", priority=100,
-                   supports=_decode_supports, uses_plan=True)
+                   supports=_decode_supports, uses_plan=True,
+                   backend="tpu")
 def _run_pallas_decode_impl(x2, vals, idx, bias, *, cfg, plan, activation,
                             interpret):
     return run_pallas_decode(
@@ -328,7 +331,8 @@ def run_pallas_decode_q(
 
 
 @registry.register("nm_matmul_decode_q", "pallas_decode_q", priority=100,
-                   supports=_decode_supports, uses_plan=True)
+                   supports=_decode_supports, uses_plan=True,
+                   backend="tpu")
 def _run_pallas_decode_q_impl(x2, vals, idx, scales, bias, *, cfg, plan,
                               activation, interpret):
     return run_pallas_decode_q(
@@ -365,27 +369,34 @@ def _epilogue_after(y, bias, activation):
 
 def nm_matmul(x: jax.Array, w, *,
               block: Optional[tuple[int, int, int]] = None,
-              epilogue=None) -> jax.Array:
+              epilogue=None, backend: Optional[str] = None) -> jax.Array:
     """y = epilogue(x @ densify(w)); x: (..., K), w: an NMWeight or
     QNMWeight compressed along its axis 0 (the contraction dim).
 
     The weight's own metadata drives dispatch: ``w.nm`` is the pattern,
-    ``w.kernel_policy`` picks reference/Pallas and the block triples,
-    the weight's *type* picks the quantization family (int8 weights
-    route to the dequantizing kernels, which have their own autotune
-    keys), and the flattened row count picks prefill-shaped vs decode
-    families. ``epilogue`` is an :class:`repro.kernels.epilogue.Epilogue`
-    (bias + activation) fused into the decode kernels' writeback.
-    ``block`` overrides the policy's block for this call (benchmarks).
+    ``w.kernel_policy`` picks reference/Pallas, the kernel backend and
+    the block triples, the weight's *type* picks the quantization family
+    (int8 weights route to the dequantizing kernels, which have their
+    own autotune keys), and the flattened row count picks prefill-shaped
+    vs decode families. ``epilogue`` is an
+    :class:`repro.kernels.epilogue.Epilogue` (bias + activation) fused
+    into the decode kernels' writeback. ``block`` overrides the policy's
+    block for this call (benchmarks); ``backend`` overrides the policy's
+    backend (``"auto"``/``"tpu"``/``"gpu"`` — see
+    :mod:`repro.kernels.backend`; forcing an unavailable backend raises
+    :class:`repro.kernels.registry.KernelForceError`).
     """
     bias, activation = resolve_epilogue(epilogue)
     if isinstance(w, QNMWeight):
         _check_axis0(w, "nm_matmul")
         pol = w.kernel_policy
+        be = resolve_backend(
+            backend if backend is not None
+            else getattr(pol, "backend", "auto"))
         return _nm_matmul_q_core(
             x, w.vals, w.idx, w.scales, bias, w.nm, activation,
             pol.mode != "off", block or pol.block,
-            block or pol.decode_block, pol.mode == "force")
+            block or pol.decode_block, pol.mode == "force", be)
     if not isinstance(w, NMWeight):
         raise TypeError(
             f"nm_matmul expects an NMWeight or QNMWeight, got "
@@ -395,10 +406,12 @@ def nm_matmul(x: jax.Array, w, *,
         )
     _check_axis0(w, "nm_matmul")
     pol = w.kernel_policy
+    be = resolve_backend(
+        backend if backend is not None else getattr(pol, "backend", "auto"))
     return _nm_matmul_core(
         x, w.vals, w.idx, bias, w.nm, activation,
         pol.mode != "off", block or pol.block,
-        block or pol.decode_block, pol.mode == "force")
+        block or pol.decode_block, pol.mode == "force", be)
 
 
 def _check_axis0(w, name):
@@ -411,7 +424,7 @@ def _check_axis0(w, name):
 
 def nm_matmul_q(x: jax.Array, w: QNMWeight, *,
                 block: Optional[tuple[int, int, int]] = None,
-                epilogue=None) -> jax.Array:
+                epilogue=None, backend: Optional[str] = None) -> jax.Array:
     """Quantized alias of :func:`nm_matmul` (the unified entry point
     type-dispatches; this name survives for callers that want the int8
     family asserted by construction)."""
@@ -420,7 +433,7 @@ def nm_matmul_q(x: jax.Array, w: QNMWeight, *,
             f"nm_matmul_q expects a QNMWeight, got {type(w).__name__}; "
             "produce one with repro.api.quantize"
         )
-    return nm_matmul(x, w, block=block, epilogue=epilogue)
+    return nm_matmul(x, w, block=block, epilogue=epilogue, backend=backend)
 
 
 # float core: custom_vjp so compressed fine-tuning trains through every
@@ -428,15 +441,15 @@ def nm_matmul_q(x: jax.Array, w: QNMWeight, *,
 # logical shapes — padding and family choice never change it)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10))
 def _nm_matmul_core(x, vals, idx, bias, cfg, activation, use_kernel, block,
-                    decode_block, force):
+                    decode_block, force, backend):
     return _core_fwd_impl(x, vals, idx, bias, cfg, activation, use_kernel,
-                          block, decode_block, force)
+                          block, decode_block, force, backend)
 
 
 def _core_fwd_impl(x, vals, idx, bias, cfg, activation, use_kernel, block,
-                   decode_block, force):
+                   decode_block, force, backend):
     vals, idx = _pin_compressed(vals, idx)
     lead = x.shape[:-1]
     k = x.shape[-1]
@@ -445,30 +458,32 @@ def _core_fwd_impl(x, vals, idx, bias, cfg, activation, use_kernel, block,
     nn = vals.shape[1]
     _validate_pair(vals, idx, k, cfg)
     op, plan, ctx = _route(mm, nn, k, cfg, x.dtype, use_kernel, force,
-                           block, decode_block, quantized=False)
+                           block, decode_block, quantized=False,
+                           backend=backend)
+    interp = interpret_for(backend)
     if op == "nm_matmul_decode":
         y2 = registry.dispatch(
             op, ctx, x2, vals, idx, bias,
-            cfg=cfg, plan=plan, activation=activation, interpret=_on_cpu(),
+            cfg=cfg, plan=plan, activation=activation, interpret=interp,
         )
     else:
         y2 = registry.dispatch(
             op, ctx, x2, vals, idx,
-            cfg=cfg, plan=plan, interpret=_on_cpu(),
+            cfg=cfg, plan=plan, interpret=interp,
         )
         y2 = _epilogue_after(y2, bias, activation)
     return y2.reshape(*lead, nn)
 
 
 def _core_fwd(x, vals, idx, bias, cfg, activation, use_kernel, block,
-              decode_block, force):
+              decode_block, force, backend):
     y = _core_fwd_impl(x, vals, idx, bias, cfg, activation, use_kernel,
-                       block, decode_block, force)
+                       block, decode_block, force, backend)
     return y, (x, vals, idx, bias)
 
 
-def _core_bwd(cfg, activation, use_kernel, block, decode_block, force, res,
-              dy):
+def _core_bwd(cfg, activation, use_kernel, block, decode_block, force,
+              backend, res, dy):
     x, vals, idx, bias = res
 
     def ref(x_, vals_, bias_):
@@ -498,7 +513,7 @@ _nm_matmul_core.defvjp(_core_fwd, _core_bwd)
 
 
 def _nm_matmul_q_core(x, vals, idx, scales, bias, cfg, activation,
-                      use_kernel, block, decode_block, force):
+                      use_kernel, block, decode_block, force, backend):
     vals, idx = _pin_compressed(vals, idx)
     lead = x.shape[:-1]
     k = x.shape[-1]
@@ -507,16 +522,18 @@ def _nm_matmul_q_core(x, vals, idx, scales, bias, cfg, activation,
     nn = vals.shape[1]
     _validate_pair(vals, idx, k, cfg)
     op, plan, ctx = _route(mm, nn, k, cfg, x.dtype, use_kernel, force,
-                           block, decode_block, quantized=True)
+                           block, decode_block, quantized=True,
+                           backend=backend)
+    interp = interpret_for(backend)
     if op == "nm_matmul_decode_q":
         y2 = registry.dispatch(
             op, ctx, x2, vals, idx, scales, bias,
-            cfg=cfg, plan=plan, activation=activation, interpret=_on_cpu(),
+            cfg=cfg, plan=plan, activation=activation, interpret=interp,
         )
     else:
         y2 = registry.dispatch(
             op, ctx, x2, vals, idx, scales,
-            cfg=cfg, plan=plan, interpret=_on_cpu(),
+            cfg=cfg, plan=plan, interpret=interp,
         )
         y2 = _epilogue_after(y2, bias, activation)
     return y2.reshape(*lead, nn)
@@ -527,19 +544,21 @@ def _nm_matmul_q_core(x, vals, idx, scales, bias, cfg, activation,
 # ---------------------------------------------------------------------------
 
 
-def explain_dispatch(x_shape, w, *, epilogue=None, dtype=None):
+def explain_dispatch(x_shape, w, *, epilogue=None, dtype=None, backend=None):
     """The :class:`repro.kernels.registry.DispatchRecord` that
     ``nm_matmul(x, w)`` *would* produce for an ``x`` of shape
-    ``x_shape`` — family, kernel, block triple and padded geometry —
-    without running anything.
+    ``x_shape`` — family, kernel, backend, block triple and padded
+    geometry — without running anything.
 
     ``x_shape`` is the activation shape ``(..., K)`` (for a gather-port
     weight, ``w.axis == 1``, it is the dense B operand's ``(K, N)``).
     ``dtype`` is the activation dtype for autotune-cache lookup; it
     defaults to the weight's value dtype (the int8 family always keys on
-    int8 regardless). Raises the same typed errors as the real call —
-    including :class:`KernelForceError` for a forced weight whose shape
-    cannot normalize.
+    int8 regardless). ``backend`` overrides the policy's backend, same
+    contract as :func:`nm_matmul`. Raises the same typed errors as the
+    real call — including :class:`KernelForceError` for a forced weight
+    whose shape cannot normalize or a forced backend this host cannot
+    execute.
     """
     if not isinstance(w, (NMWeight, QNMWeight)):
         raise TypeError(
@@ -548,7 +567,7 @@ def explain_dispatch(x_shape, w, *, epilogue=None, dtype=None):
     if w.axis == 1:
         from repro.kernels.indexmac_gather.ops import explain_gather
 
-        return explain_gather(x_shape, w)
+        return explain_gather(x_shape, w, backend=backend)
     _check_axis0(w, "explain_dispatch")
     resolve_epilogue(epilogue)  # validates; epilogue never changes routing
     k = x_shape[-1]
@@ -558,9 +577,11 @@ def explain_dispatch(x_shape, w, *, epilogue=None, dtype=None):
     pol = w.kernel_policy
     quantized = isinstance(w, QNMWeight)
     dtype = dtype if dtype is not None else w.vals.dtype
+    be = resolve_backend(
+        backend if backend is not None else getattr(pol, "backend", "auto"))
     op, plan, ctx = _route(
         mm, nn, k, w.nm, dtype, pol.mode != "off", pol.mode == "force",
-        pol.block, pol.decode_block, quantized)
+        pol.block, pol.decode_block, quantized, backend=be)
     return registry.explain(op, ctx)
 
 
@@ -609,7 +630,7 @@ def _nm_matmul_fwd_impl(x, vals, idx, cfg, use_kernel, block, force):
     )
     y2 = registry.dispatch(
         "nm_matmul", ctx, x2, vals, idx,
-        cfg=cfg, plan=plan, interpret=_on_cpu(),
+        cfg=cfg, plan=plan, interpret=interpret_for("tpu"),
     )
     return y2.reshape(*lead, nn)
 
@@ -668,7 +689,7 @@ def nm_matmul_q_positional(
     )
     y2 = registry.dispatch(
         "nm_matmul_q", ctx, x2, vals, idx, scales,
-        cfg=cfg, plan=plan, interpret=_on_cpu(),
+        cfg=cfg, plan=plan, interpret=interpret_for("tpu"),
     )
     return y2.reshape(*lead, nn)
 

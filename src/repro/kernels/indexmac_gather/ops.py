@@ -23,6 +23,7 @@ import jax
 from repro.core.nmweight import NMWeight
 from repro.core.sparsity import NMConfig
 from repro.kernels import registry
+from repro.kernels.backend import interpret_for, resolve_backend
 from repro.kernels.indexmac_gather.kernel import (
     indexmac_gather_pallas,
     indexmac_gather_pallas_q,
@@ -45,12 +46,12 @@ def _pallas_supports(ctx: dict) -> Optional[str]:
 
 
 @registry.register("indexmac_gather", "pallas_gather", priority=100,
-                   supports=_pallas_supports)
+                   supports=_pallas_supports, backend="tpu")
 def _run_pallas(vals, idx, b, *, cfg, block):
     bm, bn, bk = block
     return indexmac_gather_pallas(
         vals, idx, b, cfg=cfg, block_m=bm, block_n=bn, block_k=bk,
-        interpret=jax.default_backend() == "cpu",
+        interpret=interpret_for("tpu"),
     )
 
 
@@ -60,12 +61,12 @@ def _run_ref(vals, idx, b, *, cfg, block):
 
 
 @registry.register("indexmac_gather_q", "pallas_gather_q", priority=100,
-                   supports=_pallas_supports)
+                   supports=_pallas_supports, backend="tpu")
 def _run_pallas_q(vals, idx, scales, b, *, cfg, block):
     bm, bn, bk = block
     return indexmac_gather_pallas_q(
         vals, idx, scales, b, cfg=cfg, block_m=bm, block_n=bn, block_k=bk,
-        interpret=jax.default_backend() == "cpu",
+        interpret=interpret_for("tpu"),
     )
 
 
@@ -85,12 +86,14 @@ def indexmac_gather(
     b: jax.Array,
     *,
     block: Optional[tuple[int, int, int]] = None,
+    backend: Optional[str] = None,
 ) -> jax.Array:
     """C = densify(w) @ b for a row-compressed A (w.axis == 1).
 
     Accepts an :class:`NMWeight` or an int8 :class:`QNMWeight`; the
     quantized type routes to the dequantizing gather variant (its own
-    ``indexmac_gather_q`` dispatch family)."""
+    ``indexmac_gather_q`` dispatch family). ``backend`` overrides the
+    weight policy's kernel backend (see :mod:`repro.kernels.backend`)."""
     if not isinstance(w, (NMWeight, QNMWeight)):
         raise TypeError(
             f"indexmac_gather expects an NMWeight or QNMWeight, got "
@@ -104,9 +107,13 @@ def indexmac_gather(
     block = block or w.kernel_policy.block or DEFAULT_BLOCK
     mr, _ = w.vals.shape
     k, nc = b.shape
+    be = resolve_backend(
+        backend if backend is not None
+        else getattr(w.kernel_policy, "backend", "auto"))
     ctx = registry.weight_ctx(
         w, (mr, k, nc),
         dtype=b.dtype, tileable=_tileable(mr, k, nc, w.nm, block),
+        backend=be,
     )
     if isinstance(w, QNMWeight):
         return registry.dispatch(
@@ -118,7 +125,7 @@ def indexmac_gather(
     )
 
 
-def explain_gather(b_shape, w) -> registry.DispatchRecord:
+def explain_gather(b_shape, w, *, backend=None) -> registry.DispatchRecord:
     """Dry-run routing for the gather-port families: the record
     ``indexmac_gather(w, b)`` would produce for a dense B operand of
     shape ``b_shape`` (the ``w.axis == 1`` arm of
@@ -131,8 +138,12 @@ def explain_gather(b_shape, w) -> registry.DispatchRecord:
     block = w.kernel_policy.block or DEFAULT_BLOCK
     mr = w.vals.shape[0]
     k, nc = b_shape
+    be = resolve_backend(
+        backend if backend is not None
+        else getattr(w.kernel_policy, "backend", "auto"))
     ctx = registry.weight_ctx(
         w, (mr, k, nc), tileable=_tileable(mr, k, nc, w.nm, block),
+        backend=be,
     )
     op = ("indexmac_gather_q" if isinstance(w, QNMWeight)
           else "indexmac_gather")

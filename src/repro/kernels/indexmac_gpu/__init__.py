@@ -1,0 +1,26 @@
+"""Pallas-on-Triton lowering of the indexmac kernel families.
+
+The GPU mirror of :mod:`repro.kernels.indexmac` /
+:mod:`repro.kernels.indexmac_gather`: same dispatch families, same
+logical contract (bit-exact vs the references on the integer lattice),
+registered in the kernel registry under ``backend="gpu"`` — see
+:mod:`repro.kernels.backend` for how a call selects a backend.
+
+Structure:
+  kernel.py        — nm_spmm_gpu / nm_spmm_gpu_q (prefill-shaped)
+  decode_kernel.py — nm_spmm_gpu_decode / _q (skinny-M, fused epilogue)
+  gather_kernel.py — indexmac_gather_gpu / _q (paper A-orientation)
+  ops.py           — registry registrations + pad/slice wrappers
+"""
+from repro.kernels.indexmac_gpu.decode_kernel import (  # noqa: F401
+    nm_spmm_gpu_decode,
+    nm_spmm_gpu_decode_q,
+)
+from repro.kernels.indexmac_gpu.gather_kernel import (  # noqa: F401
+    indexmac_gather_gpu,
+    indexmac_gather_gpu_q,
+)
+from repro.kernels.indexmac_gpu.kernel import (  # noqa: F401
+    nm_spmm_gpu,
+    nm_spmm_gpu_q,
+)

@@ -1,0 +1,191 @@
+"""Skinny-M Pallas GPU kernels for decode-shaped N:M sparse GEMMs.
+
+The GPU mirror of :mod:`repro.kernels.indexmac.decode_kernel`: same
+masked-dot dataflow (the activation rows are the indexed operand — for
+each in-block offset pair (s, j) the strided x slice ``x[:, j::m]``
+contracts against ``where(idx[s::n] == j, vals[s::n], 0)``, m-fold less
+MAC work than dense expansion), same fused epilogue contract
+(``activation(acc [* scales] + bias)`` on the f32 accumulator, see
+:mod:`repro.kernels.epilogue`), different grid shape:
+
+* grid is ``(N/bn,)`` — one program instance per output column strip.
+  There is no sequential grid dimension on Triton, so the K reduction
+  is an in-kernel loop and the accumulator lives in registers rather
+  than VMEM scratch.
+* the whole skinny x (bm <= 8 rows, full K) is block-resident in every
+  instance — the stationary operand, same as the TPU kernel's pinned
+  VMEM block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.sparsity import NMConfig
+from repro.kernels.epilogue import ACTIVATIONS
+
+
+def _decode_partial(x, v, ii, n: int, m: int):
+    """Sum of per-(s, j) offset dots — identical math to the TPU
+    decode kernel's partial; no densified W intermediate."""
+    bm = x.shape[0]
+    bn = v.shape[1]
+    acc = jnp.zeros((bm, bn), dtype=jnp.float32)
+    for s in range(n):
+        v_s = v[s::n, :].astype(jnp.float32)  # (bk/m, bn)
+        i_s = ii[s::n, :].astype(jnp.int32)
+        for j in range(m):
+            xj = x[:, j::m]  # (bm, bk/m)
+            w_sj = jnp.where(i_s == j, v_s, 0.0)
+            acc += jax.lax.dot(xj, w_sj, preferred_element_type=jnp.float32)
+    return acc
+
+
+def _decode_gpu_kernel(x_ref, vals_ref, idx_ref, *rest, n, m, nk, block_k,
+                       out_dtype, activation, quantized, has_bias):
+    refs = list(rest)
+    scales_ref = refs.pop(0) if quantized else None
+    bias_ref = refs.pop(0) if has_bias else None
+    (o_ref,) = refs
+    bkc = block_k * n // m
+    bm = x_ref.shape[0]
+    bn = vals_ref.shape[1]
+    acc = jnp.zeros((bm, bn), dtype=jnp.float32)
+    for k in range(nk):
+        xk = x_ref[:, k * block_k:(k + 1) * block_k].astype(jnp.float32)
+        acc += _decode_partial(
+            xk,
+            vals_ref[k * bkc:(k + 1) * bkc, :],
+            idx_ref[k * bkc:(k + 1) * bkc, :], n, m)
+    y = acc
+    if scales_ref is not None:
+        y = y * scales_ref[...]
+    if bias_ref is not None:
+        y = y + bias_ref[...]
+    if activation is not None:
+        y = ACTIVATIONS[activation](y)
+    o_ref[...] = y.astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "block_n", "block_k", "activation", "out_dtype",
+                     "interpret"),
+)
+def nm_spmm_gpu_decode(
+    x: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    cfg: NMConfig,
+    block_n: int = 128,
+    block_k: int = 512,
+    activation: Optional[str] = None,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = epilogue(x @ decompress(vals, idx)) for skinny x, GPU lowering.
+
+    Shape requirements (enforced): M a sublane multiple (the op layer
+    pads 1..8 rows up to 8 — kept for layout parity with the TPU
+    family), N % block_n == 0, K % block_k == 0, block_k % m == 0;
+    ``bias`` is (N,) when given.
+    """
+    return _gpu_decode(x, vals, idx, None, bias, cfg=cfg,
+                       block_n=block_n, block_k=block_k,
+                       activation=activation, out_dtype=out_dtype,
+                       interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "block_n", "block_k", "activation", "out_dtype",
+                     "interpret"),
+)
+def nm_spmm_gpu_decode_q(
+    x: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    scales: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    cfg: NMConfig,
+    block_n: int = 128,
+    block_k: int = 512,
+    activation: Optional[str] = None,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """int8 decode sibling on GPU: per-output-channel ``scales`` multiply
+    the f32 accumulator before the bias/activation epilogue — the same
+    one-launch composition contract as the TPU family."""
+    if vals.dtype != jnp.int8:
+        raise ValueError(f"quantized kernel needs int8 vals, got {vals.dtype}")
+    if scales.shape != (vals.shape[1],):
+        raise ValueError(
+            f"scales shape {scales.shape} != (N,) = ({vals.shape[1]},)")
+    return _gpu_decode(x, vals, idx, scales, bias, cfg=cfg,
+                       block_n=block_n, block_k=block_k,
+                       activation=activation, out_dtype=out_dtype,
+                       interpret=interpret)
+
+
+def _gpu_decode(x, vals, idx, scales, bias, *, cfg, block_n, block_k,
+                activation, out_dtype, interpret):
+    mm, kk = x.shape
+    kc, nn = vals.shape
+    if kc * cfg.m != kk * cfg.n:
+        raise ValueError(
+            f"vals rows {kc} inconsistent with K={kk} and {cfg.tag}")
+    if idx.shape != vals.shape:
+        raise ValueError("idx/vals shape mismatch")
+    if mm % 8:
+        raise ValueError(f"decode kernel needs M a sublane multiple, got {mm}")
+    if activation is not None and activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    block_k = min(block_k, kk)
+    block_n = min(block_n, nn)
+    if kk % block_k or block_k % cfg.m:
+        raise ValueError(f"K={kk} block_k={block_k} m={cfg.m} not tileable")
+    if nn % block_n:
+        raise ValueError(f"N={nn} not divisible by block_n={block_n}")
+    if bias is not None and bias.shape != (nn,):
+        raise ValueError(f"bias shape {bias.shape} != (N,) = ({nn},)")
+    out_dtype = out_dtype or x.dtype
+    nk = kk // block_k
+
+    quantized = scales is not None
+    has_bias = bias is not None
+    # one program instance per output column strip; x and the full
+    # compressed column strip are block-resident, K loops in-kernel.
+    in_specs = [
+        pl.BlockSpec((mm, kk), lambda j: (0, 0)),
+        pl.BlockSpec((kc, block_n), lambda j: (0, j)),
+        pl.BlockSpec((kc, block_n), lambda j: (0, j)),
+    ]
+    operands = [x, vals, idx]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, block_n), lambda j: (0, j)))
+        operands.append(scales.astype(jnp.float32).reshape(1, nn))
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, block_n), lambda j: (0, j)))
+        operands.append(bias.astype(jnp.float32).reshape(1, nn))
+
+    kernel = functools.partial(
+        _decode_gpu_kernel, n=cfg.n, m=cfg.m, nk=nk, block_k=block_k,
+        out_dtype=out_dtype, activation=activation, quantized=quantized,
+        has_bias=has_bias,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nn // block_n,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((mm, block_n), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), out_dtype),
+        interpret=interpret,
+    )(*operands)

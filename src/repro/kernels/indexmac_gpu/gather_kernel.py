@@ -1,0 +1,171 @@
+"""Pallas GPU lowering of the gather-port family (paper A-orientation).
+
+C[Mr, Nc] = A_sparse[Mr, K] @ B[K, Nc] with A compressed along its rows:
+``vals``/``idx`` are (Mr, Kc), Kc = K * n / m, and compressed column c
+addresses dense B row ``(c // n) * m + idx``.
+
+The TPU port (:mod:`repro.kernels.indexmac_gather.kernel`) is a literal
+scalar-loop rendition of the paper's vindexmac — SMEM scalar reads
+driving indirect VMEM row reads, one MAC per nonzero. That dataflow has
+no GPU analogue worth writing (a warp per scalar read is the fully
+divergent worst case), so this lowering keeps the *semantics* and swaps
+the mechanism for the masked-dot identity, transposed to the sparse-A
+orientation: for every in-block offset pair (s, j)
+
+    C += where(idx[:, s::n] == j, vals[:, s::n], 0) @ B[j::m, :]
+
+an (bm, bk/m) x (bk/m, bn) tensor-core dot per pair — the bounded
+``idx`` compare is still the vindexmac analogue (a local select, never
+an HBM gather), and summed over the n*m pairs this is exactly A @ B.
+
+Grid is ``(Mr/bm, Nc/bn)`` output tiles (all-parallel program
+instances); the K reduction is an in-kernel loop over ``block_k``
+chunks with a register accumulator. Accumulation is f32; the int8
+variant applies per-output-row scales once at writeback, so on the
+integer lattice the result is bit-exact vs the reference composition.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.sparsity import NMConfig
+
+
+def _gather_partial(v, ii, b, n: int, m: int):
+    """Sum of per-(s, j) offset dots for one K chunk: compressed
+    (bm, bkc) strip of A against the dense (bk, bn) B chunk."""
+    bm = v.shape[0]
+    bn = b.shape[1]
+    acc = jnp.zeros((bm, bn), dtype=jnp.float32)
+    for s in range(n):
+        v_s = v[:, s::n].astype(jnp.float32)  # (bm, bk/m)
+        i_s = ii[:, s::n].astype(jnp.int32)
+        for j in range(m):
+            a_sj = jnp.where(i_s == j, v_s, 0.0)
+            b_j = b[j::m, :].astype(jnp.float32)  # (bk/m, bn)
+            acc += jax.lax.dot(a_sj, b_j, preferred_element_type=jnp.float32)
+    return acc
+
+
+def _gather_gpu_kernel(vals_ref, idx_ref, b_ref, o_ref, *, n, m, nk,
+                       block_k, out_dtype):
+    bkc = block_k * n // m
+    bm = vals_ref.shape[0]
+    bn = b_ref.shape[1]
+    acc = jnp.zeros((bm, bn), dtype=jnp.float32)
+    for k in range(nk):
+        acc += _gather_partial(
+            vals_ref[:, k * bkc:(k + 1) * bkc],
+            idx_ref[:, k * bkc:(k + 1) * bkc],
+            b_ref[k * block_k:(k + 1) * block_k, :], n, m)
+    o_ref[...] = acc.astype(out_dtype)
+
+
+def _gather_gpu_q_kernel(vals_ref, idx_ref, scales_ref, b_ref, o_ref, *,
+                         n, m, nk, block_k, out_dtype):
+    bkc = block_k * n // m
+    bm = vals_ref.shape[0]
+    bn = b_ref.shape[1]
+    acc = jnp.zeros((bm, bn), dtype=jnp.float32)
+    for k in range(nk):
+        acc += _gather_partial(
+            vals_ref[:, k * bkc:(k + 1) * bkc],
+            idx_ref[:, k * bkc:(k + 1) * bkc],
+            b_ref[k * block_k:(k + 1) * block_k, :], n, m)
+    o_ref[...] = (acc * scales_ref[...]).astype(out_dtype)
+
+
+def _check_gather(vals, idx, b, cfg, block_m, block_n, block_k):
+    mr, kc = vals.shape
+    k, nc = b.shape
+    if kc * cfg.m != k * cfg.n:
+        raise ValueError("compressed width inconsistent with K and N:M")
+    if idx.shape != vals.shape:
+        raise ValueError("idx/vals shape mismatch")
+    if k % block_k or block_k % cfg.m or mr % block_m or nc % block_n:
+        raise ValueError("shapes not tileable")
+    return mr, k, nc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "block_m", "block_n", "block_k", "interpret"),
+)
+def indexmac_gather_gpu(
+    vals: jax.Array,   # (Mr, Kc) compressed A values
+    idx: jax.Array,    # (Mr, Kc) int8
+    b: jax.Array,      # (K, Nc) dense
+    *,
+    cfg: NMConfig,
+    block_m: int = 16,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    block_k = min(block_k, b.shape[0])
+    mr, k, nc = _check_gather(vals, idx, b, cfg, block_m, block_n, block_k)
+    nk = k // block_k
+    kc = k * cfg.n // cfg.m
+    kernel = functools.partial(
+        _gather_gpu_kernel, n=cfg.n, m=cfg.m, nk=nk, block_k=block_k,
+        out_dtype=b.dtype,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(mr // block_m, nc // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, kc), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, kc), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mr, nc), b.dtype),
+        interpret=interpret,
+    )(vals, idx, b)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "block_m", "block_n", "block_k", "interpret"),
+)
+def indexmac_gather_gpu_q(
+    vals: jax.Array,   # (Mr, Kc) compressed A values, int8
+    idx: jax.Array,    # (Mr, Kc) int8
+    scales: jax.Array,  # (Mr,) float32, one per output row
+    b: jax.Array,      # (K, Nc) dense
+    *,
+    cfg: NMConfig,
+    block_m: int = 16,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    if vals.dtype != jnp.int8:
+        raise ValueError(f"quantized gather needs int8 vals, got {vals.dtype}")
+    block_k = min(block_k, b.shape[0])
+    mr, k, nc = _check_gather(vals, idx, b, cfg, block_m, block_n, block_k)
+    if scales.shape != (mr,):
+        raise ValueError(f"scales shape {scales.shape} != (Mr,) = ({mr},)")
+    nk = k // block_k
+    kc = k * cfg.n // cfg.m
+    kernel = functools.partial(
+        _gather_gpu_q_kernel, n=cfg.n, m=cfg.m, nk=nk, block_k=block_k,
+        out_dtype=b.dtype,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(mr // block_m, nc // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, kc), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, kc), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mr, nc), b.dtype),
+        interpret=interpret,
+    )(vals, idx, scales.astype(jnp.float32).reshape(mr, 1), b)

@@ -14,13 +14,21 @@ Dispatch happens at trace time: under ``jax.jit`` one record is written
 per compilation, not per call — the routing is shape-static, so one
 record per compiled shape is the complete story.
 
+Every implementation is registered for a **backend** (``"tpu"``,
+``"gpu"``, or ``"any"`` for the backend-neutral XLA references); the
+dispatch context carries the resolved backend of the call (see
+:mod:`repro.kernels.backend`) and implementations registered for a
+*different* backend are filtered out silently — they are not
+"unsupported on this call", they are a different lowering of the same
+family, so they never pollute the record's ``reason`` string.
+
 Alongside the bounded record history the registry keeps **per-family
-dispatch counters** (``dispatch_counts``): a ``(op, impl) -> count``
-map that never evicts, so tests assert "the decode family dispatched N
-times and the reference route zero times" without sniffing the record
-list. When observability is enabled (:mod:`repro.obs`) every routing
-decision also increments the ``kernel_dispatch_total{op=,impl=}``
-metric.
+dispatch counters** (``dispatch_counts``): a ``(op, impl, backend) ->
+count`` map that never evicts, so tests assert "the decode family
+dispatched N times on the tpu backend and the reference route zero
+times" without sniffing the record list. When observability is enabled
+(:mod:`repro.obs`) every routing decision also increments the
+``kernel_dispatch_total{op=,impl=,backend=}`` metric.
 """
 from __future__ import annotations
 
@@ -48,6 +56,7 @@ class DispatchRecord:
     padded: Optional[tuple]  # (M', K', N') when the impl padded, else None
     block: Optional[tuple]  # (block_m, block_n, block_k) when applicable
     reason: str  # why higher-priority impls were skipped ("" if none)
+    backend: str = "tpu"  # resolved kernel backend the call routed under
 
 
 class KernelForceError(RuntimeError):
@@ -66,37 +75,48 @@ class KernelImpl:
     supports: Callable[[dict], Optional[str]]
     run: Callable[..., Any]
     uses_plan: bool = False  # True: records carry ctx["plan"] geometry
+    backend: str = "any"  # "tpu" | "gpu" | "any" (backend-neutral refs)
 
 
 _LOCK = threading.Lock()
 _IMPLS: dict[str, list[KernelImpl]] = {}
 _HISTORY: collections.deque[DispatchRecord] = collections.deque(maxlen=256)
-_COUNTS: collections.Counter = collections.Counter()  # (op, impl) -> n
+_COUNTS: collections.Counter = collections.Counter()  # (op, impl, backend) -> n
 
 
 def make_ctx(shape, *, nm, use_kernel: bool, plan=None, dtype=None,
-             force: bool = False, **extra) -> dict:
+             force: bool = False, backend: str = "tpu", **extra) -> dict:
     """Dispatch context for a compressed-GEMM op.
 
     ``shape`` is the logical (M, K, N); ``nm`` the NMConfig of the
     compressed operand; ``force=True`` tells padded impls to ignore the
-    waste limit (KernelPolicy mode "force"). Extra keys (e.g. the gather
-    port's ``tileable``) pass through to ``supports`` predicates.
+    waste limit (KernelPolicy mode "force"); ``backend`` is the
+    *resolved* kernel backend of the call (see
+    :mod:`repro.kernels.backend` — never ``"auto"`` here). Extra keys
+    (e.g. the gather port's ``tileable``) pass through to ``supports``
+    predicates.
     """
     return {"shape": tuple(shape), "cfg": nm, "use_kernel": use_kernel,
-            "plan": plan, "dtype": dtype, "force": force, **extra}
+            "plan": plan, "dtype": dtype, "force": force,
+            "backend": backend, **extra}
 
 
-def weight_ctx(w, shape, *, plan=None, dtype=None,
+def weight_ctx(w, shape, *, plan=None, dtype=None, backend=None,
                **extra) -> dict:
     """Dispatch context derived from a typed weight node's own metadata
     (:class:`NMWeight` or its quantized sibling — anything carrying
     ``nm`` and ``kernel_policy``) — the weight, not the call site,
-    decides nm / kernel policy."""
+    decides nm / kernel policy / backend. ``backend`` overrides the
+    policy's (already-resolved callers); ``None`` resolves the policy's
+    static field here."""
+    from repro.kernels.backend import resolve_backend
+
     pol = w.kernel_policy
+    if backend is None:
+        backend = resolve_backend(getattr(pol, "backend", "auto"))
     return make_ctx(shape, nm=w.nm, use_kernel=pol.mode != "off",
                     plan=plan, dtype=dtype, force=pol.mode == "force",
-                    **extra)
+                    backend=backend, **extra)
 
 
 def register(
@@ -106,11 +126,14 @@ def register(
     priority: int = 0,
     supports: Callable[[dict], Optional[str]] = lambda ctx: None,
     uses_plan: bool = False,
+    backend: str = "any",
 ):
-    """Decorator registering ``fn`` as implementation ``name`` of ``op``."""
+    """Decorator registering ``fn`` as implementation ``name`` of ``op``
+    for ``backend`` (``"any"`` = backend-neutral, e.g. XLA references)."""
 
     def deco(fn):
-        impl = KernelImpl(op, name, priority, supports, fn, uses_plan)
+        impl = KernelImpl(op, name, priority, supports, fn, uses_plan,
+                          backend)
         with _LOCK:
             impls = [i for i in _IMPLS.get(op, ()) if i.name != name]
             impls.append(impl)
@@ -131,10 +154,15 @@ def dispatch(op: str, ctx: dict, *args, **kwargs):
 
     ``ctx`` must carry ``shape=(M, K, N)``; when the chosen impl is a
     padded kernel, ``ctx["plan"]`` (a PadPlan) supplies the padded
-    geometry recorded alongside.
+    geometry recorded alongside. Implementations registered for a
+    different backend than ``ctx["backend"]`` are filtered silently
+    (they are a parallel lowering, not a fallback reason).
     """
+    backend = ctx.get("backend", "tpu")
     skipped = []
     for impl in implementations(op):
+        if impl.backend not in ("any", backend):
+            continue
         why = impl.supports(ctx)
         if why is not None:
             skipped.append(f"{impl.name}: {why}")
@@ -150,11 +178,13 @@ def dispatch(op: str, ctx: dict, *args, **kwargs):
                 padded=plan.padded_shape if uses_plan else None,
                 block=plan.block if uses_plan else None,
                 reason="; ".join(skipped),
+                backend=backend,
             )
         )
         return out
     raise LookupError(
-        f"no implementation of {op!r} supports this call: {'; '.join(skipped)}"
+        f"no implementation of {op!r} supports this call on backend "
+        f"{backend!r}: {'; '.join(skipped)}"
     )
 
 
@@ -163,8 +193,11 @@ def explain(op: str, ctx: dict) -> DispatchRecord:
     context, without running anything — the dry-run behind
     ``repro.api.explain_dispatch``. Raises LookupError when no
     implementation supports the call (same contract as dispatch)."""
+    backend = ctx.get("backend", "tpu")
     skipped = []
     for impl in implementations(op):
+        if impl.backend not in ("any", backend):
+            continue
         why = impl.supports(ctx)
         if why is not None:
             skipped.append(f"{impl.name}: {why}")
@@ -178,20 +211,22 @@ def explain(op: str, ctx: dict) -> DispatchRecord:
             padded=plan.padded_shape if uses_plan else None,
             block=plan.block if uses_plan else None,
             reason="; ".join(skipped),
+            backend=backend,
         )
     raise LookupError(
-        f"no implementation of {op!r} supports this call: {'; '.join(skipped)}"
+        f"no implementation of {op!r} supports this call on backend "
+        f"{backend!r}: {'; '.join(skipped)}"
     )
 
 
 def _record(rec: DispatchRecord) -> None:
     with _LOCK:
         _HISTORY.append(rec)
-        _COUNTS[(rec.op, rec.impl)] += 1
+        _COUNTS[(rec.op, rec.impl, rec.backend)] += 1
     bundle = _obs.get_obs()
     if bundle is not None:
         bundle.metrics.inc("kernel_dispatch_total", op=rec.op,
-                           impl=rec.impl)
+                           impl=rec.impl, backend=rec.backend)
 
 
 def last_dispatch(op: Optional[str] = None) -> Optional[DispatchRecord]:
@@ -208,15 +243,18 @@ def dispatch_history(op: Optional[str] = None) -> list[DispatchRecord]:
         return [r for r in _HISTORY if op is None or r.op == op]
 
 
-def dispatch_counts(op_prefix: Optional[str] = None) -> dict:
-    """Cumulative ``(op, impl) -> count`` of every routing decision made
-    since process start (or :func:`clear_history`). Unlike the bounded
-    record history this never evicts — the supported way for tests and
-    monitoring to assert which families executed (e.g. decode-family
-    count > 0 and reference-route count == 0)."""
+def dispatch_counts(op_prefix: Optional[str] = None,
+                    backend: Optional[str] = None) -> dict:
+    """Cumulative ``(op, impl, backend) -> count`` of every routing
+    decision made since process start (or :func:`clear_history`). Unlike
+    the bounded record history this never evicts — the supported way for
+    tests and monitoring to assert which families executed on which
+    backend (e.g. decode-family count > 0, reference-route count == 0,
+    everything under ``backend="gpu"``)."""
     with _LOCK:
         return {k: v for k, v in _COUNTS.items()
-                if op_prefix is None or k[0].startswith(op_prefix)}
+                if (op_prefix is None or k[0].startswith(op_prefix))
+                and (backend is None or k[2] == backend)}
 
 
 def clear_history() -> None:

@@ -12,7 +12,8 @@ small and dependency-free:
     ``sum`` / ``count``.
 
 Metrics are keyed by ``(name, sorted label items)`` — the same name may
-carry many label sets (e.g. ``kernel_dispatch_total{op=...,impl=...}``).
+carry many label sets (e.g.
+``kernel_dispatch_total{op=...,impl=...,backend=...}``).
 All mutation goes through one lock; every hot-path call is a dict lookup
 plus a float add, and nothing here is ever invoked unless observability
 is enabled (see :mod:`repro.obs`).

@@ -417,34 +417,40 @@ class ServeEngine:
         model mixing 2:4 and 1:4 layers tunes every shape at its true
         geometry (the old dict walk hardcoded the global ratio), and
         int8 leaves tune under the quantized family's own cache keys
-        (value dtype int8). Dense and masked models contribute no such
-        leaves — the walk is the gate."""
+        (value dtype int8). Each leaf's policy also carries the kernel
+        backend, so a gpu-pinned weight pre-pays the GPU family's sweep
+        under its own key namespace. Dense and masked models contribute
+        no such leaves — the walk is the gate."""
         from repro.core.nmweight import NMWeight
         from repro.kernels import autotune
+        from repro.kernels.backend import resolve_backend
         from repro.models.common import get_compute_dtype
         from repro.quant import QNMWeight
 
         typed = (NMWeight, QNMWeight)
-        shapes: set[tuple[int, int, Any, Any]] = set()
+        shapes: set[tuple[int, int, Any, Any, str]] = set()
         for leaf in jax.tree.leaves(
                 self.params, is_leaf=lambda x: isinstance(x, typed)):
             if isinstance(leaf, typed):
                 kc, n = leaf.vals.shape[-2:]  # scan-stacked leaves
                 dt = (jnp.int8 if isinstance(leaf, QNMWeight)
                       else get_compute_dtype())
-                shapes.add((kc * leaf.nm.m // leaf.nm.n, n, leaf.nm, dt))
+                be = resolve_backend(
+                    getattr(leaf.kernel_policy, "backend", "auto"))
+                shapes.add((kc * leaf.nm.m // leaf.nm.n, n, leaf.nm, dt, be))
         from repro.kernels.indexmac.ops import decode_m_max
 
-        for k, n, nm, dt in sorted(
-                shapes, key=lambda t: (t[0], t[1], t[2].tag, str(t[3]))):
+        for k, n, nm, dt, be in sorted(
+                shapes, key=lambda t: (t[0], t[1], t[2].tag, str(t[3]), t[4])):
             for m_rows in {self.slots, self.slots * self.prefill_len}:
                 if m_rows <= decode_m_max():
                     # skinny-M rows route to the decode kernel family,
                     # which sweeps its own grid under its own cache keys
                     autotune.ensure_tuned(m_rows, n, k, nm, dtype=dt,
-                                          family="decode")
+                                          family="decode", backend=be)
                 else:
-                    autotune.ensure_tuned(m_rows, n, k, nm, dtype=dt)
+                    autotune.ensure_tuned(m_rows, n, k, nm, dtype=dt,
+                                          backend=be)
 
 
 def _validate_chunkable(cfg) -> None:

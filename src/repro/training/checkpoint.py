@@ -62,7 +62,24 @@ def _policy_meta(pol) -> dict:
         "mode": pol.mode,
         "block": list(pol.block) if pol.block else None,
         "decode_block": list(pol.decode_block) if pol.decode_block else None,
+        "backend": getattr(pol, "backend", "auto"),
     }
+
+
+def policy_from_meta(meta: dict) -> "KernelPolicy":
+    """Rebuild a :class:`repro.core.nmweight.KernelPolicy` from a
+    manifest's per-leaf ``policy`` dict. Manifests written before the
+    kernel-backend axis existed carry no ``backend`` key — they restore
+    as ``"auto"`` (the pre-axis behavior: platform decides)."""
+    from repro.core.nmweight import KernelPolicy
+
+    return KernelPolicy(
+        mode=meta.get("mode", "off"),
+        block=tuple(meta["block"]) if meta.get("block") else None,
+        decode_block=(tuple(meta["decode_block"])
+                      if meta.get("decode_block") else None),
+        backend=meta.get("backend", "auto"),
+    )
 
 
 def _weight_meta(tree: Any) -> dict[str, dict]:

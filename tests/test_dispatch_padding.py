@@ -200,7 +200,7 @@ def test_autotune_persists_and_reloads(tmp_cache):
     assert block == (8, 128, 128)
     on_disk = json.loads(tmp_cache.read_text())
     assert list(on_disk.values()) == [[8, 128, 128]]
-    assert list(on_disk)[0].startswith("v1|cpu|float32|2:4|8x128x128")
+    assert list(on_disk)[0].startswith("v2|cpu|tpu|float32|2:4|8x128x128")
     # fresh in-memory state must reload from disk
     autotune.clear_memory_cache()
     assert autotune.cached_block(8, 128, 128, cfg, jnp.float32) == (8, 128, 128)

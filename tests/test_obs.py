@@ -380,9 +380,12 @@ def test_dispatch_counts_reset_with_history():
         op="nm_matmul", impl="reference", shape=(16, 64, 64),
         padded=None, block=None, reason=""))
     counts = registry.dispatch_counts()
-    assert counts[("nm_matmul_decode", "pallas_decode")] == 1
+    assert counts[("nm_matmul_decode", "pallas_decode", "tpu")] == 1
     assert registry.dispatch_counts("nm_matmul_decode") == {
-        ("nm_matmul_decode", "pallas_decode"): 1}
+        ("nm_matmul_decode", "pallas_decode", "tpu"): 1}
+    # the backend filter selects the third key component
+    assert registry.dispatch_counts(backend="tpu") == counts
+    assert registry.dispatch_counts(backend="gpu") == {}
     registry.clear_history()
     assert registry.dispatch_counts() == {}
     assert registry.dispatch_history() == []
@@ -397,7 +400,7 @@ def test_dispatch_counts_mirror_to_obs_metric():
         padded=None, block=None, reason=""))
     assert bundle.metrics.counter_value(
         "kernel_dispatch_total", op="nm_matmul_decode",
-        impl="pallas_decode") == 1.0
+        impl="pallas_decode", backend="tpu") == 1.0
     registry.clear_history()
 
 

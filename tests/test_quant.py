@@ -372,7 +372,7 @@ def test_autotune_warmup_walks_qnmweight_leaves(sparse_yi, monkeypatch):
     asked = []
     monkeypatch.setattr(
         autotune, "ensure_tuned",
-        lambda m, n, k, nm, dtype=None, family="":
+        lambda m, n, k, nm, dtype=None, family="", backend="tpu":
             asked.append((m, n, k, jnp.dtype(dtype).name)) or (8, 128, 128))
     ServeEngine(klm, kparams, slots=2, max_seq=64, prefill_len=8,
                 autotune_blocks=True, quantize="int8")

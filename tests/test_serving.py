@@ -244,7 +244,7 @@ def test_autotune_blocks_warmup_covers_sparse_shapes(yi, monkeypatch):
     asked = []
     monkeypatch.setattr(
         autotune, "ensure_tuned",
-        lambda m, n, k, nm, dtype=None, family="":
+        lambda m, n, k, nm, dtype=None, family="", backend="tpu":
             asked.append((m, n, k, family)) or (8, 128, 128))
     ServeEngine(lm, params, slots=2, max_seq=64, prefill_len=8,
                 autotune_blocks=True)
@@ -325,7 +325,7 @@ def test_autotune_warmup_uses_each_weights_own_ratio(yi, monkeypatch):
     asked = []
     monkeypatch.setattr(
         autotune, "ensure_tuned",
-        lambda m, n, k, nm, dtype=None, family="":
+        lambda m, n, k, nm, dtype=None, family="", backend="tpu":
             asked.append((m, n, k, nm.tag)) or (8, 128, 128))
     ServeEngine(lm, params, slots=2, max_seq=64, prefill_len=8,
                 autotune_blocks=True)
