@@ -56,12 +56,15 @@ import sys
 # row-name prefixes that represent steady-state kernel/serving timings
 GATED_PREFIXES = ("fig4_measured", "fig5_measured", "fig6_measured",
                   "tpu_kernel_", "serve_decode_", "serve_itl_",
-                  "serve_paged_decode_")
+                  "serve_paged_decode_", "serve_prefill_bs_",
+                  "serve_prefill_dense_")
 # dimensionless rate rows (higher is better): gated on a MINIMUM — the
-# paged engine's prefix-hit rate or pool utilization collapsing means
-# the paging machinery broke even if raw throughput still looks fine.
-# Excluded from the share normalization (they are not times).
-RATE_PREFIXES = ("serve_paged_hitrate_", "serve_paged_util_")
+# paged engine's prefix-hit rate or pool utilization collapsing, or the
+# block-sparse prefill speedup shrinking toward 1x, means the machinery
+# broke even if raw throughput still looks fine. Excluded from the
+# share normalization (they are not times).
+RATE_PREFIXES = ("serve_paged_hitrate_", "serve_paged_util_",
+                 "serve_prefill_bs_speedup_")
 CALIBRATION_ROW = "bench_calibration"
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
                                 "BENCH_baseline.json")
@@ -117,7 +120,7 @@ def main(argv=None) -> int:
              if n.startswith(RATE_PREFIXES) and base[n] > 0]
     gated = [n for n in shared
              if n.startswith(GATED_PREFIXES) and base[n] >= args.min_us
-             and res[n] > 0]
+             and res[n] > 0 and not n.startswith(RATE_PREFIXES)]
     if not gated:
         print("error: no gated (timed) rows shared with the baseline",
               file=sys.stderr)

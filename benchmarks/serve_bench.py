@@ -168,6 +168,7 @@ def _child(devices: int, smoke: bool) -> None:
         rows.append((f"serve_itl_{variant}_{dev}", p50 * 1e6,
                      f"p99={p99 * 1e6:.0f}us"))
     rows += _paged_cell(devices, smoke, mesh)
+    rows += _blocksparse_cell(devices, smoke, mesh)
     print("ROWS" + json.dumps(rows))
     print("METRICS" + json.dumps(_metrics_pass(devices, smoke, mesh)))
 
@@ -256,6 +257,129 @@ def _paged_cell(devices: int, smoke: bool, mesh) -> list[tuple]:
          f"{st['prefix_hit_pages']}/{st['prefix_lookup_pages']}pages"),
         (f"serve_paged_util_{dev}", st["page_util_mean"],
          f"max={st['page_util_max']:.2f}"),
+    ]
+
+
+def _blocksparse_cell(devices: int, smoke: bool, mesh) -> list[tuple]:
+    """Block-sparse prefill cell: a thin long-context GQA model serves
+    FULL prefills (``prefill_chunk == prefill_len``, the shape that
+    routes the ``bs_attention`` prefill family) under a local MaskSpec,
+    against the dense sliding-window path with identical visibility
+    semantics. Emits the gated ``serve_prefill_bs_*`` /
+    ``serve_prefill_dense_*`` timing rows plus the min-gated speedup
+    rate row. The cell refuses to report at all unless (a) trace-time
+    dispatch counters prove a sparse lowering ran and the dense
+    ``masked_reference`` fallback never did, and (b) the masked
+    engine's tokens match the dense engine's exactly (f32 compute for
+    the pass, so parity is bit-meaningful)."""
+    import dataclasses
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import api
+    from repro.configs import get_reduced
+    from repro.configs.base import FFNConfig
+    from repro.kernels import registry
+    from repro.kernels.blocksparse_attn.mask import MaskSpec, compile_mask
+    from repro.models import common
+    from repro.models.transformer import LM
+    from repro.serving.engine import Request, ServeEngine, ShardedServeEngine
+
+    seq = 512 if smoke else 1024
+    window, block = 192, 64
+    slots, requests = 2, 4
+    spec = MaskSpec("local", block=block, window=window)
+    plan = compile_mask(spec, seq, seq)
+    assert plan is not None and plan.density <= 0.5, plan
+
+    prev = common.get_compute_dtype()
+    common.set_compute_dtype(jnp.float32)
+    try:
+        base = get_reduced("yi-9b", sparse=False)
+
+        def variant(**fields):
+            def blk(b):
+                # thin FFN: the cell measures the attention path, not
+                # the (identical either way) projection/FFN GEMMs
+                b = dataclasses.replace(b, mlp=FFNConfig(d_ff=64))
+                return dataclasses.replace(
+                    b, mixer=dataclasses.replace(b.mixer, **fields))
+
+            pl = tuple((blk(e), r) for e, r in base.plan)
+            return dataclasses.replace(base, plan=pl, max_seq=seq + 8)
+
+        cfg_d = variant(mask=None, window=window)
+        cfg_b = variant(mask=spec, window=None)
+        lm_d, lm_b = LM(cfg_d), LM(cfg_b)
+        params = lm_d.init(jax.random.PRNGKey(0))  # mask changes no params
+
+        # preflight: the full-prefill shape must route a sparse lowering
+        mx = cfg_b.plan[0][0].mixer
+        rec = api.explain_dispatch_attention(
+            (slots, seq, mx.q_heads, mx.head_dim),
+            (slots, seq, mx.kv_heads, mx.head_dim), mask=spec,
+            dtype=jnp.float32)
+        if rec.impl == "masked_reference":
+            raise RuntimeError(
+                f"blocksparse prefill cell needs a sparse lowering; "
+                f"Sq=Skv={seq} mask {spec.tag} would route to "
+                f"{rec.impl}: {rec.reason}")
+
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, base.vocab_size,
+                                size=seq).astype(np.int32)
+                   for _ in range(requests)]
+
+        def serve(lm):
+            kw = dict(slots=slots, max_seq=seq + 8, prefill_len=seq)
+            eng = (ShardedServeEngine(lm, params, mesh=mesh, **kw)
+                   if mesh is not None else ServeEngine(lm, params, **kw))
+            eng.submit(Request(rid=-1, prompt=prompts[0], max_new=1))
+            eng.run()  # warmup: pays the prefill compile
+            best, out = None, None
+            for _ in range(3):
+                n_warm = len(eng.finished)
+                t0 = time.perf_counter()
+                for i, p in enumerate(prompts):
+                    eng.submit(Request(rid=i, prompt=p, max_new=1))
+                done = eng.run()[n_warm:]
+                wall = time.perf_counter() - t0
+                assert len(done) == requests, len(done)
+                out = {r.rid: tuple(r.out) for r in done}
+                best = wall if best is None else min(best, wall)
+            sizes = eng.compiled_cache_sizes()
+            assert sizes["prefill"] in (-1, 1), sizes
+            return best / requests, out
+
+        dense_s, dense_out = serve(lm_d)
+        registry.clear_history()
+        bs_s, bs_out = serve(lm_b)
+        counts = registry.dispatch_counts("bs_attention")
+        sparse_n = sum(
+            n for (op, impl, _), n in counts.items()
+            if op == "bs_attention" and impl != "masked_reference")
+        fallback_n = sum(
+            n for (op, impl, _), n in counts.items()
+            if op == "bs_attention" and impl == "masked_reference")
+        assert sparse_n > 0 and fallback_n == 0, counts
+        assert bs_out == dense_out, (dense_out, bs_out)
+    finally:
+        common.set_compute_dtype(prev)
+
+    speedup = dense_s / bs_s
+    assert speedup >= 1.5, (
+        f"blocksparse prefill speedup {speedup:.2f}x < 1.5x at "
+        f"density {plan.density:.2f}")
+    dev = f"{devices}dev"
+    return [
+        (f"serve_prefill_bs_{dev}", bs_s * 1e6,
+         f"density={plan.density:.2f} S={seq}"),
+        (f"serve_prefill_dense_{dev}", dense_s * 1e6, f"window={window}"),
+        (f"serve_prefill_bs_speedup_{dev}", speedup,
+         f"{speedup:.2f}x vs dense"),
     ]
 
 

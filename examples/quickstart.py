@@ -45,9 +45,10 @@ loss, parts = lm.loss(params, {"tokens": tokens, "labels": tokens})
 print(f"sparse-LM train loss: {float(loss):.3f}")
 
 caches = lm.init_cache(2, 64)
-logits, caches, _ = lm.forward(params, tokens, mode="prefill",
-                               caches=caches, cache_len=jnp.int32(0))
+logits, caches, _ = lm.forward(params, tokens,
+                               view=api.CacheView.prefill(), caches=caches)
 nxt = jnp.argmax(logits[:, -1:], axis=-1)
-logits, caches, _ = lm.forward(params, nxt, mode="decode", caches=caches,
-                               cache_len=jnp.int32(32))
+logits, caches, _ = lm.forward(params, nxt,
+                               view=api.CacheView.decode(jnp.int32(32)),
+                               caches=caches)
 print(f"decode logits: {logits.shape} — quickstart OK")

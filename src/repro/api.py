@@ -15,6 +15,11 @@ The verbs most users need:
                     the DispatchRecord nm_matmul *would* produce —
                     family, kernel, block, pad plan — without running
   is_sparse(obj)    True for typed sparse weight nodes
+  attention(q, k, v, mask=..., cache=...)
+                    block-sparse attention under a declared MaskSpec;
+                    prefill vs cache-view decode/chunk dispatch decided
+                    by the CacheView argument (None = prefill/train);
+                    explain_dispatch_attention is its dry-run twin
 
 An :class:`NMWeight` is a registered JAX pytree: ``vals``/``idx`` are
 leaves (jit/vmap/grad/shard like any array), while the ``NMConfig``, the
@@ -79,6 +84,13 @@ from repro.core.sparsity import (
     prune_mask_nm,
 )
 from repro.kernels.backend import resolve_backend  # noqa: F401 (re-export)
+from repro.kernels.blocksparse_attn.mask import MaskSpec
+from repro.kernels.blocksparse_attn.ops import (
+    MaskForceError,
+    bs_attention as _bs_attention,
+    bs_attention_decode as _bs_attention_decode,
+    explain_dispatch_attention as _explain_dispatch_attention,
+)
 from repro.kernels.epilogue import Epilogue
 from repro.kernels.indexmac.ops import (
     explain_dispatch as _explain_dispatch,
@@ -89,25 +101,31 @@ from repro.kernels.indexmac_gather.ops import (
 )
 import repro.kernels.indexmac_gpu.ops  # noqa: F401 (gpu-backend registrations)
 from repro.kernels.registry import DispatchRecord, KernelForceError
+from repro.models.cache import CacheView
 from repro.quant import QNMWeight
 from repro.quant import dequantize as _dequantize
 from repro.quant import quantize_nm as _quantize_nm
 from repro.quant import quantize_tree, dequantize_tree  # noqa: F401 (re-export)
 
 __all__ = [
+    "CacheView",
     "DispatchRecord",
     "Epilogue",
     "KernelForceError",
     "KernelPolicy",
+    "MaskForceError",
+    "MaskSpec",
     "MaskedNMWeight",
     "NMConfig",
     "NMWeight",
     "QNMWeight",
+    "attention",
     "conv2d",
     "densify",
     "dequantize",
     "dequantize_tree",
     "explain_dispatch",
+    "explain_dispatch_attention",
     "indexmac_gather",
     "is_sparse",
     "nm_matmul",
@@ -222,6 +240,68 @@ def explain_dispatch(x_shape, w, *, epilogue: Optional[Epilogue] = None,
     host cannot execute."""
     return _explain_dispatch(x_shape, w, epilogue=epilogue, dtype=dtype,
                              backend=backend)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, mask: MaskSpec,
+              cache: Optional[CacheView] = None, scale=None,
+              policy="auto", backend: Optional[str] = None,
+              tile: Optional[tuple[int, int]] = None) -> jax.Array:
+    """Block-sparse attention under a declared :class:`MaskSpec` — the
+    attention sibling of :func:`nm_matmul`: one typed entry, family
+    dispatch by shape and cache view.
+
+    ``cache=None`` is the prefill/train case (q and k/v cover the same
+    absolute positions from 0): routes the ``bs_attention`` family —
+    pair-list Pallas kernel on TPU, gather kernel on the gpu lane,
+    XLA block-gather elsewhere, dense fallback under the density/waste
+    budgets (``REPRO_BS_DENSITY_LIMIT`` / ``REPRO_BS_WASTE_LIMIT``).
+
+    A :class:`CacheView` in decode/chunk mode means k/v are fixed-size
+    cache views: routes ``bs_attention_decode`` with the valid extent
+    ``cache_len + Sq`` (chunk mode masks by the queries' absolute
+    positions). ``policy``/``backend``/``tile`` follow the
+    :class:`KernelPolicy` contract; ``KernelPolicy("force")`` on an
+    untileable mask raises the typed :class:`MaskForceError`."""
+    if cache is None:
+        return _bs_attention(q, k, v, spec=mask, scale=scale, policy=policy,
+                             backend=backend, tile=tile)
+    if not isinstance(cache, CacheView):
+        raise TypeError(
+            f"cache must be a CacheView (or None for prefill/train), got "
+            f"{type(cache).__name__}")
+    if not cache.offset_mode:
+        raise ValueError(
+            f"a {cache.mode!r} CacheView carries no cache offset — pass "
+            f"cache=None for prefill/train attention")
+    sq = q.shape[1]
+    q_positions = cache.positions
+    if cache.mode == "chunk" and q_positions is None:
+        cl = cache.cache_len
+        q_positions = (cl[:, None] + jnp.arange(sq) if cl.ndim == 1
+                       else jnp.arange(sq) + cl)
+    if cache.mode == "decode":
+        q_positions = None
+    return _bs_attention_decode(
+        q, k, v, spec=mask, length=cache.cache_len + sq,
+        q_positions=q_positions, scale=scale, policy=policy,
+        backend=backend)
+
+
+def explain_dispatch_attention(q_shape, kv_shape, *, mask: MaskSpec,
+                               decode: bool = False, dtype=None,
+                               policy="auto", backend: Optional[str] = None,
+                               tile: Optional[tuple[int, int]] = None,
+                               ) -> DispatchRecord:
+    """The :class:`DispatchRecord` that :func:`attention` *would* write
+    for operands of these shapes (``decode=True`` for the cache-view
+    family) — it shares the route function with the executing call, so
+    the explanation cannot drift from the real dispatch. Raises the same
+    typed errors, including :class:`MaskForceError` for a forced
+    untileable mask."""
+    return _explain_dispatch_attention(
+        q_shape, kv_shape, mask=mask, decode=decode,
+        dtype=dtype if dtype is not None else jnp.float32, policy=policy,
+        backend=backend, tile=tile)
 
 
 def indexmac_gather(w, b: jax.Array, *,

@@ -12,6 +12,7 @@ import dataclasses
 from typing import Literal, Optional
 
 from repro.core.sparsity import NMConfig
+from repro.kernels.blocksparse_attn.mask import MaskSpec  # numpy-only
 
 # ---------------------------------------------------------------------------
 # sparsity integration (the paper's technique as a framework feature)
@@ -76,6 +77,12 @@ class AttnConfig:
     logit_softcap: Optional[float] = None
     qk_norm: bool = False
     rope_theta: Optional[float] = None  # overrides ModelConfig.rope_theta
+    # Block-sparse attention pattern. When set it REPLACES the dense
+    # causal/window masking: train/prefill routes through the
+    # ``bs_attention`` kernel family, decode/chunk through
+    # ``bs_attention_decode`` (the spec's own causal/window semantics
+    # apply; ``window``/``causal`` above are ignored for this mixer).
+    mask: Optional[MaskSpec] = None
 
 
 @dataclasses.dataclass(frozen=True)

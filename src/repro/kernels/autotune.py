@@ -362,3 +362,106 @@ def ensure_tuned(
     benchmarks) regardless of REPRO_AUTOTUNE."""
     return cached_block(m, n, k, cfg, dtype, family, backend) or tune(
         m, n, k, cfg, dtype, family=family, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# bs_attn family: (bq, bk) token tiles for the block-sparse attention
+# kernels. Same cache file and key schema — the MaskSpec's ``.tag``
+# duck-types NMConfig in ``_key`` and the problem key is Sq x Skv x Dk;
+# entries persist as [bq, bk, 0] triples (the loader keeps len-3 lists).
+# ---------------------------------------------------------------------------
+
+_ATTN_FAMILY = "bs_attn"
+
+
+def candidate_attn_tiles(spec, sq: int, skv: int,
+                         backend: str = "tpu") -> list[tuple]:
+    """Feasible (bq, bk) tiles: the pattern granularity and its
+    sublane-aligned subdivisions (a tile above ``spec.block`` can only
+    merge live and dead blocks — never swept)."""
+    from repro.kernels.blocksparse_attn.mask import compile_mask
+
+    cands = []
+    for div in (1, 2, 4):
+        bq = spec.block // div
+        bk = spec.block // div
+        if bq < 8 or bq % 8:
+            continue
+        if compile_mask(spec, sq, skv, (bq, bk)) is None:
+            continue
+        if (bq, bk) not in cands:
+            cands.append((bq, bk))
+    return cands
+
+
+def tune_attn(sq: int, skv: int, dk: int, spec, dtype=jnp.float32,
+              repeats: int = 3, backend: str = "tpu") -> tuple:
+    """Time the block-gather lowering at every candidate tile on real
+    operands; persist and return the winning (bq, bk). The gather
+    lowering is what every backend's routing shares (tile choice moves
+    its pad + gather width the same way it moves the kernels' grids),
+    and it times honestly in interpret-free XLA on any host."""
+    from repro.kernels.blocksparse_attn.mask import compile_mask, default_tile
+    from repro.kernels.blocksparse_attn.ref import blocksparse_xla
+
+    platform = jax.default_backend()
+    t_sweep0 = time.perf_counter()
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, sq, 4, dk)).astype(dtype)
+    k = jax.random.normal(kk, (1, skv, 4, dk)).astype(dtype)
+    v = jax.random.normal(kv, (1, skv, 4, dk)).astype(dtype)
+    best, best_t = None, float("inf")
+    for tile in candidate_attn_tiles(spec, sq, skv, backend):
+        plan = compile_mask(spec, sq, skv, tile)
+        if plan is None:
+            continue
+        try:
+            run = jax.jit(lambda q, k, v, plan=plan: blocksparse_xla(
+                q, k, v, spec=spec, plan=plan))
+            run(q, k, v).block_until_ready()  # compile / warm up
+            t = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                run(q, k, v).block_until_ready()
+                t = min(t, time.perf_counter() - t0)
+        except Exception:  # noqa: BLE001 — infeasible tile
+            continue
+        if t < best_t:
+            best, best_t = tile, t
+    if best is None:
+        best = default_tile(spec, sq, skv)
+    with _LOCK:
+        _load_locked()
+        _MEM[_key(sq, dk, skv, spec, dtype, platform, backend,
+                  _ATTN_FAMILY)] = (best[0], best[1], 0)
+        _save_locked()
+    bundle = _obs.get_obs()
+    if bundle is not None:
+        bundle.metrics.inc("autotune_sweeps_total", family=_ATTN_FAMILY)
+        bundle.metrics.observe("autotune_sweep_seconds",
+                               time.perf_counter() - t_sweep0)
+    return best
+
+
+def best_attn_tile(sq: int, skv: int, dk: int, spec, dtype=jnp.float32,
+                   backend: str = "tpu") -> tuple:
+    """Hot-path (bq, bk) lookup for the bs_attn family: cache hit, else
+    sweep iff REPRO_AUTOTUNE=1, else the spec's own granularity."""
+    from repro.kernels.blocksparse_attn.mask import default_tile
+
+    hit = cached_block(sq, dk, skv, spec, dtype, _ATTN_FAMILY, backend)
+    if hit is not None:
+        return tuple(hit[:2])
+    if os.environ.get("REPRO_AUTOTUNE") == "1":
+        return tune_attn(sq, skv, dk, spec, dtype, backend=backend)
+    return default_tile(spec, sq, skv)
+
+
+def ensure_tuned_attn(sq: int, skv: int, dk: int, spec,
+                      dtype=jnp.float32, backend: str = "tpu") -> tuple:
+    """Sweep-if-missing for the bs_attn family (serving warmup)."""
+    hit = cached_block(sq, dk, skv, spec, dtype, _ATTN_FAMILY, backend)
+    if hit is not None:
+        return tuple(hit[:2])
+    return tune_attn(sq, skv, dk, spec, dtype, backend=backend)

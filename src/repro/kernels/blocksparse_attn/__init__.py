@@ -1,0 +1,30 @@
+"""Block-sparse attention kernel family (``bs_attention`` /
+``bs_attention_decode``).
+
+Layout mirrors the weight-kernel packages:
+
+  mask.py        MaskSpec (frozen pattern declaration), the token-level
+                 predicate, and the static block compiler (bitmap +
+                 live-pair lists + per-row gather lists) — numpy-only,
+                 importable from the configs layer.
+  ref.py         backend-neutral XLA lowerings: the dense masked
+                 reference (parity oracle), the block-gather lowering,
+                 and the mask-aware decode path.
+  kernel.py      Pallas TPU pair-list kernel (scalar-prefetch grid over
+                 live blocks only).
+  gpu_kernel.py  platform-neutral Pallas lowering (output-tile grid,
+                 in-kernel gather loop) — the gpu-interpret CI lane.
+  ops.py         registry registrations, the shared route, typed
+                 entries and ``explain_dispatch_attention``.
+"""
+from repro.kernels.blocksparse_attn.mask import (  # noqa: F401
+    MaskPlan,
+    MaskSpec,
+    compile_mask,
+)
+from repro.kernels.blocksparse_attn.ops import (  # noqa: F401
+    MaskForceError,
+    bs_attention,
+    bs_attention_decode,
+    explain_dispatch_attention,
+)

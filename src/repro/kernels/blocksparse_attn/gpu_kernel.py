@@ -1,0 +1,115 @@
+"""Platform-neutral Pallas lowering of block-sparse prefill attention.
+
+Mirrors the ``indexmac_gpu`` family's shape: no TPU memory spaces, no
+scalar prefetch — the grid covers only the *output* tiles
+(``(B*Hq, nqb)``), and each program walks its query row's live k-blocks
+with an in-kernel loop over the plan's padded ``row_idx`` gather list
+(dynamic ``pl.ds`` slices into the full-row k/v operands). Streaming
+softmax state lives in registers across the static loop. Runs under
+``interpret=True`` on any host — the CI ``gpu-interpret`` lane — and
+lowers via Pallas-on-Triton on a real GPU.
+
+Padded gather slots carry an all-False mask tile (``gather_masks``
+folds ``row_valid`` in), so their scores are NEG_INF and contribute
+exp(NEG_INF - m) == 0 to the running sums — duplicate index 0 reads are
+harmless.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.blocksparse_attn.mask import MaskPlan, gather_masks
+
+NEG_INF = -1e30
+
+
+def _bs_attn_gpu_kernel(q_ref, k_ref, v_ref, idx_ref, mask_ref, o_ref, *,
+                        width, bk, scale, out_dtype):
+    q = q_ref[0].astype(jnp.float32) * scale             # (bq, dk)
+    bq = q.shape[0]
+    dv = v_ref.shape[-1]
+    m = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq, 1), jnp.float32)
+    acc = jnp.zeros((bq, dv), jnp.float32)
+    for w in range(width):
+        kb_i = idx_ref[0, w]
+        k_blk = k_ref[0, pl.ds(kb_i * bk, bk), :].astype(jnp.float32)
+        v_blk = v_ref[0, pl.ds(kb_i * bk, bk), :].astype(jnp.float32)
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32)
+        s = jnp.where(mask_ref[0, w], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.dot(p, v_blk,
+                                   preferred_element_type=jnp.float32)
+        m = m_new
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "plan", "scale", "interpret"),
+)
+def _bs_attn_gpu_call(q, k, v, row_idx, masks, *, spec, plan, scale,
+                      interpret):
+    bhq, sqp, dk = q.shape
+    bhkv = k.shape[0]
+    dv = v.shape[-1]
+    bq, bk = plan.bq, plan.bk
+    nqb, width = plan.nqb, plan.gather_width
+    g = bhq // bhkv  # == Hq // Hkv: flattening is batch-major on both
+    kernel = functools.partial(
+        _bs_attn_gpu_kernel, width=width, bk=bk, scale=scale,
+        out_dtype=q.dtype)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((bhq, nqb * bq, dv), q.dtype),
+        grid=(bhq, nqb),
+        in_specs=[
+            pl.BlockSpec((1, bq, dk), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, plan.nkb * bk, dk),
+                         lambda bh, qi, g=g: (bh // g, 0, 0)),
+            pl.BlockSpec((1, plan.nkb * bk, dv),
+                         lambda bh, qi, g=g: (bh // g, 0, 0)),
+            pl.BlockSpec((1, width), lambda bh, qi: (qi, 0)),
+            pl.BlockSpec((1, width, bq, bk), lambda bh, qi: (qi, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda bh, qi: (bh, qi, 0)),
+        interpret=interpret,
+    )(q, k, v, row_idx, masks)
+
+
+def run_bs_attention_gpu(q, k, v, *, spec, plan: MaskPlan, scale=None,
+                         interpret: bool = False):
+    """Flatten (batch, head), pad to the plan's tiles, run, slice back.
+
+    Layout contract matches the reference: q (B, Sq, Hq, Dk), k/v
+    (B, Skv, Hkv, D*). GQA head mapping is (b, h) -> (b, h // g) on the
+    flattened axis — the flattening keeps batch-major order so the
+    integer division in the index map is exact.
+    """
+    b, sq, hq, dk = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    if scale is None:
+        scale = dk ** -0.5
+    sqp = plan.nqb * plan.bq
+    skvp = plan.nkb * plan.bk
+    qt = jnp.transpose(q, (0, 2, 1, 3)).reshape(b * hq, sq, dk)
+    kt = jnp.transpose(k, (0, 2, 1, 3)).reshape(b * hkv, skv, dk)
+    vt = jnp.transpose(v, (0, 2, 1, 3)).reshape(b * hkv, skv, dv)
+    qt = jnp.pad(qt, ((0, 0), (0, sqp - sq), (0, 0)))
+    kt = jnp.pad(kt, ((0, 0), (0, skvp - skv), (0, 0)))
+    vt = jnp.pad(vt, ((0, 0), (0, skvp - skv), (0, 0)))
+    out = _bs_attn_gpu_call(
+        qt, kt, vt,
+        jnp.asarray(plan.row_idx), jnp.asarray(gather_masks(plan)),
+        spec=spec, plan=plan, scale=float(scale), interpret=interpret)
+    out = out.reshape(b, hq, sqp, dv)[:, :, :sq]
+    return jnp.transpose(out, (0, 2, 1, 3))

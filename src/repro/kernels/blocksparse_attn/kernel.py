@@ -1,0 +1,159 @@
+"""Pallas TPU kernel for block-sparse prefill attention.
+
+The grid iterates only the *live* (q-block, k-block) pairs of the
+compiled :class:`~repro.kernels.blocksparse_attn.mask.MaskPlan` — the
+attention analogue of the weight kernels' compressed-index walk. The
+pair lists ride in as scalar-prefetch operands
+(``pltpu.PrefetchScalarGridSpec``), so the BlockSpec index maps can
+pick each step's q/k/v tiles data-dependently before the body runs;
+dense (masked-off) blocks are never fetched, never multiplied.
+
+Grid: ``(B, Hq, n_live)`` with the pair dimension innermost and
+``"arbitrary"`` semantics — the streaming-softmax scratch (m, l, acc)
+carries across consecutive pairs of one query row. The pair lists are
+sorted row-major by construction (``compile_mask``), so
+
+* a pair whose q-block differs from its predecessor's is the row's
+  first live block: re-init the scratch (``pl.when``);
+* a pair whose successor starts a new row is the row's last: normalize
+  and flush the output tile (Pallas revisits the same output block for
+  every pair of the row — the write lands once, on the final revision).
+
+Each pair also carries its static token-level mask tile (live blocks on
+the causal diagonal are half masked; sequence-tail tiles mask padding),
+applied to the f32 scores before the online-softmax update. Every
+query row of a compiled plan has >= 1 live block, so the normalizer is
+never zero on logical rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+from repro.kernels.blocksparse_attn.mask import MaskPlan, pair_masks
+
+NEG_INF = -1e30
+
+
+def _bs_attn_kernel(pq_ref, pk_ref, q_ref, k_ref, v_ref, mask_ref, o_ref,
+                    acc_ref, m_ref, l_ref, *, scale, out_dtype):
+    p = pl.program_id(2)
+    n_live = pl.num_programs(2)
+    prev = jnp.maximum(p - 1, 0)
+    nxt = jnp.minimum(p + 1, n_live - 1)
+    first = jnp.logical_or(p == 0, pq_ref[p] != pq_ref[prev])
+    last = jnp.logical_or(p == n_live - 1, pq_ref[nxt] != pq_ref[p])
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, dk)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, dk)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (bq, bk)
+    s = jnp.where(mask_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[:, :1]                                # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    pmat = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_ref[:, :1] * corr + jnp.sum(pmat, axis=-1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, dv)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        pmat, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(last)
+    def _flush():
+        norm = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / norm).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "plan", "scale", "interpret"),
+)
+def _bs_attn_call(q, k, v, pair_q, pair_k, masks, *, spec, plan, scale,
+                  interpret):
+    b, hq, sqp, dk = q.shape
+    hkv = k.shape[1]
+    dv = v.shape[-1]
+    g = hq // hkv
+    bq, bk = plan.bq, plan.bk
+    n_live = plan.n_live
+    grid = (b, hq, n_live)
+    kernel = functools.partial(
+        _bs_attn_kernel, scale=scale, out_dtype=q.dtype)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, hq, sqp, dv), q.dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, 1, bq, dk),
+                    lambda bi, hi, p, pq, pk: (bi, hi, pq[p], 0)),
+                pl.BlockSpec(
+                    (1, 1, bk, dk),
+                    lambda bi, hi, p, pq, pk: (bi, hi // g, pk[p], 0)),
+                pl.BlockSpec(
+                    (1, 1, bk, dv),
+                    lambda bi, hi, p, pq, pk: (bi, hi // g, pk[p], 0)),
+                pl.BlockSpec(
+                    (1, bq, bk),
+                    lambda bi, hi, p, pq, pk: (p, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, bq, dv),
+                lambda bi, hi, p, pq, pk: (bi, hi, pq[p], 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq, dv), jnp.float32),
+                pltpu.VMEM((bq, 128), jnp.float32),
+                pltpu.VMEM((bq, 128), jnp.float32),
+            ],
+        ),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(pair_q, pair_k, q, k, v, masks)
+
+
+def run_bs_attention_tpu(q, k, v, *, spec, plan: MaskPlan, scale=None,
+                         interpret: bool = False):
+    """Pad to the plan's tiles, run the pair-list kernel, slice back.
+
+    q: (B, Sq, Hq, Dk); k/v: (B, Skv, Hkv, D*) — same layout as the
+    reference. Head-minor layouts are transposed to (B, H, S, D) so the
+    tile walk is over the trailing (seq, depth) pair.
+    """
+    b, sq, hq, dk = q.shape
+    skv = k.shape[1]
+    if scale is None:
+        scale = dk ** -0.5
+    sqp = plan.nqb * plan.bq
+    skvp = plan.nkb * plan.bk
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    qt = jnp.pad(qt, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    kt = jnp.pad(kt, ((0, 0), (0, 0), (0, skvp - skv), (0, 0)))
+    vt = jnp.pad(vt, ((0, 0), (0, 0), (0, skvp - skv), (0, 0)))
+    out = _bs_attn_call(
+        qt, kt, vt,
+        jnp.asarray(plan.pair_q), jnp.asarray(plan.pair_k),
+        jnp.asarray(pair_masks(plan)),
+        spec=spec, plan=plan, scale=float(scale), interpret=interpret)
+    return jnp.transpose(out, (0, 2, 1, 3))[:, :sq]

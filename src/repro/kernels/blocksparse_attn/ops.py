@@ -1,0 +1,269 @@
+"""The block-sparse attention op layer: two dispatch families behind
+one shared route.
+
+``bs_attention`` (prefill/train shapes — q and k/v cover the same
+absolute positions from 0):
+
+  pallas_bs_attention   backend "tpu", priority 100 — the pair-list
+                        scalar-prefetch kernel (:mod:`.kernel`).
+                        Declines off-TPU (it would interpret) unless
+                        forced.
+  gpu_bs_attention      backend "gpu", priority 100 — the output-tile
+                        gather kernel (:mod:`.gpu_kernel`); the gpu
+                        backend is explicit opt-in, so interpreting is
+                        part of the contract (CI parity lane).
+  xla_bs_attention      backend "any", priority 50 — the pure-XLA
+                        block-gather lowering; the one that wins real
+                        wall-clock on CPU hosts.
+  masked_reference      backend "any", priority 0 — dense jnp.where
+                        fallback (also the parity oracle).
+
+``bs_attention_decode`` (cache-view shapes — queries at absolute
+positions against a fixed-size cache):
+
+  masked_decode         backend "any", priority 0 — the spec predicate
+                        applied inside the decode softmax; block
+                        skipping buys nothing at Sq ∈ {1, chunk} with a
+                        traced cache length, so the mask-aware dense
+                        path IS the decode lowering (not a fallback).
+
+Budgets (auto mode; ``force`` ignores both, and raises the typed
+:class:`MaskForceError` when the mask does not tile at all):
+
+  REPRO_BS_DENSITY_LIMIT   live blocks / total blocks (default 0.9)
+  REPRO_BS_WASTE_LIMIT     live block area / live tokens (default 4.0)
+
+``explain_dispatch_attention`` shares :func:`_route` with the executing
+entries — the explanation cannot drift from the real routing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import autotune, registry
+from repro.kernels.backend import interpret_for, resolve_backend
+from repro.kernels.blocksparse_attn.kernel import run_bs_attention_tpu
+from repro.kernels.blocksparse_attn.gpu_kernel import run_bs_attention_gpu
+from repro.kernels.blocksparse_attn.mask import (
+    MaskSpec,
+    compile_mask,
+    density_limit,
+    waste_limit,
+)
+from repro.kernels.blocksparse_attn.ref import (
+    blocksparse_xla,
+    masked_decode,
+    masked_reference,
+)
+
+
+class MaskForceError(registry.KernelForceError):
+    """KernelPolicy("force") demanded the block-sparse kernel but the
+    MaskSpec does not compile to a tileable block plan for this shape
+    (empty problem, misaligned tile, or a query row with zero visible
+    tokens). Raised instead of silently serving the dense path."""
+
+
+# ---------------------------------------------------------------------------
+# supports predicates
+# ---------------------------------------------------------------------------
+
+
+def _sparse_supports(ctx: dict) -> Optional[str]:
+    """Shared gate for every block-sparse lowering (plan + budgets)."""
+    if not ctx["use_kernel"]:
+        return "use_kernel=False"
+    plan = ctx["plan"]
+    if plan is None:
+        return "mask does not tile"
+    if ctx.get("force"):
+        return None
+    limit = density_limit()
+    if plan.density > limit:
+        return (f"block density {plan.density:.2f} > limit {limit:.2f} "
+                f"(near-dense mask)")
+    wlimit = waste_limit()
+    if plan.waste > wlimit:
+        return f"block waste {plan.waste:.2f}x > limit {wlimit:.2f}x"
+    return None
+
+
+def _tpu_supports(ctx: dict) -> Optional[str]:
+    why = _sparse_supports(ctx)
+    if why is not None:
+        return why
+    if interpret_for("tpu") and not ctx.get("force"):
+        return "tpu kernel would interpret on this host"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# registered implementations
+# ---------------------------------------------------------------------------
+
+
+@registry.register("bs_attention", "pallas_bs_attention", priority=100,
+                   supports=_tpu_supports, uses_plan=True, backend="tpu")
+def _run_tpu_impl(q, k, v, *, spec, plan, scale, interpret):
+    return run_bs_attention_tpu(
+        q, k, v, spec=spec, plan=plan, scale=scale, interpret=interpret)
+
+
+@registry.register("bs_attention", "gpu_bs_attention", priority=100,
+                   supports=_sparse_supports, uses_plan=True, backend="gpu")
+def _run_gpu_impl(q, k, v, *, spec, plan, scale, interpret):
+    return run_bs_attention_gpu(
+        q, k, v, spec=spec, plan=plan, scale=scale, interpret=interpret)
+
+
+@registry.register("bs_attention", "xla_bs_attention", priority=50,
+                   supports=_sparse_supports, uses_plan=True, backend="any")
+def _run_xla_impl(q, k, v, *, spec, plan, scale, interpret):
+    return blocksparse_xla(q, k, v, spec=spec, plan=plan, scale=scale)
+
+
+@registry.register("bs_attention", "masked_reference", priority=0,
+                   backend="any")
+def _run_ref_impl(q, k, v, *, spec, plan, scale, interpret):
+    return masked_reference(q, k, v, spec=spec, scale=scale)
+
+
+@registry.register("bs_attention_decode", "masked_decode", priority=0,
+                   backend="any")
+def _run_decode_impl(q, k, v, *, spec, length, q_positions, scale):
+    return masked_decode(q, k, v, spec=spec, length=length,
+                         q_positions=q_positions, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# routing: shape + spec + policy -> family, plan, ctx
+# ---------------------------------------------------------------------------
+
+
+def _route(sq, skv, dk, spec, *, decode, dtype, use_kernel, force, tile,
+           backend):
+    """Resolve family, tile, mask plan and dispatch ctx for one call —
+    shared by the executing entries and
+    :func:`explain_dispatch_attention` so they can never drift.
+    ``backend`` is the resolved kernel backend (never "auto")."""
+    if not isinstance(spec, MaskSpec):
+        raise TypeError(
+            f"mask must be a MaskSpec, got {type(spec).__name__}")
+    op = "bs_attention_decode" if decode else "bs_attention"
+    plan = None
+    if not decode and use_kernel:
+        blk = tile
+        if blk is None:
+            blk = autotune.best_attn_tile(sq, skv, dk, spec, dtype,
+                                          backend=backend)
+        plan = compile_mask(spec, sq, skv, tuple(blk))
+        if plan is None and force:
+            raise MaskForceError(
+                f"KernelPolicy('force') on mask {spec.tag}: shape "
+                f"Sq={sq} Skv={skv} does not compile to a tileable "
+                f"block plan (empty problem, misaligned tile, or a "
+                f"query row with zero visible tokens), and force "
+                f"forbids the dense fallback")
+    ctx = registry.make_ctx(
+        (sq, skv, dk), nm=spec, use_kernel=use_kernel, plan=plan,
+        dtype=dtype, force=force, backend=backend)
+    return op, plan, ctx
+
+
+def _resolve(policy, backend):
+    """(use_kernel, force, tile, resolved backend) from a policy-ish."""
+    mode, tile, pol_backend = "auto", None, "auto"
+    if policy is not None:
+        if isinstance(policy, str):
+            mode = policy
+        else:  # KernelPolicy duck-type
+            mode = policy.mode
+            tile = getattr(policy, "block", None)
+            pol_backend = getattr(policy, "backend", "auto")
+    if mode not in ("off", "auto", "force"):
+        raise ValueError(
+            f"policy mode must be 'off' | 'auto' | 'force', got {mode!r}")
+    be = resolve_backend(backend if backend is not None else pol_backend)
+    if tile is not None:
+        tile = tuple(tile)[:2]
+    return mode != "off", mode == "force", tile, be
+
+
+# ---------------------------------------------------------------------------
+# typed entry points
+# ---------------------------------------------------------------------------
+
+
+def bs_attention(q, k, v, *, spec: MaskSpec, scale=None, policy="auto",
+                 backend=None, tile=None):
+    """Block-sparse prefill attention: q (B, Sq, Hq, Dk) and k/v
+    (B, Skv, Hkv, D*) share absolute positions from 0."""
+    _check_shapes(q, k, v)
+    use_kernel, force, pol_tile, be = _resolve(policy, backend)
+    op, plan, ctx = _route(
+        q.shape[1], k.shape[1], q.shape[-1], spec, decode=False,
+        dtype=q.dtype, use_kernel=use_kernel, force=force,
+        tile=tile or pol_tile, backend=be)
+    return registry.dispatch(
+        op, ctx, q, k, v, spec=spec, plan=plan, scale=scale,
+        interpret=interpret_for(be))
+
+
+def bs_attention_decode(q, k, v, *, spec: MaskSpec, length,
+                        q_positions=None, scale=None, policy="auto",
+                        backend=None):
+    """Mask-aware decode/chunk attention against a fixed-size cache
+    view; ``length`` is the valid cache extent (traced ok),
+    ``q_positions`` the queries' absolute positions (chunk mode)."""
+    _check_shapes(q, k, v)
+    use_kernel, force, _, be = _resolve(policy, backend)
+    op, plan, ctx = _route(
+        q.shape[1], k.shape[1], q.shape[-1], spec, decode=True,
+        dtype=q.dtype, use_kernel=use_kernel, force=force, tile=None,
+        backend=be)
+    return registry.dispatch(
+        op, ctx, q, k, v, spec=spec, length=length,
+        q_positions=q_positions, scale=scale)
+
+
+def _check_shapes(q, k, v):
+    if q.ndim != 4 or k.ndim != 4 or v.ndim != 4:
+        raise ValueError(
+            f"attention expects (B, S, H, D) operands, got q{q.shape} "
+            f"k{k.shape} v{v.shape}")
+    if q.shape[2] % k.shape[2]:
+        raise ValueError(
+            f"Hq={q.shape[2]} must be a multiple of Hkv={k.shape[2]}")
+    if k.shape[1] != v.shape[1] or k.shape[2] != v.shape[2]:
+        raise ValueError(
+            f"k/v sequence+head mismatch: k{k.shape} v{v.shape}")
+
+
+def explain_dispatch_attention(q_shape, kv_shape, *, mask: MaskSpec,
+                               decode: bool = False, dtype=jnp.float32,
+                               policy="auto", backend=None, tile=None):
+    """The :class:`repro.kernels.registry.DispatchRecord` that
+    ``bs_attention`` (or the decode family, with ``decode=True``)
+    *would* write for operands of these shapes — family, lowering,
+    backend, tile and padded block geometry — without executing
+    anything. Raises the same typed errors as the real call, including
+    :class:`MaskForceError` for a forced untileable mask."""
+    sq = q_shape[1] if len(q_shape) == 4 else q_shape[0]
+    skv = kv_shape[1] if len(kv_shape) == 4 else kv_shape[0]
+    dk = q_shape[-1]
+    use_kernel, force, pol_tile, be = _resolve(policy, backend)
+    op, _, ctx = _route(
+        sq, skv, dk, mask, decode=decode, dtype=jnp.dtype(dtype),
+        use_kernel=use_kernel, force=force, tile=tile or pol_tile,
+        backend=be)
+    return registry.explain(op, ctx)
+
+
+def tune_for_serving(sq, skv, dk, spec: MaskSpec, dtype=jnp.float32,
+                     backend: str = "tpu"):
+    """Pre-pay the attention tile sweep for a serving shape (engine
+    warmup) — the ``ensure_tuned`` of the bs_attn family."""
+    return autotune.ensure_tuned_attn(sq, skv, dk, spec, dtype,
+                                      backend=backend)

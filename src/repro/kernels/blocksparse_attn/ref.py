@@ -1,0 +1,164 @@
+"""Backend-neutral lowerings of the block-sparse attention families.
+
+Two XLA implementations registered for backend "any":
+
+* :func:`masked_reference` — dense attention with the spec's token
+  predicate applied through ``jnp.where``: the parity oracle every
+  sparse path is compared against, and the priority-0 fallback.
+* :func:`blocksparse_xla` — the block-gather lowering: pad both
+  sequence axes to the plan's tile, gather each query row's live
+  k-blocks through the plan's compressed ``row_idx`` lists, and run a
+  masked softmax over the gathered lane only. Pure XLA (no Pallas), so
+  it is the lowering that actually wins on CPU hosts — compute drops
+  with the gather width instead of the full k length.
+
+Also home of :func:`jnp_token_mask` (the traced-side wrapper of the
+numpy predicate) and :func:`masked_decode` — the mask-aware decode /
+chunk path shared by ``bs_attention_decode``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dots import acc_einsum
+from repro.kernels.blocksparse_attn.mask import (
+    MaskPlan,
+    MaskSpec,
+    block_bitmap,
+    gather_masks,
+    token_mask,
+)
+
+NEG_INF = -1e30
+
+
+def jnp_token_mask(spec: MaskSpec, q_pos, k_pos, *, max_q: int, max_k: int):
+    """The token predicate over (possibly traced) jnp positions.
+
+    ``max_q``/``max_k`` are static position bounds — blockwise specs
+    need them to size the bitmap the traced lookup gathers from.
+    """
+    bm = None
+    if spec.kind == "blockwise":
+        bm = jnp.asarray(block_bitmap(
+            spec, -(-max_q // spec.block), -(-max_k // spec.block)))
+    return token_mask(spec, q_pos, k_pos, bitmap=bm)
+
+
+def _split_heads(q, k, v, scale):
+    b, sq, hq, dk = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = dk ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, g, dk)
+    return qf, g
+
+
+def masked_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     spec: MaskSpec, scale: Optional[float] = None
+                     ) -> jax.Array:
+    """Dense jnp.where-masked attention — the parity oracle.
+
+    q: (B, Sq, Hq, Dk); k/v: (B, Skv, Hkv, D*) with Hq % Hkv == 0 (GQA
+    grouping). Positions are absolute from 0 (prefill semantics).
+    """
+    b, sq, hq, dk = q.shape
+    skv = k.shape[1]
+    qf, g = _split_heads(q, k, v, scale)
+    logits = acc_einsum("bqhgd,bshd->bqhgs", qf, k)
+    mask = jnp_token_mask(
+        spec, jnp.arange(sq)[:, None], jnp.arange(skv)[None, :],
+        max_q=sq, max_k=skv)
+    logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = acc_einsum("bqhgs,bshd->bqhgd", p, v)
+    return out.reshape(b, sq, hq, -1).astype(q.dtype)
+
+
+def blocksparse_xla(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    spec: MaskSpec, plan: MaskPlan,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Block-gather lowering: attention cost scales with the plan's
+    gather width (live k-blocks per query row), not the full k length.
+    """
+    b, sq, hq, dk = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    bq, bk = plan.bq, plan.bk
+    nqb, nkb, width = plan.nqb, plan.nkb, plan.gather_width
+    if scale is None:
+        scale = dk ** -0.5
+
+    qp = jnp.pad(q, ((0, 0), (0, nqb * bq - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nkb * bk - skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nkb * bk - skv), (0, 0), (0, 0)))
+    qb = (qp.astype(jnp.float32) * scale).reshape(b, nqb, bq, hkv, g, dk)
+    kb = kp.reshape(b, nkb, bk, hkv, dk)
+    vb = vp.reshape(b, nkb, bk, hkv, dv)
+
+    idx = jnp.asarray(plan.row_idx.reshape(-1))  # (nqb*width,)
+    kg = jnp.take(kb, idx, axis=1).reshape(b, nqb, width, bk, hkv, dk)
+    vg = jnp.take(vb, idx, axis=1).reshape(b, nqb, width, bk, hkv, dv)
+
+    logits = acc_einsum("bnqhgd,bnwkhd->bnqhgwk", qb, kg)
+    # static numpy mask aligned with the gather: (nqb, width, bq, bk)
+    gmask = jnp.asarray(gather_masks(plan))
+    logits = jnp.where(
+        gmask.transpose(0, 2, 1, 3)[None, :, :, None, None, :, :],
+        logits, NEG_INF)
+    flat = logits.reshape(b, nqb, bq, hkv, g, width * bk)
+    m = jnp.max(flat, axis=-1, keepdims=True)
+    p = jnp.exp(flat - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    p = p.reshape(b, nqb, bq, hkv, g, width, bk)
+    out = acc_einsum("bnqhgwk,bnwkhd->bnqhgd", p, vg)
+    out = out.reshape(b, nqb * bq, hq, dv)[:, :sq]
+    return out.astype(q.dtype)
+
+
+def masked_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  spec: MaskSpec, length, q_positions=None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Mask-aware decode/chunk attention over a (possibly overlong)
+    cache view: q (B, Sq, Hq, Dk) against k/v (B, S, Hkv, D*).
+
+    ``length`` is the number of valid cache positions (traced scalar or
+    (B,) vector); ``q_positions`` gives each query's absolute position
+    (chunk mode) — defaults to ``length - 1`` (single-step decode).
+    Cache validity (``pos <= q_position``) is enforced on top of the
+    spec predicate, so non-causal specs still never read unwritten
+    slots.
+    """
+    b, sq, hq, dk = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = dk ** -0.5
+    length = jnp.asarray(length, jnp.int32)
+    if q_positions is None:
+        qp = jnp.reshape(length - 1, (-1, 1))          # (B|1, 1)
+        qp = jnp.broadcast_to(qp, (qp.shape[0], sq))
+    else:
+        qp = jnp.asarray(q_positions, jnp.int32)
+        if qp.ndim == 1:
+            qp = qp[None, :]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    valid = jnp_token_mask(
+        spec, qp[:, :, None], pos[None, None, :], max_q=s, max_k=s)
+    valid = valid & (pos[None, None, :] <= qp[:, :, None])
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, g, dk)
+    logits = acc_einsum("bqhgd,bshd->bqhgs", qf, k)
+    logits = jnp.where(valid[:, :, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = acc_einsum("bqhgs,bshd->bqhgd", p, v)
+    return out.reshape(b, sq, hq, -1).astype(q.dtype)

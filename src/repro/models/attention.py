@@ -25,6 +25,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import AttnConfig, SparsityConfig
+from repro.kernels.blocksparse_attn import ops as bs_ops
+from repro.kernels.blocksparse_attn.ref import jnp_token_mask
+from repro.models.cache import (
+    AttnKwargError,
+    CacheView,
+    view_from_legacy_kwargs,
+)
 from repro.models.common import (
     DEFAULT_COMPUTE_DTYPE,
     apply_rope,
@@ -308,23 +315,40 @@ def gqa_apply(
     x: jax.Array,  # (B, S, D)
     cfg: AttnConfig,
     *,
-    mode: str,  # train | prefill | decode
-    positions: jax.Array,  # (S,) global positions of x's tokens
+    view: Optional[CacheView] = None,
     cache: Optional[dict] = None,
-    cache_len: Optional[jax.Array] = None,
     rope_theta: float = 10_000.0,
     chunk: int = 512,
     cross_kv: Optional[tuple[jax.Array, jax.Array]] = None,
-    block_table: Optional[jax.Array] = None,
-    write_mask: Optional[jax.Array] = None,
+    **kw,
 ):
-    """Returns (y, new_cache). cross_kv supplies precomputed encoder K/V
-    for cross-attention (whisper); cache is then unused. block_table
-    switches decode/chunk to the paged cache: ``cache`` leaves are page
-    pools (rows, page_size, ...), writes scatter through the table
-    (masked slots into the null page) and reads gather each slot's
-    logical view — per-slot ``cache_len`` semantics are unchanged."""
+    """Returns (y, new_cache). ``view`` is the typed cache-addressing
+    struct (:class:`repro.models.cache.CacheView`) — mode, positions,
+    cache_len and paged addressing in one pytree; None means train.
+    cross_kv supplies precomputed encoder K/V for cross-attention
+    (whisper); cache is then unused. ``view.block_table`` switches
+    decode/chunk to the paged cache: ``cache`` leaves are page pools
+    (rows, page_size, ...), writes scatter through the table (masked
+    slots into the null page) and reads gather each slot's logical view
+    — per-slot ``cache_len`` semantics are unchanged. With ``cfg.mask``
+    set, self-attention routes through the block-sparse families.
+
+    The old loose keywords (mode/positions/cache_len/block_table/
+    write_mask) still work for one release via the deprecation shim."""
+    view = view_from_legacy_kwargs(view, kw, caller="gqa_apply")
+    if kw:
+        raise AttnKwargError(
+            f"gqa_apply got unknown keyword(s) {sorted(kw)}")
+    if view is None:
+        view = CacheView.train()
+    mode = view.mode
+    cache_len = view.cache_len
+    block_table = view.block_table
+    write_mask = view.write_mask
     b, s, _ = x.shape
+    positions = view.positions
+    if positions is None:
+        positions = jnp.arange(s)
     q = linear_apply(params["wq"], x).reshape(b, s, cfg.q_heads, cfg.head_dim)
     if cross_kv is None:
         k = linear_apply(params["wk"], x).reshape(b, s, cfg.kv_heads, cfg.head_dim)
@@ -356,29 +380,41 @@ def gqa_apply(
             v_view = v_cache = _write_cache(cache["v"], v, cache_len)
             new_cache = {"k": k_cache, "v": v_cache}
         # chunk (multi-token prefill piece): causal masking via absolute
-        # query positions; decode (s=1) keeps the plain length mask
-        out = decode_attention(
-            q, k_view, v_view, length=cache_len + s, window=cfg.window,
-            q_positions=positions if mode == "chunk" else None,
-        )
+        # query positions; decode (s=1) keeps the plain length mask.
+        # cfg.mask swaps in the mask-aware decode family (the spec's own
+        # causal/window semantics replace cfg.window).
+        if cfg.mask is not None:
+            out = bs_ops.bs_attention_decode(
+                q, k_view, v_view, spec=cfg.mask, length=cache_len + s,
+                q_positions=positions if mode == "chunk" else None,
+            )
+        else:
+            out = decode_attention(
+                q, k_view, v_view, length=cache_len + s, window=cfg.window,
+                q_positions=positions if mode == "chunk" else None,
+            )
     elif mode == "decode":  # cross-attention decode: static KV, full attend
         out = decode_attention(
             q, k, v, length=jnp.int32(k.shape[1]), window=None
         )
+    elif cfg.mask is not None and cross_kv is None:
+        # block-sparse prefill/train: dispatch the bs_attention family
+        # (pair-list kernel / block gather; dense fallback under budgets)
+        out = bs_ops.bs_attention(q, k, v, spec=cfg.mask)
     else:
         out = chunked_attention(
             q, k, v, causal=cfg.causal and cross_kv is None,
             window=cfg.window, chunk=chunk,
         )
-        if mode == "prefill" and cross_kv is None:
-            assert cache is not None
-            k_cache = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)
-            )
-            v_cache = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
-            )
-            new_cache = {"k": k_cache, "v": v_cache}
+    if mode == "prefill" and cross_kv is None:
+        assert cache is not None
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)
+        )
+        new_cache = {"k": k_cache, "v": v_cache}
     # wo is row-parallel under TP serving (local heads in, full d_model
     # out): per-shard output is a partial sum — reduced here only when the
     # serving engine declared the in-axis sharded, identity elsewhere
@@ -461,17 +497,33 @@ def mla_apply(
     x: jax.Array,
     cfg: AttnConfig,
     *,
-    mode: str,
-    positions: jax.Array,
+    view: Optional[CacheView] = None,
     cache: Optional[dict] = None,
-    cache_len: Optional[jax.Array] = None,
     rope_theta: float = 10_000.0,
     chunk: int = 512,
-    cross_kv=None,  # unused (MLA is self-attention only here)
-    block_table: Optional[jax.Array] = None,
-    write_mask: Optional[jax.Array] = None,
+    **kw,
 ):
+    """MLA self-attention over a :class:`~repro.models.cache.CacheView`
+    (same contract as :func:`gqa_apply`; legacy keywords shimmed for one
+    release). With ``cfg.mask`` set, train/prefill routes the
+    ``bs_attention`` family over the materialized per-head K/V; the
+    absorbed decode/chunk path — whose two-term latent logits never form
+    (B, S, H, D) K/V operands — applies the spec's token predicate
+    inline on the logits instead (no dispatch-family record)."""
+    view = view_from_legacy_kwargs(view, kw, caller="mla_apply")
+    if kw:
+        raise AttnKwargError(
+            f"mla_apply got unknown keyword(s) {sorted(kw)}")
+    if view is None:
+        view = CacheView.train()
+    mode = view.mode
+    cache_len = view.cache_len
+    block_table = view.block_table
+    write_mask = view.write_mask
     b, s, _ = x.shape
+    positions = view.positions
+    if positions is None:
+        positions = jnp.arange(s)
     h = cfg.q_heads
     q_nope, q_rope = _mla_q(params, x, cfg, positions, rope_theta)
     ckv = rmsnorm_apply(params["kv_a_norm"], linear_apply(params["wkv_a"], x))
@@ -508,7 +560,21 @@ def mla_apply(
         logits = acc_einsum("bqhc,bsc->bqhs", q_abs, ckv_v.astype(dt))
         logits += acc_einsum("bqhr,bsr->bqhs", q_rope, kr_v.astype(dt))
         logits *= scale
-        if mode == "chunk":
+        if cfg.mask is not None:
+            # absorbed path: the spec's token predicate applied inline —
+            # positions are the queries' absolute positions in both
+            # decode and chunk modes, so one expression covers both.
+            # Cache-validity (slot j written iff j <= q position) rides
+            # along as the causal term of the predicate intersection.
+            S = ckv_v.shape[1]
+            qp = positions if positions.ndim == 2 else positions[None, :]
+            kp = jnp.arange(S)
+            cvalid = jnp_token_mask(
+                cfg.mask, qp[..., None], kp[None, None, :],
+                max_q=S, max_k=S)
+            cvalid &= kp[None, None, :] <= qp[..., None]  # (B|1, sq, S)
+            logits = jnp.where(cvalid[:, :, None, :], logits, NEG_INF)
+        elif mode == "chunk":
             # multi-token prefill piece: cache slot j visible to query
             # token i iff j <= position(i) — logits are (b, sq, h, S)
             qp = positions if positions.ndim == 2 else positions[None, :]
@@ -533,9 +599,14 @@ def mla_apply(
         kr_b = jnp.broadcast_to(kr[:, :, None, :], (b, s, h, cfg.rope_head_dim))
         k = jnp.concatenate([k_nope, kr_b], axis=-1)
         q = jnp.concatenate([q_nope, q_rope], axis=-1)
-        out = chunked_attention(
-            q, k, vfull, causal=True, window=cfg.window, chunk=chunk, scale=scale
-        )
+        if cfg.mask is not None:
+            out = bs_ops.bs_attention(q, k, vfull, spec=cfg.mask,
+                                      scale=scale)
+        else:
+            out = chunked_attention(
+                q, k, vfull, causal=True, window=cfg.window, chunk=chunk,
+                scale=scale
+            )
         if mode == "prefill":
             assert cache is not None
             ckv_c = jax.lax.dynamic_update_slice(
@@ -564,10 +635,31 @@ def attn_init(key, d_model, cfg: AttnConfig, *, sp=None, param_dtype=jnp.float32
                     qk_norm=qk_norm)
 
 
-def attn_apply(params, x, cfg: AttnConfig, **kw):
+def attn_apply(params, x, cfg: AttnConfig, *, view: Optional[CacheView] = None,
+               cache: Optional[dict] = None, rope_theta: float = 10_000.0,
+               chunk: int = 512, cross_kv=None, **kw):
+    """Kind dispatch with a *typed* keyword surface: every keyword is
+    validated against the resolved cache kind before the apply runs —
+    unknown keys raise :class:`~repro.models.cache.AttnKwargError`
+    instead of the old silent ``**kw`` passthrough (where a typo like
+    ``cache_length=`` was dropped on the floor). Legacy addressing
+    keywords route through the one-release shim first."""
+    view = view_from_legacy_kwargs(view, kw, caller="attn_apply")
+    if kw:
+        valid = "view, cache, rope_theta, chunk" + (
+            ", cross_kv" if cfg.kind == "gqa" else "")
+        raise AttnKwargError(
+            f"attn_apply got unknown keyword(s) {sorted(kw)} for cache "
+            f"kind {cfg.kind!r}; valid keywords: {valid}")
     if cfg.kind == "mla":
-        return mla_apply(params, x, cfg, **kw)
-    return gqa_apply(params, x, cfg, **kw)
+        if cross_kv is not None:
+            raise AttnKwargError(
+                "cross_kv is only valid for the 'gqa' cache kind; 'mla' "
+                "is self-attention only")
+        return mla_apply(params, x, cfg, view=view, cache=cache,
+                         rope_theta=rope_theta, chunk=chunk)
+    return gqa_apply(params, x, cfg, view=view, cache=cache,
+                     rope_theta=rope_theta, chunk=chunk, cross_kv=cross_kv)
 
 
 def attn_empty_cache(batch, max_seq, cfg: AttnConfig, dtype=DEFAULT_COMPUTE_DTYPE):

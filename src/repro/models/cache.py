@@ -1,0 +1,152 @@
+"""CacheView: the typed cache-addressing struct threaded through
+``LM.forward`` -> ``group_apply`` -> ``block_apply`` -> the attention
+mixers.
+
+One PR ago every apply surface took five loose keywords (``mode``,
+``positions``, ``cache_len``, ``block_table``, ``write_mask``) whose
+validity rules lived in asserts scattered across call sites. A
+:class:`CacheView` carries them as one registered pytree node: the
+execution ``mode`` is static treedef metadata (it selects traced
+branches), the addressing arrays are leaves (they jit/vmap/shard like
+any array).
+
+Modes:
+
+  train    no cache; positions default to arange(S).
+  prefill  positions from 0; the cache is overwritten from slot 0.
+  decode   one token per slot at offset ``cache_len``.
+  chunk    an s-token prompt piece at offset ``cache_len`` (continuous
+           batching); causal masking via absolute ``positions``.
+
+``block_table`` (+ ``write_mask``) switches decode/chunk addressing to
+the paged cache layout. ``positions`` is derived inside ``LM.forward``
+from ``cache_len`` — callers building views by hand normally leave it
+None.
+
+Migration: the old keywords still work for one release through
+:func:`view_from_legacy_kwargs` (every public apply surface routes its
+``**kw`` here); they emit a ``DeprecationWarning`` whose message starts
+with ``repro.models.cache`` — escalated to an error for first-party
+code via pytest filterwarnings — and are banned at internal call sites
+by the API-freeze test.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Optional
+
+from repro import compat
+
+_MODES = ("train", "prefill", "decode", "chunk")
+
+LEGACY_KEYS = ("mode", "positions", "cache_len", "block_table", "write_mask")
+
+
+class AttnKwargError(TypeError):
+    """An attention apply surface received a keyword it does not accept
+    (or one that is invalid for the resolved cache kind). Raised instead
+    of the old silent ``**kw`` drop."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheView:
+    """How this forward call addresses the KV cache (see module doc).
+
+    ``mode`` is static (branch selection); the rest are array leaves
+    (or None). Prefer the classmethods — they validate presence rules;
+    the raw constructor stays permissive for internal threading (e.g.
+    cross-attention re-views with a different mode).
+    """
+
+    mode: str = "train"
+    cache_len: Optional[Any] = None
+    block_table: Optional[Any] = None
+    write_mask: Optional[Any] = None
+    positions: Optional[Any] = None
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(
+                f"CacheView.mode must be one of {_MODES}, got {self.mode!r}")
+
+    # ---- constructors ----------------------------------------------------
+
+    @classmethod
+    def train(cls, positions=None) -> "CacheView":
+        return cls(mode="train", positions=positions)
+
+    @classmethod
+    def prefill(cls) -> "CacheView":
+        return cls(mode="prefill")
+
+    @classmethod
+    def decode(cls, cache_len, *, block_table=None,
+               write_mask=None) -> "CacheView":
+        return cls._offset("decode", cache_len, block_table, write_mask)
+
+    @classmethod
+    def chunk(cls, cache_len, *, block_table=None,
+              write_mask=None) -> "CacheView":
+        return cls._offset("chunk", cache_len, block_table, write_mask)
+
+    @classmethod
+    def _offset(cls, mode, cache_len, block_table, write_mask):
+        if cache_len is None:
+            raise AttnKwargError(
+                f"CacheView.{mode} needs cache_len (the per-slot write "
+                f"offset)")
+        if (block_table is None) != (write_mask is None):
+            raise AttnKwargError(
+                "paged addressing needs block_table AND write_mask "
+                "(masked slots must write the null page)")
+        return cls(mode=mode, cache_len=cache_len,
+                   block_table=block_table, write_mask=write_mask)
+
+    # ---- helpers ---------------------------------------------------------
+
+    @property
+    def offset_mode(self) -> bool:
+        return self.mode in ("decode", "chunk")
+
+    @property
+    def paged(self) -> bool:
+        return self.block_table is not None
+
+    def with_positions(self, positions) -> "CacheView":
+        return dataclasses.replace(self, positions=positions)
+
+
+compat.register_dataclass(
+    CacheView,
+    data_fields=("cache_len", "block_table", "write_mask", "positions"),
+    meta_fields=("mode",),
+)
+
+
+def view_from_legacy_kwargs(view: Optional[CacheView], kw: dict, *,
+                            caller: str) -> Optional[CacheView]:
+    """The one-release keyword shim. Pops the legacy addressing keywords
+    out of ``kw`` (whatever the caller leaves in ``kw`` afterwards is a
+    genuinely unknown keyword -> :class:`AttnKwargError` at the call
+    surface), warns, and builds the equivalent view. Mixing ``view=``
+    with legacy keywords is an error — two sources of truth."""
+    legacy = {k: kw.pop(k) for k in LEGACY_KEYS if k in kw}
+    if not legacy:
+        return view
+    if view is not None:
+        raise AttnKwargError(
+            f"{caller}: pass either view=CacheView(...) or the deprecated "
+            f"keywords {sorted(legacy)}, not both")
+    warnings.warn(
+        f"repro.models.cache: {caller}({', '.join(sorted(legacy))}) "
+        f"keywords are deprecated; pass view=CacheView(...) instead "
+        f"(one-release shim)",
+        DeprecationWarning, stacklevel=3)
+    return CacheView(
+        mode=legacy.get("mode", "train"),
+        cache_len=legacy.get("cache_len"),
+        block_table=legacy.get("block_table"),
+        write_mask=legacy.get("write_mask"),
+        positions=legacy.get("positions"),
+    )

@@ -26,6 +26,7 @@ from repro.configs.base import (
     RWKVConfig,
 )
 from repro.models import attention, mamba, moe, rwkv
+from repro.models.cache import CacheView, view_from_legacy_kwargs
 from repro.models.common import (
     DEFAULT_COMPUTE_DTYPE,
     get_compute_dtype,
@@ -106,38 +107,37 @@ def block_apply(
     block: Block,
     cfg: ModelConfig,
     *,
-    mode: str,
-    positions: jax.Array,
+    view: CacheView,
     cache: Optional[dict],
-    cache_len: Optional[jax.Array],
     enc_out: Optional[jax.Array] = None,
-    block_table: Optional[jax.Array] = None,
-    write_mask: Optional[jax.Array] = None,
 ):
     """Returns (x, new_cache, aux). Sparse weights are self-describing
     typed nodes, so no sparsity config threads through apply calls.
-    block_table/write_mask switch attention caches to the paged layout
-    (see attention.paged_write); only AttnConfig mixers accept them."""
+    ``view`` carries mode/positions/cache addressing as one typed pytree
+    (internal surfaces take it exclusively — no legacy keywords here);
+    ``view.block_table`` switches attention caches to the paged layout
+    (see attention.paged_write); only AttnConfig mixers use it."""
     mx = block.mixer
+    mode = view.mode
+    positions = view.positions
     aux = jnp.zeros((), jnp.float32)
     h = rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
-    kw = dict(mode=mode, cache=None)
     mixer_cache = None
     if cache is not None:
         mixer_cache = {k: v for k, v in cache.items()
-                       if not k.startswith("cross_")}
-        kw["cache"] = mixer_cache or None
+                       if not k.startswith("cross_")} or None
     if isinstance(mx, AttnConfig):
         y, new_mc = attention.attn_apply(
-            params["mixer"], h, mx, positions=positions,
-            cache_len=cache_len, rope_theta=mx.rope_theta or cfg.rope_theta,
-            chunk=cfg.attn_chunk, block_table=block_table,
-            write_mask=write_mask, **kw,
+            params["mixer"], h, mx, view=view, cache=mixer_cache,
+            rope_theta=mx.rope_theta or cfg.rope_theta,
+            chunk=cfg.attn_chunk,
         )
     elif isinstance(mx, MambaConfig):
-        y, new_mc = mamba.mamba_apply(params["mixer"], h, mx, **kw)
+        y, new_mc = mamba.mamba_apply(params["mixer"], h, mx, mode=mode,
+                                      cache=mixer_cache)
     else:
-        y, new_mc = rwkv.rwkv_apply(params["mixer"], h, mx, **kw)
+        y, new_mc = rwkv.rwkv_apply(params["mixer"], h, mx, mode=mode,
+                                    cache=mixer_cache)
     x = x + y
     new_cache = dict(cache) if cache is not None else None
     if new_cache is not None and new_mc is not None:
@@ -154,7 +154,8 @@ def block_apply(
             kx = kx.reshape(b, -1, mx.kv_heads, mx.head_dim)
             vx = vx.reshape(b, -1, mx.kv_heads, mx.head_dim)
             yc, _ = attention.gqa_apply(
-                params["cross"], hc, amx, mode="train", positions=positions,
+                params["cross"], hc, amx,
+                view=CacheView.train(positions=positions),
                 rope_theta=cfg.rope_theta, chunk=cfg.attn_chunk,
                 cross_kv=(kx, vx),
             )
@@ -164,7 +165,8 @@ def block_apply(
         else:  # decode: static cross KV from cache
             amx = dataclasses.replace(mx, rope=False, causal=False)
             yc, _ = attention.gqa_apply(
-                params["cross"], hc, amx, mode="decode", positions=positions,
+                params["cross"], hc, amx,
+                view=CacheView(mode="decode", positions=positions),
                 rope_theta=cfg.rope_theta, chunk=cfg.attn_chunk,
                 cross_kv=(cache["cross_k"], cache["cross_v"]),
             )
@@ -225,8 +227,7 @@ def group_empty_cache(entry, repeat: int, batch: int, max_seq: int,
 
 
 def group_apply(params, x, entry, repeat: int, cfg: ModelConfig, *,
-                mode, positions, cache, cache_len, enc_out, remat: str,
-                block_table=None, write_mask=None):
+                view: CacheView, cache, enc_out, remat: str):
     blocks = _as_blocks(entry)
 
     def one(p_list, x, c_list):
@@ -234,14 +235,13 @@ def group_apply(params, x, entry, repeat: int, cfg: ModelConfig, *,
         new_cs = []
         for p, b, c in zip(p_list, blocks,
                            c_list if c_list is not None else [None] * len(blocks)):
-            x, nc, a = block_apply(p, x, b, cfg, mode=mode, positions=positions,
-                                   cache=c, cache_len=cache_len, enc_out=enc_out,
-                                   block_table=block_table, write_mask=write_mask)
+            x, nc, a = block_apply(p, x, b, cfg, view=view, cache=c,
+                                   enc_out=enc_out)
             new_cs.append(nc)
             aux = aux + a
         return x, new_cs, aux
 
-    if remat != "none" and mode == "train":
+    if remat != "none" and view.mode == "train":
         policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
                   if remat == "dots" else None)
         one = jax.checkpoint(one, policy=policy)
@@ -324,9 +324,9 @@ class LM:
         x = x + params["enc_pos"][:s].astype(x.dtype)
         positions = jnp.arange(s)
         for gp, (blk, rep) in zip(params["enc_groups"], cfg.encoder_plan):
-            x, _, _ = group_apply(gp, x, blk, rep, cfg, mode="train",
-                                  positions=positions, cache=None,
-                                  cache_len=None, enc_out=None, remat=remat)
+            x, _, _ = group_apply(gp, x, blk, rep, cfg,
+                                  view=CacheView.train(positions=positions),
+                                  cache=None, enc_out=None, remat=remat)
         return rmsnorm_apply(params["enc_final_norm"], x, cfg.norm_eps)
 
     # ---- forward ---------------------------------------------------------
@@ -335,15 +335,26 @@ class LM:
         params: dict,
         tokens: jax.Array,  # (B, S)
         *,
-        mode: str = "train",
+        view: Optional[CacheView] = None,
         caches: Optional[list] = None,
-        cache_len: Optional[jax.Array] = None,
         enc_input: Optional[jax.Array] = None,
         remat: str = "none",
-        block_table: Optional[jax.Array] = None,
-        write_mask: Optional[jax.Array] = None,
+        **kw,
     ):
+        """``view`` (:class:`repro.models.cache.CacheView`) is the typed
+        cache-addressing struct; None means train. The legacy keywords
+        (mode/cache_len/block_table/write_mask) still work for one
+        release via the deprecation shim. ``view.positions`` is derived
+        here from ``cache_len`` when not already set."""
+        view = view_from_legacy_kwargs(view, kw, caller="LM.forward")
+        if kw:
+            raise TypeError(
+                f"LM.forward got unknown keyword(s) {sorted(kw)}")
+        if view is None:
+            view = CacheView.train()
         cfg = self.cfg
+        mode = view.mode
+        cache_len = view.cache_len
         b, s = tokens.shape
         enc_out = None
         if cfg.encoder_plan is not None and mode in ("train", "prefill"):
@@ -354,7 +365,7 @@ class LM:
         # partially-filled cache: positions/cache writes offset by cache_len
         # exactly like decode, but s > 1 tokens at a time (causal masking
         # within the chunk happens in the attention mixers)
-        offset_mode = mode in ("decode", "chunk")
+        offset_mode = view.offset_mode
         vec_len = (offset_mode and cache_len is not None
                    and getattr(cache_len, "ndim", 0) == 1)
         if cfg.pos_embed == "learned":
@@ -367,13 +378,16 @@ class LM:
             else:
                 x = x + jax.lax.dynamic_slice(
                     pos_table, (cache_len, 0), (s, cfg.d_model))
-        if offset_mode:
+        if view.positions is not None:
+            positions = view.positions
+        elif offset_mode:
             if vec_len:
                 positions = cache_len[:, None] + jnp.arange(s)[None, :]
             else:
                 positions = jnp.arange(s) + cache_len
         else:
             positions = jnp.arange(s)
+        view = view.with_positions(positions)
         x = shard_hint(x, ("pod", "data"), None, None)
 
         aux_total = jnp.zeros((), jnp.float32)
@@ -381,9 +395,8 @@ class LM:
         for i, (gp, (blk, rep)) in enumerate(zip(params["groups"], cfg.plan)):
             c = caches[i] if caches is not None else None
             x, new_c, aux = group_apply(
-                gp, x, blk, rep, cfg, mode=mode, positions=positions,
-                cache=c, cache_len=cache_len, enc_out=enc_out, remat=remat,
-                block_table=block_table, write_mask=write_mask)
+                gp, x, blk, rep, cfg, view=view, cache=c, enc_out=enc_out,
+                remat=remat)
             new_caches.append(new_c)
             aux_total = aux_total + aux
 
@@ -403,7 +416,7 @@ class LM:
         """batch: tokens (B,S) int32, labels (B,S) int32 (-100 = pad),
         optional enc_input for enc-dec models."""
         logits, _, aux = self.forward(
-            params, batch["tokens"], mode="train",
+            params, batch["tokens"], view=CacheView.train(),
             enc_input=batch.get("enc_input"), remat=remat)
         labels = batch["labels"]
         mask = (labels >= 0).astype(jnp.float32)

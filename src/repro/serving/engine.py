@@ -37,6 +37,7 @@ import numpy as np
 
 from repro import obs as _obs
 from repro.configs.base import AttnConfig
+from repro.models.cache import CacheView
 from repro.models.transformer import LM
 from repro.serving.paging import PageManager
 from repro.serving.sampling import make_sampler
@@ -90,13 +91,13 @@ def make_serve_steps(lm: LM, *, jit: bool = True):
 
     def prefill_step(params, tokens, caches, enc_input=None):
         logits, caches, _ = lm.forward(
-            params, tokens, mode="prefill", caches=caches,
-            cache_len=jnp.int32(0), enc_input=enc_input)
+            params, tokens, view=CacheView.prefill(), caches=caches,
+            enc_input=enc_input)
         return logits[:, -1], caches
 
     def decode_step(params, token, caches, cache_len):
         logits, caches, _ = lm.forward(
-            params, token, mode="decode", caches=caches, cache_len=cache_len)
+            params, token, view=CacheView.decode(cache_len), caches=caches)
         return logits[:, 0], caches
 
     if jit:
@@ -224,16 +225,18 @@ class ServeEngine:
             def prefill_step(params, tokens, caches, cache_len, table,
                              mask, key):
                 logits, new_caches, _ = lm.forward(
-                    params, tokens, mode="chunk", caches=caches,
-                    cache_len=cache_len, block_table=table, write_mask=mask)
+                    params, tokens, caches=caches,
+                    view=CacheView.chunk(cache_len, block_table=table,
+                                         write_mask=mask))
                 toks, key = sampler(logits[:, -1], key)
                 return toks, new_caches, key
 
             def decode_step(params, token, caches, cache_len, table,
                             mask, key):
                 logits, new_caches, _ = lm.forward(
-                    params, token, mode="decode", caches=caches,
-                    cache_len=cache_len, block_table=table, write_mask=mask)
+                    params, token, caches=caches,
+                    view=CacheView.decode(cache_len, block_table=table,
+                                          write_mask=mask))
                 toks, key = sampler(logits[:, 0], key)
                 return toks, new_caches, key
 
@@ -244,20 +247,19 @@ class ServeEngine:
         def prefill_step(params, tokens, caches, cache_len, mask, key):
             if full:
                 logits, new_caches, _ = lm.forward(
-                    params, tokens, mode="prefill", caches=caches,
-                    cache_len=jnp.int32(0))
+                    params, tokens, view=CacheView.prefill(), caches=caches)
             else:
                 logits, new_caches, _ = lm.forward(
-                    params, tokens, mode="chunk", caches=caches,
-                    cache_len=cache_len)
+                    params, tokens, view=CacheView.chunk(cache_len),
+                    caches=caches)
             new_caches = merge_cache_slots(new_caches, caches, mask)
             toks, key = sampler(logits[:, -1], key)
             return toks, new_caches, key
 
         def decode_step(params, token, caches, cache_len, mask, key):
             logits, new_caches, _ = lm.forward(
-                params, token, mode="decode", caches=caches,
-                cache_len=cache_len)
+                params, token, view=CacheView.decode(cache_len),
+                caches=caches)
             new_caches = merge_cache_slots(new_caches, caches, mask)
             toks, key = sampler(logits[:, 0], key)
             return toks, new_caches, key
@@ -452,6 +454,26 @@ class ServeEngine:
                     autotune.ensure_tuned(m_rows, n, k, nm, dtype=dt,
                                           backend=be)
 
+        # block-sparse attention masks pre-pay the bs_attn tile sweep at
+        # the full-prefill shape (the only serving shape that routes the
+        # bs_attention prefill family; decode/chunk use the mask-aware
+        # dense path, which has no tile to tune)
+        from repro.kernels.blocksparse_attn.ops import tune_for_serving
+
+        attn_shapes: set = set()
+        for entry, _rep in self.lm.cfg.plan:
+            blocks = entry if isinstance(entry, tuple) else (entry,)
+            for blk in blocks:
+                mx = blk.mixer
+                if isinstance(mx, AttnConfig) and mx.mask is not None:
+                    dk = (mx.nope_head_dim + mx.rope_head_dim
+                          if mx.kind == "mla" else mx.head_dim)
+                    attn_shapes.add((self.prefill_len, dk, mx.mask))
+        for sq, dk, spec in sorted(
+                attn_shapes, key=lambda t: (t[0], t[1], t[2].tag)):
+            tune_for_serving(sq, sq, dk, spec, dtype=get_compute_dtype(),
+                             backend=resolve_backend("auto"))
+
 
 def _validate_chunkable(cfg) -> None:
     """Chunked prefill needs the mixers' mode="chunk" path (multi-token
@@ -571,9 +593,9 @@ class ShardedServeEngine(ServeEngine):
             def prefill_body(params, tokens, caches, cache_len, table, mask):
                 with hints.tp_serving("model", tags):
                     logits, new_caches, _ = lm_local.forward(
-                        params, tokens, mode="chunk", caches=caches,
-                        cache_len=cache_len, block_table=table,
-                        write_mask=mask)
+                        params, tokens, caches=caches,
+                        view=CacheView.chunk(cache_len, block_table=table,
+                                             write_mask=mask))
                 return logits[:, -1], new_caches
 
             sh_prefill = compat.shard_map(
@@ -584,9 +606,9 @@ class ShardedServeEngine(ServeEngine):
             def decode_body(params, token, caches, cache_len, table, mask):
                 with hints.tp_serving("model", tags):
                     logits, new_caches, _ = lm_local.forward(
-                        params, token, mode="decode", caches=caches,
-                        cache_len=cache_len, block_table=table,
-                        write_mask=mask)
+                        params, token, caches=caches,
+                        view=CacheView.decode(cache_len, block_table=table,
+                                              write_mask=mask))
                 return logits[:, 0], new_caches
 
             sh_decode = compat.shard_map(
@@ -616,12 +638,12 @@ class ShardedServeEngine(ServeEngine):
             with hints.tp_serving("model", tags):
                 if full:
                     logits, new_caches, _ = lm_local.forward(
-                        params, tokens, mode="prefill", caches=caches,
-                        cache_len=jnp.int32(0))
+                        params, tokens, view=CacheView.prefill(),
+                        caches=caches)
                 else:
                     logits, new_caches, _ = lm_local.forward(
-                        params, tokens, mode="chunk", caches=caches,
-                        cache_len=cache_len)
+                        params, tokens, view=CacheView.chunk(cache_len),
+                        caches=caches)
             new_caches = merge_cache_slots(new_caches, caches, mask)
             return logits[:, -1], new_caches
 
@@ -633,8 +655,8 @@ class ShardedServeEngine(ServeEngine):
         def decode_body(params, token, caches, cache_len, mask):
             with hints.tp_serving("model", tags):
                 logits, new_caches, _ = lm_local.forward(
-                    params, token, mode="decode", caches=caches,
-                    cache_len=cache_len)
+                    params, token, view=CacheView.decode(cache_len),
+                    caches=caches)
             new_caches = merge_cache_slots(new_caches, caches, mask)
             return logits[:, 0], new_caches
 

@@ -470,6 +470,104 @@ def test_no_raw_call_sites_outside_shim_modules():
         f"indexmac_gather with typed weights")
 
 
+# the legacy attention cache keywords may only be *consumed* in the
+# CacheView shim module
+_CACHE_SHIM = SRC / "models" / "cache.py"
+_ATTN_SURFACES = {"attn_apply", "gqa_apply", "mla_apply", "forward"}
+_LEGACY_ATTN_KW = {"mode", "positions", "cache_len", "block_table",
+                   "write_mask"}
+
+
+def test_no_legacy_attention_kwargs_outside_shim():
+    """API freeze for the CacheView redesign: no in-repo call site of the
+    attention apply surfaces (attn_apply/gqa_apply/mla_apply/LM.forward)
+    may pass the legacy addressing keywords — they must build a
+    CacheView. External callers keep working through the one-release
+    shim in repro.models.cache; first-party code does not get to."""
+    roots = [SRC, SRC.parents[1] / "benchmarks", SRC.parents[1] / "examples"]
+    offenders = []
+    for root in roots:
+        for py in sorted(root.rglob("*.py")):
+            if py == _CACHE_SHIM:
+                continue
+            tree = ast.parse(py.read_text())
+            for node in ast.walk(tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = node.func
+                name = (fn.attr if isinstance(fn, ast.Attribute)
+                        else fn.id if isinstance(fn, ast.Name) else None)
+                if name not in _ATTN_SURFACES:
+                    continue
+                bad = sorted(kw.arg for kw in node.keywords
+                             if kw.arg in _LEGACY_ATTN_KW)
+                if bad:
+                    offenders.append(
+                        (str(py.relative_to(root.parent)), node.lineno,
+                         name, bad))
+    assert not offenders, (
+        f"legacy attention cache keywords used outside the shim: "
+        f"{offenders}; pass view=CacheView(...) instead")
+
+
+def test_legacy_attention_kwargs_warn_and_still_compute():
+    """The one-release shim: legacy keywords produce the same result as
+    the CacheView call and warn with the repro.models.cache prefix
+    (promoted to an error for first-party code via filterwarnings)."""
+    from repro.configs.base import AttnConfig
+    from repro.models import attention
+    from repro.models.cache import CacheView
+
+    cfg = AttnConfig(q_heads=2, kv_heads=2, head_dim=8)
+    key = jax.random.PRNGKey(0)
+    params = attention.gqa_init(key, 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 16))
+    y_view, _ = attention.gqa_apply(
+        params, x, cfg, view=CacheView.train(positions=jnp.arange(4)))
+    with pytest.warns(DeprecationWarning, match=r"repro\.models\.cache"):
+        y_legacy, _ = attention.gqa_apply(
+            params, x, cfg, mode="train", positions=jnp.arange(4))
+    np.testing.assert_array_equal(np.asarray(y_view), np.asarray(y_legacy))
+
+
+def test_attention_kwarg_typos_raise_typed_error():
+    """attn_apply's old untyped **kw passthrough silently dropped typos;
+    now unknown keywords raise AttnKwargError, and cross_kv against the
+    mla kind is rejected up front."""
+    from repro.configs.base import AttnConfig
+    from repro.models import attention
+    from repro.models.cache import AttnKwargError, CacheView
+
+    cfg = AttnConfig(q_heads=2, kv_heads=2, head_dim=8)
+    with pytest.raises(AttnKwargError, match="cache_length"):
+        attention.attn_apply({}, None, cfg, cache_length=3)
+    mla = AttnConfig(kind="mla", q_heads=2, kv_lora_rank=8,
+                     rope_head_dim=4, nope_head_dim=8, v_head_dim=8)
+    with pytest.raises(AttnKwargError, match="cross_kv"):
+        attention.attn_apply({}, None, mla, cross_kv=(None, None))
+    with pytest.raises(AttnKwargError, match="not both"):
+        attention.attn_apply({}, None, cfg, view=CacheView.train(),
+                             mode="train")
+
+
+def test_cacheview_constructors_validate():
+    from repro.models.cache import AttnKwargError, CacheView
+
+    with pytest.raises(AttnKwargError, match="cache_len"):
+        CacheView.decode(None)
+    with pytest.raises(AttnKwargError, match="block_table"):
+        CacheView.chunk(jnp.int32(0), block_table=jnp.zeros((1, 1),
+                                                            jnp.int32))
+    with pytest.raises(ValueError, match="mode"):
+        CacheView(mode="warmup")
+    # registered pytree: mode is static aux, arrays are leaves
+    v = CacheView.decode(jnp.int32(3))
+    leaves, treedef = jax.tree.flatten(v)
+    assert len(leaves) == 1
+    v2 = jax.tree.unflatten(treedef, leaves)
+    assert v2.mode == "decode" and int(v2.cache_len) == 3
+
+
 def test_no_sp_threading_in_apply_paths():
     """No *_apply function (or the shared linear entry points) may take a
     sparsity config — weights are self-describing typed nodes."""

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config, get_reduced, runnable_shapes
+from repro.models.cache import CacheView
 from repro.models.transformer import LM, count_params
 
 BATCH, SEQ = 2, 16
@@ -31,7 +32,7 @@ def test_forward_and_train_step(arch):
     params = lm.init(jax.random.PRNGKey(0))
     batch = _batch(cfg, jax.random.PRNGKey(1))
 
-    logits, _, _ = lm.forward(params, batch["tokens"], mode="train",
+    logits, _, _ = lm.forward(params, batch["tokens"],
                               enc_input=batch.get("enc_input"))
     assert logits.shape == (BATCH, SEQ, cfg.vocab_size)
     assert not bool(jnp.isnan(logits).any()), "NaN in logits"
@@ -58,12 +59,12 @@ def test_prefill_decode_step(arch):
     batch = _batch(cfg, jax.random.PRNGKey(1))
     caches = lm.init_cache(BATCH, 2 * SEQ)
     logits, caches, _ = lm.forward(
-        params, batch["tokens"], mode="prefill", caches=caches,
-        cache_len=jnp.int32(0), enc_input=batch.get("enc_input"))
+        params, batch["tokens"], view=CacheView.prefill(), caches=caches,
+        enc_input=batch.get("enc_input"))
     assert not bool(jnp.isnan(logits).any())
     nxt = jnp.argmax(logits[:, -1:], axis=-1)
     logits_d, caches, _ = lm.forward(
-        params, nxt, mode="decode", caches=caches, cache_len=jnp.int32(SEQ))
+        params, nxt, view=CacheView.decode(jnp.int32(SEQ)), caches=caches)
     assert logits_d.shape == (BATCH, 1, cfg.vocab_size)
     assert not bool(jnp.isnan(logits_d).any())
 
@@ -78,7 +79,7 @@ def test_sparse_and_dense_variants_init(arch):
         tokens = jnp.zeros((1, 8), jnp.int32)
         enc = (jnp.zeros((1, cfg.encoder_seq, cfg.d_model))
                if cfg.encoder_plan is not None else None)
-        logits, _, _ = lm.forward(params, tokens, mode="train", enc_input=enc)
+        logits, _, _ = lm.forward(params, tokens, enc_input=enc)
         assert not bool(jnp.isnan(logits).any())
 
 

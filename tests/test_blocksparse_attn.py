@@ -1,0 +1,407 @@
+"""Block-sparse attention: mask-pattern parity vs the dense oracle,
+dispatch routing + budget behavior, explain/exec no-drift, and the
+typed ``api.attention`` surface.
+
+Every pattern's sparse lowering (on CPU hosts: ``xla_bs_attention``,
+the block-gather XLA path) is compared against ``masked_reference`` —
+dense attention with the same token predicate through ``jnp.where``.
+The predicate itself (``token_mask``) is shared between the two, so
+parity here proves the *block plan* (tiling, pair lists, gather rows),
+not the mask semantics alone.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs import get_reduced
+from repro.configs.base import AttnConfig
+from repro.kernels import registry
+from repro.kernels.blocksparse_attn.mask import (
+    MaskSpec,
+    compile_mask,
+    token_mask,
+)
+from repro.kernels.blocksparse_attn.ops import (
+    MaskForceError,
+    bs_attention,
+    bs_attention_decode,
+)
+from repro.kernels.blocksparse_attn.ref import masked_reference
+from repro.models import common
+from repro.models.cache import CacheView
+from repro.models.transformer import LM
+
+# diagonal + first block column: every q row keeps its causal diagonal
+# token, so the pattern compiles at any length
+_BW_PAIRS = tuple((i, j) for i in range(8) for j in (0, i))
+
+SPECS = [
+    MaskSpec("causal", block=16),
+    MaskSpec("local", block=16, window=24),
+    MaskSpec("local", block=16, window=24, causal=False),
+    MaskSpec("strided", block=16, stride=2),
+    MaskSpec("blockwise", block=16, blocks=_BW_PAIRS),
+]
+
+
+def _qkv(key, b=2, sq=64, skv=None, hq=4, hkv=2, dk=16, dv=None,
+         dtype=jnp.float32):
+    skv = sq if skv is None else skv
+    dv = dk if dv is None else dv
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, sq, hq, dk), dtype)
+    k = jax.random.normal(kk, (b, skv, hkv, dk), dtype)
+    v = jax.random.normal(kv, (b, skv, hkv, dv), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# pattern parity vs the dense masked oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sq", [64, 67], ids=["even", "odd"])
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.tag)
+def test_pattern_parity_vs_masked_reference(spec, sq):
+    q, k, v = _qkv(jax.random.PRNGKey(0), sq=sq)
+    out = bs_attention(q, k, v, spec=spec, tile=(16, 16))
+    ref = masked_reference(q, k, v, spec=spec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=2e-5)
+
+
+def test_parity_bf16_and_output_dtype():
+    spec = MaskSpec("local", block=16, window=24)
+    q, k, v = _qkv(jax.random.PRNGKey(1), sq=64, dtype=jnp.bfloat16)
+    out = bs_attention(q, k, v, spec=spec, tile=(16, 16))
+    assert out.dtype == jnp.bfloat16
+    ref = masked_reference(q, k, v, spec=spec)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=2e-2)
+
+
+def test_parity_mla_value_dim_and_scale():
+    """MLA-shaped call: Hq == Hkv, Dv != Dk, explicit scale (the
+    nope+rope split scale mla_apply passes)."""
+    spec = MaskSpec("strided", block=16, stride=2)
+    q, k, v = _qkv(jax.random.PRNGKey(2), sq=48, hq=4, hkv=4, dk=24, dv=40)
+    out = bs_attention(q, k, v, spec=spec, scale=0.17, tile=(16, 16))
+    ref = masked_reference(q, k, v, spec=spec, scale=0.17)
+    assert out.shape == (2, 48, 4, 40)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=2e-5)
+
+
+def test_chunked_decode_equals_full_prefill():
+    """Running the same queries through the decode family chunk by
+    chunk (absolute q_positions against the full k/v) reproduces the
+    full prefill rows exactly — the invariant serving's chunked prefill
+    relies on."""
+    spec = MaskSpec("local", block=16, window=24)
+    q, k, v = _qkv(jax.random.PRNGKey(3), sq=96)
+    full = bs_attention(q, k, v, spec=spec, tile=(16, 16))
+    for c0, c1 in ((0, 32), (32, 64), (64, 96)):
+        out = bs_attention_decode(
+            q[:, c0:c1], k, v, spec=spec, length=c1,
+            q_positions=jnp.arange(c0, c1))
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(full[:, c0:c1]),
+                                   rtol=1e-5, atol=2e-5)
+
+
+def test_decode_never_reads_past_length():
+    """Single-step decode against an overlong cache view: garbage
+    beyond ``length`` must not leak into the output."""
+    spec = MaskSpec("local", block=16, window=24)
+    q, k, v = _qkv(jax.random.PRNGKey(4), sq=96)
+    L = 80
+    full = bs_attention(q[:, :L], k[:, :L], v[:, :L], spec=spec,
+                        tile=(16, 16))
+    kg = k.at[:, L:].set(1e3)
+    vg = v.at[:, L:].set(-1e3)
+    out = bs_attention_decode(q[:, L - 1:L], kg, vg, spec=spec, length=L)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(full[:, L - 1:L]),
+                               rtol=1e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# dispatch routing, budgets, typed errors
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_routes_sparse_and_declines_on_budgets(monkeypatch):
+    q, k, v = _qkv(jax.random.PRNGKey(5), sq=128)
+    registry.clear_history()
+    bs_attention(q, k, v, spec=MaskSpec("local", block=16, window=24),
+                 tile=(16, 16))
+    rec = registry.last_dispatch("bs_attention")
+    # CPU host: the TPU pair-list kernel declines (would interpret),
+    # the XLA block-gather lowering wins
+    assert rec.impl == "xla_bs_attention", rec
+    # near-dense: a single-block causal grid is density 1.0 > 0.9
+    qs, ks, vs = _qkv(jax.random.PRNGKey(6), sq=32)
+    bs_attention(qs, ks, vs, spec=MaskSpec("causal", block=32),
+                 tile=(32, 32))
+    assert registry.last_dispatch("bs_attention").impl == "masked_reference"
+    # wasteful: window 4 inside 16-token tiles -> live blocks are mostly
+    # masked lanes (waste ~7.6x > 4.0) -> dense fallback ...
+    wspec = MaskSpec("local", block=16, window=4)
+    bs_attention(q, k, v, spec=wspec, tile=(16, 16))
+    assert registry.last_dispatch("bs_attention").impl == "masked_reference"
+    # ... and raising the budget re-admits the sparse lowering
+    monkeypatch.setenv("REPRO_BS_WASTE_LIMIT", "32")
+    bs_attention(q, k, v, spec=wspec, tile=(16, 16))
+    assert registry.last_dispatch("bs_attention").impl == "xla_bs_attention"
+
+
+def test_tpu_pairlist_kernel_parity_interpret():
+    """KernelPolicy("force") on the tpu backend runs the pair-list
+    scalar-prefetch Pallas kernel (interpret mode on this host — the
+    same body Mosaic compiles on a real TPU) — parity vs the oracle."""
+    spec = MaskSpec("local", block=16, window=24)
+    q, k, v = _qkv(jax.random.PRNGKey(13), sq=64)
+    registry.clear_history()
+    out = bs_attention(q, k, v, spec=spec, policy="force", backend="tpu",
+                       tile=(16, 16))
+    rec = registry.last_dispatch("bs_attention")
+    assert rec.impl == "pallas_bs_attention", rec
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(masked_reference(q, k, v, spec=spec)),
+        rtol=1e-5, atol=2e-5)
+
+
+def test_policy_off_and_untileable_fall_back_dense():
+    q, k, v = _qkv(jax.random.PRNGKey(7), sq=64)
+    spec = MaskSpec("local", block=16, window=24)
+    registry.clear_history()
+    bs_attention(q, k, v, spec=spec, policy="off")
+    assert registry.last_dispatch("bs_attention").impl == "masked_reference"
+    # misaligned tile: the mask does not compile; auto mode serves the
+    # dense path instead of erroring
+    bs_attention(q, k, v, spec=spec, tile=(12, 12))
+    assert registry.last_dispatch("bs_attention").impl == "masked_reference"
+
+
+def test_force_untileable_raises_maskforceerror():
+    q, k, v = _qkv(jax.random.PRNGKey(8), sq=64)
+    spec = MaskSpec("local", block=16, window=24)
+    with pytest.raises(MaskForceError):
+        bs_attention(q, k, v, spec=spec, policy="force", tile=(12, 12))
+    # a non-causal blockwise pattern that leaves query rows with zero
+    # visible tokens never compiles (softmax undefined)
+    empty_rows = MaskSpec("blockwise", block=16, blocks=((0, 0),),
+                          causal=False)
+    with pytest.raises(MaskForceError):
+        bs_attention(q, k, v, spec=empty_rows, policy="force",
+                     tile=(16, 16))
+    # the dry-run shares the route, so it raises the same typed error
+    with pytest.raises(api.MaskForceError):
+        api.explain_dispatch_attention(
+            (2, 64, 4, 16), (2, 64, 2, 16), mask=empty_rows,
+            policy="force", tile=(16, 16))
+
+
+@pytest.mark.parametrize("spec,sq", [
+    (MaskSpec("local", block=16, window=24), 64),
+    (MaskSpec("causal", block=32), 32),       # density decline
+    (MaskSpec("strided", block=16, stride=2), 67),
+], ids=["sparse", "dense-decline", "odd-strided"])
+def test_explain_matches_execution(spec, sq):
+    q, k, v = _qkv(jax.random.PRNGKey(9), sq=sq)
+    dry = api.explain_dispatch_attention(q.shape, k.shape, mask=spec,
+                                         tile=(spec.block, spec.block))
+    registry.clear_history()
+    bs_attention(q, k, v, spec=spec, tile=(spec.block, spec.block))
+    wet = registry.last_dispatch("bs_attention")
+    assert (dry.impl, dry.backend) == (wet.impl, wet.backend)
+
+
+def test_explain_decode_family():
+    rec = api.explain_dispatch_attention(
+        (2, 1, 4, 16), (2, 64, 2, 16),
+        mask=MaskSpec("local", block=16, window=24), decode=True)
+    assert rec.op == "bs_attention_decode"
+    assert rec.impl == "masked_decode"
+
+
+def test_shape_validation():
+    q, k, v = _qkv(jax.random.PRNGKey(10), sq=32)
+    spec = MaskSpec("causal", block=16)
+    with pytest.raises(ValueError, match="multiple of"):
+        bs_attention(q[:, :, :3], k, v, spec=spec)  # Hq=3 not mult of 2
+    with pytest.raises(ValueError, match="B, S, H, D"):
+        bs_attention(q[0], k, v, spec=spec)
+    with pytest.raises(TypeError, match="MaskSpec"):
+        bs_attention(q, k, v, spec="causal")
+
+
+# ---------------------------------------------------------------------------
+# MaskSpec + compile_mask invariants
+# ---------------------------------------------------------------------------
+
+
+def test_maskspec_validation_and_tags():
+    with pytest.raises(ValueError, match="kind"):
+        MaskSpec("banded")
+    with pytest.raises(ValueError, match="multiple of 8"):
+        MaskSpec("causal", block=12)
+    with pytest.raises(ValueError, match="window"):
+        MaskSpec("local")
+    with pytest.raises(ValueError, match="local-only"):
+        MaskSpec("causal", window=8)
+    with pytest.raises(ValueError, match="stride"):
+        MaskSpec("strided")
+    with pytest.raises(ValueError, match="blocks"):
+        MaskSpec("blockwise")
+    with pytest.raises(ValueError, match="non-negative"):
+        MaskSpec("blockwise", blocks=((-1, 0),))
+    # tags distinguish every spec under test (they key the autotune cache)
+    tags = {s.tag for s in SPECS}
+    assert len(tags) == len(SPECS)
+    # blockwise pairs normalize: dedup + sort, so equal patterns hash equal
+    a = MaskSpec("blockwise", blocks=((1, 0), (0, 0), (1, 0)))
+    b = MaskSpec("blockwise", blocks=((0, 0), (1, 0)))
+    assert a == b and a.tag == b.tag
+
+
+def test_compile_mask_plan_invariants():
+    spec = MaskSpec("local", block=16, window=24)
+    plan = compile_mask(spec, 67, 67, (16, 16))
+    assert (plan.nqb, plan.nkb) == (5, 5)
+    # pair lists are row-major (q-block monotone) — the TPU kernel's
+    # scratch init/flush depends on it
+    assert (np.diff(plan.pair_q) >= 0).all()
+    assert plan.n_live == plan.pair_q.size == int(plan.bitmap.sum())
+    # the padded token grid is the shared predicate restricted in-bounds
+    qp, kp = np.arange(80), np.arange(80)
+    want = token_mask(spec, qp[:, None], kp[None, :])
+    want = want & (qp[:, None] < 67) & (kp[None, :] < 67)
+    assert (plan.tokens == want).all()
+    assert plan.live_tokens == int(want.sum())
+    assert 0.0 < plan.density <= 1.0 and plan.waste >= 1.0
+    # gather rows cover exactly each q-row's live k-blocks
+    for r in range(plan.nqb):
+        live = set(np.nonzero(plan.bitmap[r])[0].tolist())
+        got = set(plan.row_idx[r][plan.row_valid[r]].tolist())
+        assert got == live, r
+    # untileable shapes/tiles return None (the force-error trigger)
+    assert compile_mask(spec, 0, 64, (16, 16)) is None
+    assert compile_mask(spec, 64, 64, (12, 16)) is None
+
+
+# ---------------------------------------------------------------------------
+# the typed api.attention surface
+# ---------------------------------------------------------------------------
+
+
+def test_api_attention_prefill_and_cache_views():
+    spec = MaskSpec("local", block=16, window=24)
+    q, k, v = _qkv(jax.random.PRNGKey(11), sq=64)
+    out = api.attention(q, k, v, mask=spec, tile=(16, 16))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(masked_reference(q, k, v, spec=spec)),
+        rtol=1e-5, atol=2e-5)
+    # decode view: one query at the cache frontier
+    out_d = api.attention(q[:, -1:], k, v, mask=spec,
+                          cache=CacheView.decode(jnp.int32(63)))
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out[:, -1:]),
+                               rtol=1e-5, atol=2e-5)
+    # chunk view: q_positions derived from the scalar cache offset
+    out_c = api.attention(q[:, 32:], k, v, mask=spec,
+                          cache=CacheView.chunk(jnp.int32(32)))
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out[:, 32:]),
+                               rtol=1e-5, atol=2e-5)
+
+
+def test_api_attention_rejects_bad_cache_args():
+    spec = MaskSpec("causal", block=16)
+    q, k, v = _qkv(jax.random.PRNGKey(12), sq=32)
+    with pytest.raises(TypeError, match="CacheView"):
+        api.attention(q, k, v, mask=spec, cache={"mode": "decode"})
+    with pytest.raises(ValueError, match="cache=None"):
+        api.attention(q, k, v, mask=spec, cache=CacheView.train())
+    with pytest.raises(ValueError, match="cache=None"):
+        api.attention(q, k, v, mask=spec, cache=CacheView.prefill())
+
+
+# ---------------------------------------------------------------------------
+# model-level parity: cfg.mask vs the dense causal/window paths
+# ---------------------------------------------------------------------------
+
+
+def _attn_variant(cfg, **fields):
+    """cfg with every AttnConfig mixer's mask/window fields replaced."""
+    def blk(b):
+        if isinstance(b.mixer, AttnConfig):
+            return dataclasses.replace(
+                b, mixer=dataclasses.replace(b.mixer, **fields))
+        return b
+
+    plan = tuple(
+        ((tuple(blk(x) for x in entry) if isinstance(entry, tuple)
+          else blk(entry)), rep)
+        for entry, rep in cfg.plan)
+    return dataclasses.replace(cfg, plan=plan)
+
+
+@pytest.fixture()
+def f32_compute():
+    common.set_compute_dtype(jnp.float32)
+    yield
+    common.set_compute_dtype(jnp.bfloat16)
+
+
+@pytest.mark.parametrize("arch,dense,masked", [
+    ("yi-9b", dict(mask=None, window=12),
+     dict(mask=MaskSpec("local", block=8, window=12), window=None)),
+    ("deepseek-v2-lite-16b", dict(mask=None, window=None),
+     dict(mask=MaskSpec("causal", block=8), window=None)),
+], ids=["gqa-local", "mla-causal"])
+def test_model_mask_matches_dense_equivalent(arch, dense, masked,
+                                             f32_compute):
+    gqa = arch == "yi-9b"
+    """A MaskSpec encoding the same visibility as the dense causal /
+    sliding-window path produces the same logits through the full model
+    (GQA and MLA mixers), for train, prefill and decode — and the
+    sparse family actually dispatched (no silent dense routing)."""
+    cfg_d = _attn_variant(get_reduced(arch), **dense)
+    cfg_m = _attn_variant(get_reduced(arch), **masked)
+    lm_d, lm_m = LM(cfg_d), LM(cfg_m)
+    params = lm_d.init(jax.random.PRNGKey(0))  # mask changes no params
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg_d.vocab_size)
+    out_d, _, _ = lm_d.forward(params, tokens)
+    registry.clear_history()
+    out_m, _, _ = lm_m.forward(params, tokens)
+    counts = registry.dispatch_counts("bs_attention")
+    assert any(impl == "xla_bs_attention" and n > 0
+               for (_, impl, _), n in counts.items()), counts
+    np.testing.assert_allclose(np.asarray(out_m), np.asarray(out_d),
+                               rtol=2e-4, atol=2e-4)
+
+    # prefill + one decode step: the decode family path
+    def run(lm):
+        caches = lm.init_cache(2, 32)
+        lp, caches, _ = lm.forward(params, tokens,
+                                   view=CacheView.prefill(), caches=caches)
+        nxt = jnp.argmax(lp[:, -1:], -1)
+        ld, _, _ = lm.forward(params, nxt,
+                              view=CacheView.decode(jnp.int32(16)),
+                              caches=caches)
+        return lp, ld
+
+    lp_d, ld_d = run(lm_d)
+    registry.clear_history()
+    lp_m, ld_m = run(lm_m)
+    if gqa:  # MLA's absorbed decode applies the mask inline, no dispatch
+        assert sum(
+            registry.dispatch_counts("bs_attention_decode").values()) > 0
+    np.testing.assert_allclose(np.asarray(lp_m), np.asarray(lp_d),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(ld_m), np.asarray(ld_d),
+                               rtol=2e-4, atol=2e-4)

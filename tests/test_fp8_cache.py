@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_reduced
+from repro.models.cache import CacheView
 from repro.models.transformer import LM
 
 
@@ -21,11 +22,12 @@ def test_fp8_cache_decode_top1_matches_bf16(arch):
     out = {}
     for name, dt in (("bf16", jnp.bfloat16), ("fp8", jnp.float8_e4m3fn)):
         caches = lm.init_cache(2, 32, dtype=dt)
-        lp, caches, _ = lm.forward(params, tokens, mode="prefill",
-                                   caches=caches, cache_len=jnp.int32(0))
+        lp, caches, _ = lm.forward(params, tokens, view=CacheView.prefill(),
+                                   caches=caches)
         nxt = jnp.argmax(lp[:, -1:], -1)
-        ld, _, _ = lm.forward(params, nxt, mode="decode", caches=caches,
-                              cache_len=jnp.int32(16))
+        ld, _, _ = lm.forward(params, nxt,
+                              view=CacheView.decode(jnp.int32(16)),
+                              caches=caches)
         out[name] = np.asarray(ld, np.float32)
     rel = (np.abs(out["bf16"] - out["fp8"]).max()
            / (np.abs(out["bf16"]).max() + 1e-9))

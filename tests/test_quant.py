@@ -13,6 +13,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro import api
 from repro.core.nmweight import KernelPolicy, NMWeight
+from repro.models.cache import CacheView
 from repro.core.sparsity import NMConfig, compress_nm, random_nm_matrix
 from repro.kernels import registry
 from repro.quant import (
@@ -301,11 +302,11 @@ def test_int8_decode_top1_matches_float(sparse_yi):
     out = {}
     for name, p in (("float", params), ("int8", qparams)):
         caches = lm.init_cache(2, 32)
-        lp, caches, _ = lm.forward(p, tokens, mode="prefill",
-                                   caches=caches, cache_len=jnp.int32(0))
+        lp, caches, _ = lm.forward(p, tokens, view=CacheView.prefill(),
+                                   caches=caches)
         nxt = jnp.argmax(lp[:, -1:], -1)
-        ld, _, _ = lm.forward(p, nxt, mode="decode", caches=caches,
-                              cache_len=jnp.int32(16))
+        ld, _, _ = lm.forward(p, nxt, view=CacheView.decode(jnp.int32(16)),
+                              caches=caches)
         out[name] = np.asarray(ld, np.float32)
     rel = (np.abs(out["float"] - out["int8"]).max()
            / (np.abs(out["float"]).max() + 1e-9))

@@ -63,7 +63,7 @@ def test_decode_matches_prefill_extension(yi):
     seq = list(p)
     ref = []
     for _ in range(4):
-        logits, _, _ = lm.forward(params, jnp.asarray([seq]), mode="train")
+        logits, _, _ = lm.forward(params, jnp.asarray([seq]))
         nxt = int(jnp.argmax(logits[0, -1]))
         ref.append(nxt)
         seq.append(nxt)
@@ -125,8 +125,7 @@ def test_batched_admit_matches_full_forward_reference(yi):
         seq = [0] * (8 - len(tail)) + tail
         ref = []
         for _ in range(4):
-            logits, _, _ = lm.forward(params, jnp.asarray([seq]),
-                                      mode="train")
+            logits, _, _ = lm.forward(params, jnp.asarray([seq]))
             nxt = int(jnp.argmax(logits[0, -1]))
             ref.append(nxt)
             seq.append(nxt)
@@ -341,3 +340,97 @@ def test_autotune_warmup_uses_each_weights_own_ratio(yi, monkeypatch):
     assert set(asked) == want
     # every 1:4 weight was tuned at K = 4 * Kc, not the 2:4 ratio's 2 * Kc
     assert any(tag == "1:4" for *_, tag in asked)
+
+
+# ---------------------------------------------------------------------------
+# block-sparse masked serving: token parity, dispatch proof, recompiles
+# ---------------------------------------------------------------------------
+
+
+def _mask_variant(cfg, **fields):
+    """cfg with every AttnConfig mixer's mask/window fields replaced."""
+    import dataclasses
+
+    from repro.configs.base import AttnConfig
+
+    def blk(b):
+        if isinstance(b.mixer, AttnConfig):
+            return dataclasses.replace(
+                b, mixer=dataclasses.replace(b.mixer, **fields))
+        return b
+
+    plan = tuple(
+        ((tuple(blk(x) for x in e) if isinstance(e, tuple) else blk(e)), r)
+        for e, r in cfg.plan)
+    return dataclasses.replace(cfg, plan=plan)
+
+
+def _serve_prompts(lm, params, prompts, **kw):
+    eng = ServeEngine(lm, params, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new=3 + i))
+    return {r.rid: tuple(r.out) for r in eng.run()}, eng
+
+
+def test_blocksparse_serving_token_parity_and_dispatch(yi):
+    """A model carrying a local MaskSpec serves token-identically to the
+    dense model carrying the equivalent sliding window (slot engine,
+    full prefill — the shape that routes the bs_attention prefill
+    family), with zero steady-state recompiles and trace-level proof the
+    sparse lowering ran: the prefill family dispatched
+    xla_bs_attention and never the dense masked_reference fallback."""
+    from repro.kernels import registry
+    from repro.kernels.blocksparse_attn.mask import MaskSpec
+
+    cfg, _, params = yi  # mask/window change no param shapes
+    lm_dense = LM(_mask_variant(cfg, mask=None, window=12))
+    lm_mask = LM(_mask_variant(
+        cfg, mask=MaskSpec("local", block=8, window=12), window=None))
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, cfg.vocab_size, size=32).astype(np.int32)
+               for _ in range(4)]
+    kw = dict(slots=2, max_seq=64, prefill_len=32)
+
+    dense, _ = _serve_prompts(lm_dense, params, prompts, **kw)
+    registry.clear_history()
+    masked, em = _serve_prompts(lm_mask, params, prompts, **kw)
+    assert masked == dense
+    counts = registry.dispatch_counts("bs_attention")
+    assert any(op == "bs_attention" and impl == "xla_bs_attention" and n
+               for (op, impl, _), n in counts.items()), counts
+    assert not any(op == "bs_attention" and impl == "masked_reference" and n
+                   for (op, impl, _), n in counts.items()), counts
+    assert sum(registry.dispatch_counts("bs_attention_decode").values()) > 0
+    warm = em.compiled_cache_sizes()
+    if warm["prefill"] >= 0:
+        assert warm == {"prefill": 1, "decode": 1}
+    # chunked prefill routes the decode family instead (mode="chunk");
+    # tokens must not change
+    chunked, _ = _serve_prompts(lm_mask, params, prompts,
+                                prefill_chunk=16, **kw)
+    assert chunked == dense
+
+
+def test_blocksparse_paged_serving_matches_slot(yi):
+    """The paged engine serves a masked model token-identically to the
+    slot engine (block-table gather feeding the mask-aware decode
+    path), still with zero steady-state recompiles."""
+    from repro.kernels import registry
+    from repro.kernels.blocksparse_attn.mask import MaskSpec
+
+    cfg, _, params = yi
+    lm_mask = LM(_mask_variant(
+        cfg, mask=MaskSpec("local", block=8, window=12), window=None))
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(1, cfg.vocab_size, size=32).astype(np.int32)
+               for _ in range(4)]
+    kw = dict(slots=2, max_seq=64, prefill_len=32, prefill_chunk=16)
+    slot_out, _ = _serve_prompts(lm_mask, params, prompts, **kw)
+    registry.clear_history()
+    paged_out, ep = _serve_prompts(lm_mask, params, prompts, paged=True,
+                                   **kw)
+    assert paged_out == slot_out
+    assert sum(registry.dispatch_counts("bs_attention_decode").values()) > 0
+    cs = ep.compiled_cache_sizes()
+    assert cs in ({"prefill": 1, "decode": 1},
+                  {"prefill": -1, "decode": -1}), cs

@@ -88,6 +88,25 @@ assert counts and sum(counts.values()) > 0, counts
 bad = {k: v for k, v in counts.items() if not k[1].startswith("pallas")}
 assert not bad, bad
 print(f"KERNELDECODE ok {sum(int(v) for v in counts.values())}")
+# block-sparse masked model: the sharded engine must serve a
+# mask-bearing config token-identically to the single-device engine —
+# the mask-aware decode family runs inside the shard_map'd steps on
+# every shard (chunked prefill included) — with zero recompiles
+from repro.configs.base import AttnConfig
+from repro.kernels.blocksparse_attn.mask import MaskSpec
+def _mask_blk(b):
+    if not isinstance(b.mixer, AttnConfig):
+        return b
+    return dataclasses.replace(b, mixer=dataclasses.replace(
+        b.mixer, mask=MaskSpec("local", block=8, window=12), window=None))
+mcfg = dataclasses.replace(cfg, plan=tuple(
+    ((tuple(_mask_blk(x) for x in e) if isinstance(e, tuple)
+      else _mask_blk(e)), r) for e, r in cfg.plan))
+registry.clear_history()
+check(mcfg, tag="blocksparse", chunk=4)
+bs = registry.dispatch_counts("bs_attention_decode")
+assert bs and sum(bs.values()) > 0, bs
+print(f"BSDECODE ok {sum(int(v) for v in bs.values())}")
 # paged: the sharded PAGED engine (block-table gather, one page sub-pool
 # per data shard, head-sharded pool pages via the unchanged cache specs)
 # against the single-device SLOT engine — cross-engine AND cross-layout
@@ -157,7 +176,7 @@ def test_sharded_engine_token_parity(subproc):
     variants = [l.split()[1] for l in subproc.splitlines()
                 if l.startswith("OKVARIANT")]
     assert variants == ["float24", "float24-chunked", "int8", "mixednm",
-                        "kvsharded", "kernel24", "paged"]
+                        "kvsharded", "kernel24", "blocksparse", "paged"]
     assert "RESULT ok" in subproc
 
 
@@ -167,6 +186,13 @@ def test_kernel_variant_decodes_on_pallas(subproc):
     through the per-family dispatch counters; the marker line carries
     the dispatch count)."""
     assert "KERNELDECODE ok" in subproc
+
+
+def test_blocksparse_variant_routes_decode_family(subproc):
+    """The mask-bearing variant's sharded serve must have routed its
+    attention through the bs_attention_decode family (mask-aware decode
+    path) — asserted in-subprocess via the dispatch counters."""
+    assert "BSDECODE ok" in subproc
 
 
 def test_obs_on_sharded_parity_and_zero_recompiles(subproc):
